@@ -1,0 +1,99 @@
+"""Micro-benchmarks of the Pallas kernel wrappers (interpret mode on
+CPU — relative timings only; the jnp fallback is the CPU production
+path) and the jnp blockwise implementations they target.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.kernels import ref
+from repro.models.attention import blockwise_attention
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_attention():
+    rng = np.random.default_rng(0)
+    B, S, H, Kv, D = 1, 1024, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Kv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Kv, D)), jnp.float32)
+    blockwise = jax.jit(lambda q, k, v: blockwise_attention(q, k, v, causal=True, block_kv=256))
+    naive = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    t_block = _time(blockwise, q, k, v)
+    t_naive = _time(naive, q, k, v)
+    print(csv_row("attention_blockwise_1k", t_block, f"naive_us={t_naive:.1f}"))
+    return t_block, t_naive
+
+
+def bench_rnnt_joint():
+    """The paper-model hot-spot: fused (chunked) vs naive materialized joint."""
+    rng = np.random.default_rng(1)
+    B, T, U1, J, V = 4, 128, 24, 64, 512
+    e = jnp.asarray(rng.normal(size=(B, T, J)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(B, U1, J)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(J, V)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(V,)) * 0.1, jnp.float32)
+    lbl = jnp.asarray(rng.integers(0, V, (B, U1)), jnp.int32)
+
+    from repro.kernels.ops import _joint_ref_chunked
+
+    chunked = jax.jit(lambda *a: _joint_ref_chunked(*a))
+    naive = jax.jit(lambda e, g, w, b, l: ref.rnnt_joint_ref(e, g, w, b, l))
+    t_c = _time(chunked, e, g, w, b, lbl)
+    t_n = _time(naive, e, g, w, b, lbl)
+    # memory derived: naive materializes B*T*U1*V f32
+    naive_bytes = B * T * U1 * V * 4
+    chunk_bytes = B * T * 8 * V * 4
+    print(csv_row("rnnt_joint_chunked", t_c,
+                  f"naive_us={t_n:.1f};mem_ratio={naive_bytes/chunk_bytes:.0f}x"))
+    return t_c, t_n
+
+
+def bench_fed_round():
+    """Wall time of one jitted federated round at bench scale."""
+    from repro.core import FederatedPlan, init_server_state, make_round_step
+    from repro.launch.train import tiny_asr_setup
+    from repro.data import FederatedSampler
+    from repro.models import build_model
+
+    cfg, corpus = tiny_asr_setup(0)
+    bundle = build_model(cfg)
+    plan = FederatedPlan(clients_per_round=8, local_batch_size=4, client_lr=0.3)
+    state = init_server_state(plan, bundle.init(jax.random.PRNGKey(0)))
+    step = jax.jit(make_round_step(bundle.loss_fn, plan, jax.random.PRNGKey(1)))
+    s = FederatedSampler(corpus, 8, 4, seed=0)
+    rb = s.next_round()
+    batch = {"features": jnp.asarray(rb.features), "labels": jnp.asarray(rb.labels),
+             "frame_len": jnp.asarray(rb.frame_len), "label_len": jnp.asarray(rb.label_len),
+             "weight": jnp.asarray(rb.mask)}
+    state, _ = step(state, batch)          # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        state, m = step(state, batch)
+    jax.block_until_ready(m["loss"])
+    us = (time.perf_counter() - t0) / 3 * 1e6
+    print(csv_row("fed_round_tiny_rnnt", us, f"clients=8"))
+    return us
+
+
+def main():
+    bench_attention()
+    bench_rnnt_joint()
+    bench_fed_round()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark harness entry point — one function per paper table.
+
+``PYTHONPATH=src python -m benchmarks.run [--rounds N] [--tables t1,t3]``
+
+Prints (a) name,us_per_call,derived CSV lines for the micro-benches and
+(b) the paper's Tables 1-5 + Fig. 3 reproduced on the synthetic
+speaker-split corpus with PASS/FAIL on each qualitative claim.
+Set REPRO_BENCH_ROUNDS to control the round budget (default 150).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", default="all",
+                    help="comma list: t1,t2,t3,t4,t5,fig3,kernels or all")
+    ap.add_argument("--out", default="results/bench_summary.json")
+    args = ap.parse_args()
+
+    from benchmarks import kernels_bench, tables
+
+    want = args.tables.split(",") if args.tables != "all" else \
+        ["kernels", "t1", "t2", "t3", "t4", "t5", "fig3"]
+    t0 = time.time()
+    summary = {}
+    if "kernels" in want:
+        print("== kernel micro-benches (name,us_per_call,derived) ==")
+        kernels_bench.main()
+    fns = {"t1": tables.table1_noniid_gap, "t2": tables.table2_data_limiting,
+           "t3": tables.table3_fvn, "t4": tables.table4_fvn_no_limit,
+           "t5": tables.table5_cost, "fig3": tables.fig3_quality_cost}
+    passes = []
+    for k, fn in fns.items():
+        if k in want:
+            res = fn()
+            summary[k] = {kk: vv for kk, vv in res.items() if kk == "pass"}
+            passes.append(res["pass"])
+    print(f"\n== summary: {sum(bool(p) for p in passes)}/{len(passes)} "
+          f"qualitative claims reproduced; wall={time.time()-t0:.0f}s ==")
+    import os
+    os.makedirs("results", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(summary, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""ASR substrate: SpecAugment, transducer (RNN-T) loss, greedy decode, WER."""
+from repro.asr.specaugment import SpecAugmentConfig, spec_augment
+from repro.asr.rnnt_loss import rnnt_loss, rnnt_loss_from_logprobs
+from repro.asr.wer import wer, levenshtein, greedy_decode_rnnt
+
+__all__ = [
+    "SpecAugmentConfig",
+    "spec_augment",
+    "rnnt_loss",
+    "rnnt_loss_from_logprobs",
+    "wer",
+    "levenshtein",
+    "greedy_decode_rnnt",
+]

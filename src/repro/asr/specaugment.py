@@ -1,0 +1,53 @@
+"""SpecAugment (Park et al., 2019) — time/frequency masking on log-mel
+features. The Baseline (E0) and the cost-reduced federated config E10
+("increased the amount of SpecAugment") both use it; the multiplicity
+and widths are config so E10's sweep is expressible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecAugmentConfig:
+    freq_masks: int = 2
+    freq_mask_width: int = 27     # F parameter of the paper
+    time_masks: int = 2
+    time_mask_frac: float = 0.05  # max time-mask width as fraction of T
+    enabled: bool = True
+
+
+def _mask_axis(key, x, axis_len, max_width, num_masks, axis):
+    """Apply ``num_masks`` random contiguous zero-masks along ``axis``."""
+    def body(x, key):
+        k1, k2 = jax.random.split(key)
+        width = jax.random.randint(k1, (), 0, max_width + 1)
+        start = jax.random.randint(k2, (), 0, jnp.maximum(axis_len - width, 1))
+        idx = jnp.arange(axis_len)
+        mask = (idx >= start) & (idx < start + width)
+        shape = [1] * x.ndim
+        shape[axis] = axis_len
+        return x * (1.0 - mask.reshape(shape).astype(x.dtype)), None
+
+    keys = jax.random.split(key, num_masks)
+    x, _ = jax.lax.scan(body, x, keys)
+    return x
+
+
+def spec_augment(key: jax.Array, features: jnp.ndarray, cfg: SpecAugmentConfig) -> jnp.ndarray:
+    """features: (..., T, F). Pure function of the PRNG key (per-client
+    keys under FL, so each client augments independently)."""
+    if not cfg.enabled:
+        return features
+    t_len, f_len = features.shape[-2], features.shape[-1]
+    kf, kt = jax.random.split(key)
+    max_f = min(cfg.freq_mask_width, f_len)
+    max_t = max(1, int(t_len * cfg.time_mask_frac))
+    if cfg.freq_masks > 0:
+        features = _mask_axis(kf, features, f_len, max_f, cfg.freq_masks, axis=-1)
+    if cfg.time_masks > 0:
+        features = _mask_axis(kt, features, t_len, max_t, cfg.time_masks, axis=-2)
+    return features

@@ -1,0 +1,107 @@
+"""Minimal npz-based pytree checkpointing with round state.
+
+Stores leaves keyed by their tree path in a single .npz plus a JSON
+manifest; restores into the reference pytree's structure/dtypes. Good
+enough for single-host simulation; a production deployment would swap
+in a tensorstore-backed array checkpointer behind the same interface.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(path: str, tree: PyTree, extra: dict | None = None) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    for i, (kp, leaf) in enumerate(flat):
+        arrays[f"leaf_{i}"] = np.asarray(leaf)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path + ".npz", **arrays)
+    manifest = {
+        "paths": [_path_str(kp) for kp, _ in flat],
+        "extra": extra or {},
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def load_pytree(path: str, like: PyTree) -> tuple[PyTree, dict]:
+    with np.load(path + ".npz") as data:
+        leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    ref_leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(leaves) != len(ref_leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, reference tree has {len(ref_leaves)}"
+        )
+    cast = [np.asarray(l).astype(r.dtype) for l, r in zip(leaves, ref_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, cast), manifest["extra"]
+
+
+class Checkpointer:
+    """Rolling round-indexed checkpoints: ``<dir>/ckpt_<round>.{npz,json}``."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _round_of(self, name: str) -> int:
+        m = re.match(r"ckpt_(\d+)\.json$", name)
+        return int(m.group(1)) if m else -1
+
+    def save(self, round_idx: int, tree: PyTree, extra: dict | None = None) -> str:
+        base = os.path.join(self.directory, f"ckpt_{round_idx}")
+        save_pytree(base, tree, {"round": round_idx, **(extra or {})})
+        self._gc()
+        return base
+
+    def latest_round(self) -> int | None:
+        rounds = sorted(
+            self._round_of(f) for f in os.listdir(self.directory) if f.endswith(".json")
+        )
+        rounds = [r for r in rounds if r >= 0]
+        return rounds[-1] if rounds else None
+
+    def restore_latest(self, like: PyTree):
+        r = self.latest_round()
+        if r is None:
+            return None
+        base = os.path.join(self.directory, f"ckpt_{r}")
+        tree, extra = load_pytree(base, like)
+        return tree, extra
+
+    def _gc(self) -> None:
+        rounds = sorted(
+            self._round_of(f) for f in os.listdir(self.directory) if f.endswith(".json")
+        )
+        rounds = [r for r in rounds if r >= 0]
+        for r in rounds[: -self.keep]:
+            for ext in (".npz", ".json"):
+                try:
+                    os.remove(os.path.join(self.directory, f"ckpt_{r}{ext}"))
+                except FileNotFoundError:
+                    pass

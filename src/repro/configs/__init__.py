@@ -1,0 +1,10 @@
+"""Assigned-architecture configs (+ the paper's RNN-T).
+
+Every module defines an ``ARCH`` ArchSpec with the exact assigned
+hyper-parameters (citation in the docstring), a reduced smoke variant,
+pjit sharding rules, and per-shape input specs. ``registry.get(id)``
+resolves ``--arch <id>``.
+"""
+from repro.configs.registry import get_arch, list_archs
+
+__all__ = ["get_arch", "list_archs"]

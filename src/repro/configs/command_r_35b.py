@@ -1,0 +1,46 @@
+"""command-r-35b [dense] — 40L d_model=8192 64H (GQA kv=8) d_ff=22528
+vocab=256000 — GQA, no-bias, parallel attn+FFN blocks, LayerNorm.
+[hf:CohereForAI/c4ai-command-r-v01]
+
+Engine: fedsgd + FSDP (35B). long_500k via sliding-window variant.
+"""
+from repro.configs import base
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "command-r-35b"
+
+
+def make_config(**kw) -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=40, d_model=8192, n_heads=64, n_kv=8, head_dim=128,
+        d_ff=22528, vocab=256000,
+        norm="ln", parallel_block=True, use_bias=False,
+        rope_theta=10000.0, act="silu",
+        dtype="bfloat16", param_dtype="bfloat16",
+        **kw,
+    )
+
+
+def make_smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2, d_model=128, n_heads=4, n_kv=2, head_dim=32,
+        d_ff=256, vocab=128,
+        norm="ln", parallel_block=True,
+        dtype="float32", param_dtype="float32", loss_chunk=16,
+    )
+
+
+ARCH = base.ArchSpec(
+    arch_id=ARCH_ID,
+    citation="hf:CohereForAI/c4ai-command-r-v01",
+    kind="dense",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    engine="fedsgd",
+    param_rules=base.transformer_param_rules(64, 8),
+    cache_rules=base.transformer_cache_rules(),
+    long_policy="sw_variant",
+    make_long_config=lambda: make_config(window=4096),
+)

@@ -1,0 +1,44 @@
+"""deepseek-67b [dense] — 95L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=102400 — llama architecture. [arXiv:2401.02954]
+
+Engine: fedsgd + FSDP (67B). kv (8 < 16) replicates per the Megatron
+fallback. long_500k via the sliding-window variant (W=4096).
+"""
+from repro.configs import base
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "deepseek-67b"
+
+
+def make_config(**kw) -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=95, d_model=8192, n_heads=64, n_kv=8, head_dim=128,
+        d_ff=22016, vocab=102400,
+        rope_theta=10000.0, act="silu",
+        dtype="bfloat16", param_dtype="bfloat16",
+        **kw,
+    )
+
+
+def make_smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2, d_model=128, n_heads=4, n_kv=2, head_dim=32,
+        d_ff=256, vocab=128,
+        dtype="float32", param_dtype="float32", loss_chunk=16,
+    )
+
+
+ARCH = base.ArchSpec(
+    arch_id=ARCH_ID,
+    citation="arXiv:2401.02954",
+    kind="dense",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    engine="fedsgd",
+    param_rules=base.transformer_param_rules(64, 8),
+    cache_rules=base.transformer_cache_rules(),
+    long_policy="sw_variant",
+    make_long_config=lambda: make_config(window=4096),
+)

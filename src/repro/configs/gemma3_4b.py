@@ -1,0 +1,52 @@
+"""gemma3-4b [dense] — 34L d_model=2560 8H (GQA kv=4) d_ff=10240
+vocab=262144 — 5:1 local(W=1024):global attention, 128k context.
+[hf:google/gemma-3-1b-pt family]
+
+qk_norm, (1+scale) RMSNorm, sqrt(d) embedding scale, gelu_tanh gating.
+Attention params replicate (8 heads < model axis — Megatron fallback,
+noted); FFN/vocab shard. long_500k NATIVE: the 5:1 local:global
+pattern IS the sub-quadratic variant (full cache kept on the 1-in-6
+global layers; the ring-buffer local cache is a §Perf optimization).
+Engine: fedavg. Single rope theta (10k) vs gemma3's split local/global
+bases — noted simplification.
+"""
+from repro.configs import base
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "gemma3-4b"
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=34, d_model=2560, n_heads=8, n_kv=4, head_dim=256,
+        d_ff=10240, vocab=262144,
+        window=1024, global_every=6,
+        qk_norm=True, rms_plus_one=True, emb_scale=True,
+        act="gelu_tanh", rope_theta=10000.0,
+        dtype="bfloat16", param_dtype="bfloat16", loss_chunk=128,
+    )
+
+
+def make_smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2, d_model=128, n_heads=4, n_kv=2, head_dim=32,
+        d_ff=256, vocab=128,
+        window=16, global_every=2,
+        qk_norm=True, rms_plus_one=True, emb_scale=True, act="gelu_tanh",
+        dtype="float32", param_dtype="float32", loss_chunk=16,
+    )
+
+
+ARCH = base.ArchSpec(
+    arch_id=ARCH_ID,
+    citation="hf:google/gemma-3-1b-pt",
+    kind="dense",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    engine="fedavg",
+    param_rules=base.transformer_param_rules(8, 4),
+    cache_rules=base.transformer_cache_rules(),
+    long_policy="native",                # 5:1 local:global pattern
+)

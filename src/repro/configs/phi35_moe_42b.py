@@ -1,0 +1,55 @@
+"""phi3.5-moe-42b-a6.6b [moe] — 32L d_model=4096 32H (GQA kv=8)
+d_ff=6400 (per expert) vocab=32064, MoE 16 experts top-2.
+[hf:microsoft/Phi-3.5-MoE-instruct]
+
+42B total / 6.6B active params. Experts shard 1-per-chip over the
+model axis (expert parallelism); kv (8 < 16) replicates. Engine:
+fedsgd + FSDP (42B > one model-parallel group's HBM for the fedavg
+per-client-replica layout). long_500k via the sliding-window variant
+(W=4096), noted in DESIGN.md.
+"""
+import dataclasses
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "phi3.5-moe-42b-a6.6b"
+
+
+def make_config(**kw) -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=32, d_model=4096, n_heads=32, n_kv=8, head_dim=128,
+        d_ff=6400, vocab=32064,
+        moe=MoEConfig(n_experts=16, top_k=2, expert_ff=6400),
+        rope_theta=10000.0, act="silu",
+        dtype="bfloat16", param_dtype="bfloat16",
+        **kw,
+    )
+
+
+def make_smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2, d_model=128, n_heads=4, n_kv=2, head_dim=32,
+        d_ff=192, vocab=128,
+        moe=MoEConfig(n_experts=4, top_k=2, expert_ff=192, capacity_factor=4.0),
+        dtype="float32", param_dtype="float32", loss_chunk=16,
+    )
+
+
+ARCH = base.ArchSpec(
+    arch_id=ARCH_ID,
+    citation="hf:microsoft/Phi-3.5-MoE-instruct",
+    kind="moe",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    engine="fedsgd",
+    param_rules=base.transformer_param_rules(32, 8, moe=True),
+    cache_rules=base.transformer_cache_rules(),
+    long_policy="sw_variant",
+    make_long_config=lambda: make_config(window=4096),
+)

@@ -1,0 +1,43 @@
+"""qwen3-8b [dense] — 36L d_model=4096 32H (GQA kv=8) d_ff=12288
+vocab=151936 — qk_norm, GQA. [hf:Qwen/Qwen3-8B]
+
+Engine: fedavg (per-client replicas fit). long_500k via SW variant.
+"""
+from repro.configs import base
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "qwen3-8b"
+
+
+def make_config(**kw) -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        n_layers=36, d_model=4096, n_heads=32, n_kv=8, head_dim=128,
+        d_ff=12288, vocab=151936,
+        qk_norm=True, rope_theta=1000000.0, act="silu",
+        dtype="bfloat16", param_dtype="bfloat16",
+        **kw,
+    )
+
+
+def make_smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2, d_model=128, n_heads=4, n_kv=2, head_dim=32,
+        d_ff=256, vocab=128, qk_norm=True,
+        dtype="float32", param_dtype="float32", loss_chunk=16,
+    )
+
+
+ARCH = base.ArchSpec(
+    arch_id=ARCH_ID,
+    citation="hf:Qwen/Qwen3-8B",
+    kind="dense",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    engine="fedavg",
+    param_rules=base.transformer_param_rules(32, 8),
+    cache_rules=base.transformer_cache_rules(),
+    long_policy="sw_variant",
+    make_long_config=lambda: make_config(window=4096),
+)

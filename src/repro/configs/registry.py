@@ -1,0 +1,95 @@
+"""--arch <id> registry + per-(arch, shape) input-spec construction."""
+from __future__ import annotations
+
+import importlib
+from typing import Optional
+
+import jax
+
+from repro.configs import base
+from repro.configs.base import SHAPES, ArchSpec, InputShape
+
+_MODULES = {
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe_42b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "whisper-base": "repro.configs.whisper_base",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1p6b",
+    "rnnt-librispeech": "repro.configs.rnnt_librispeech",
+}
+
+ASSIGNED = [k for k in _MODULES if k != "rnnt-librispeech"]
+
+
+def list_archs() -> list[str]:
+    return list(_MODULES)
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).ARCH
+
+
+def input_specs(arch: ArchSpec, shape: InputShape, cfg, bundle,
+                n_client_shards: int = 16):
+    """ShapeDtypeStruct stand-ins for every input of the lowered step.
+
+    Returns (args_struct, specs_tree) where args_struct matches the
+    step function's (batch,) / (cache, tokens, pos) arguments and
+    specs_tree is the matching PartitionSpec intent tree.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.sharding import make_param_specs
+
+    if shape.kind == "train":
+        K, S, b = base.round_layout(shape, n_client_shards, arch.engine)
+        if arch.kind == "audio":
+            batch = base.audio_train_batch(shape, K, S, b, cfg)
+        elif arch.kind == "vlm":
+            batch = base.vlm_train_batch(shape, K, S, b, cfg)
+        elif arch.kind == "rnnt":
+            batch = base.rnnt_train_batch(shape, K, S, b, cfg)
+        else:
+            batch = base.lm_train_batch(shape, K, S, b)
+        return batch, base.batch_specs(batch)
+
+    if shape.kind == "prefill":
+        if arch.kind == "audio":
+            batch = base.audio_prefill_batch(shape, cfg)
+        elif arch.kind == "vlm":
+            batch = base.vlm_prefill_batch(shape, cfg)
+        else:
+            batch = base.lm_prefill_batch(shape)
+        return batch, base.batch_specs(batch)
+
+    # decode: (cache, tokens, pos)
+    long = shape.name == "long_500k"
+    ring = False      # baseline: full-length cache, window masking
+    cache = jax.eval_shape(
+        lambda: bundle.init_cache(shape.global_batch, shape.seq_len, ring=ring))
+    cache_specs = make_param_specs(cache, arch.cache_rules if not long
+                                   else _long_rules(arch))
+    tokens = base.sds((shape.global_batch, 1), "int32")
+    pos = base.sds((), "int32")
+    args = (cache, tokens, pos)
+    specs = (cache_specs, P(base.BAT), P())
+    return args, specs
+
+
+def _long_rules(arch: ArchSpec):
+    maker = {
+        "dense": base.transformer_cache_rules,
+        "moe": base.transformer_cache_rules,
+        "vlm": base.transformer_cache_rules,
+        "hybrid": base.hybrid_cache_rules,
+        "ssm": base.rwkv_cache_rules,
+        "audio": base.audio_cache_rules,
+    }[arch.kind]
+    return maker(long=True)

@@ -1,0 +1,53 @@
+"""rnnt-librispeech — the paper's own model (Fig. 1): ~122M-class
+RNN-T — 8x LSTM audio encoder, 2x LSTM label encoder, joint dim 640,
+4096 word-pieces, 128-dim log-mel inputs, SpecAugment + FVN.
+
+Not part of the assigned 10-arch matrix; included as the paper-
+faithful reproduction target (train shape only — RNN-T streaming
+decode is the greedy loop in repro/models/rnnt.py, not a KV-cache
+serve step). Engine: fedavg (the paper's setting: K up to 128
+Librispeech speakers per round).
+"""
+from repro.asr.specaugment import SpecAugmentConfig
+from repro.configs import base
+from repro.models.rnnt import RNNTConfig
+
+ARCH_ID = "rnnt-librispeech"
+
+
+def make_config() -> RNNTConfig:
+    return RNNTConfig(
+        name=ARCH_ID,
+        feat_dim=128, vocab=4096,
+        enc_layers=8, enc_hidden=1152,
+        pred_layers=2, pred_hidden=1152, pred_embed=512,
+        joint_dim=640, time_stride=2,
+        specaug=SpecAugmentConfig(),
+        dtype="bfloat16", param_dtype="float32",
+    )
+
+
+def make_smoke_config() -> RNNTConfig:
+    return RNNTConfig(
+        name=ARCH_ID + "-smoke",
+        feat_dim=16, vocab=64,
+        enc_layers=2, enc_hidden=64,
+        pred_layers=1, pred_hidden=64, pred_embed=32,
+        joint_dim=48, time_stride=1,
+        specaug=SpecAugmentConfig(freq_masks=1, freq_mask_width=4, time_masks=1),
+        dtype="float32", param_dtype="float32",
+    )
+
+
+ARCH = base.ArchSpec(
+    arch_id=ARCH_ID,
+    citation="paper Fig.1 / He et al. 2019",
+    kind="rnnt",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    engine="fedavg",
+    param_rules=base.rnnt_param_rules(),
+    cache_rules=[],
+    long_policy="skip",
+    skip_notes="ASR training model; serve shapes don't apply (DESIGN.md).",
+)

@@ -1,0 +1,46 @@
+"""rwkv6-1.6b [ssm] — 24L d_model=2048 (attention-free) d_ff=7168
+vocab=65536 — Finch: data-dependent per-channel decay. [arXiv:2404.05892]
+
+O(1)-in-context decode state (H x P x P per layer) — long_500k native.
+The FedAvg/FVN technique applies unchanged (optimizer-level). Engine:
+fedavg. Token-shift mixing uses static coefficients (5.2-style; the
+6.0 dynamic-mix LoRAs are omitted — DESIGN.md).
+"""
+from repro.configs import base
+from repro.models.model_zoo import RWKVModelConfig
+from repro.models.rwkv import RWKVConfig
+
+ARCH_ID = "rwkv6-1.6b"
+
+
+def make_config() -> RWKVModelConfig:
+    return RWKVModelConfig(
+        name=ARCH_ID,
+        n_layers=24,
+        rwkv=RWKVConfig(d_model=2048, head_size=64, d_ff=7168, decay_lora=64),
+        vocab=65536,
+        dtype="bfloat16", param_dtype="bfloat16",
+    )
+
+
+def make_smoke_config() -> RWKVModelConfig:
+    return RWKVModelConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2,
+        rwkv=RWKVConfig(d_model=128, head_size=32, d_ff=256, decay_lora=16),
+        vocab=128,
+        dtype="float32", param_dtype="float32", loss_chunk=16,
+    )
+
+
+ARCH = base.ArchSpec(
+    arch_id=ARCH_ID,
+    citation="arXiv:2404.05892",
+    kind="ssm",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    engine="fedavg",
+    param_rules=base.rwkv_param_rules(),
+    cache_rules=base.rwkv_cache_rules(),
+    long_policy="native",
+)

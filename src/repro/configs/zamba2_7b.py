@@ -1,0 +1,46 @@
+"""zamba2-7b [hybrid] — 81L d_model=3584 32H (GQA kv=32) d_ff=14336
+vocab=32000, ssm_state=64 — Mamba2 backbone + shared attention block.
+[arXiv:2411.15242]
+
+81 Mamba2 layers with the single shared attn+MLP block applied every 6
+(13 groups + a 3-layer tail => 14 applications, one weight set).
+long_500k native: SSM state is O(1) in context; the shared attention's
+decode is linear per step. Engine: fedavg (6.8B fits a model group).
+"""
+from repro.configs import base
+from repro.models.hybrid import HybridConfig
+
+ARCH_ID = "zamba2-7b"
+
+
+def make_config() -> HybridConfig:
+    return HybridConfig(
+        name=ARCH_ID,
+        n_layers=81, d_model=3584, n_heads=32, n_kv=32, head_dim=112,
+        d_ff=14336, vocab=32000, attn_every=6,
+        ssm_state=64, ssm_headdim=64,
+        dtype="bfloat16", param_dtype="bfloat16",
+    )
+
+
+def make_smoke_config() -> HybridConfig:
+    return HybridConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=8, d_model=128, n_heads=4, n_kv=4, head_dim=32,
+        d_ff=256, vocab=128, attn_every=3,
+        ssm_state=16, ssm_headdim=32,
+        dtype="float32", param_dtype="float32", loss_chunk=16,
+    )
+
+
+ARCH = base.ArchSpec(
+    arch_id=ARCH_ID,
+    citation="arXiv:2411.15242",
+    kind="hybrid",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    engine="fedavg",
+    param_rules=base.hybrid_param_rules(),
+    cache_rules=base.hybrid_cache_rules(),
+    long_policy="native",
+)

@@ -1,0 +1,36 @@
+"""The paper's contribution: federated training with a quality/cost dial.
+
+- ``fedavg``  — FedAvg round engines (Alg. 1) as pjit-able pure functions
+- ``fvn``     — Federated Variational Noise (§4.2.2)
+- ``cfmq``    — Cost of Federated Model Quality (§2.3, Eqs. 1-2)
+- ``plan``    — FederatedPlan experiment configuration
+- ``experiments`` — the paper's E0-E10 ladder as plans
+"""
+from repro.core.plan import FederatedPlan, FVNConfig, make_server_optimizer, server_lr_schedule
+from repro.core.fedavg import (
+    ServerState,
+    init_server_state,
+    make_fedavg_round,
+    make_fedsgd_round,
+    make_round_step,
+)
+from repro.core.cfmq import CFMQTerms, cfmq, mu_local_steps, paper_payload, paper_peak_memory
+from repro.core import fvn
+
+__all__ = [
+    "FederatedPlan",
+    "FVNConfig",
+    "make_server_optimizer",
+    "server_lr_schedule",
+    "ServerState",
+    "init_server_state",
+    "make_fedavg_round",
+    "make_fedsgd_round",
+    "make_round_step",
+    "CFMQTerms",
+    "cfmq",
+    "mu_local_steps",
+    "paper_payload",
+    "paper_peak_memory",
+    "fvn",
+]

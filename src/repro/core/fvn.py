@@ -1,0 +1,48 @@
+"""Federated Variational Noise (paper §4.2.2).
+
+Variational Noise (Graves 2011) adds Gaussian noise to model
+parameters at each optimization step. Under FL's two-level
+optimization the paper adapts it so *each client draws its own noise
+tensors during local optimization* — all clients sample from the same
+N(0, sigma(round)) so client parameters approximate draws from one
+shared Q(beta), which is the paper's argued mechanism for limiting
+per-client drift. sigma follows a linear ramp over rounds (E7:
+"Ramp to 0.03").
+
+Keys are derived as fold_in(fold_in(fold_in(base, round), client),
+step): deterministic, per-client, per-step — reproducible across the
+vmap over clients and the scan over local steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import FVNConfig
+
+
+def fvn_sigma(cfg: FVNConfig, round_idx) -> jnp.ndarray:
+    """Noise std for a round (linear ramp, paper E7)."""
+    if not cfg.enabled:
+        return jnp.zeros(())
+    if cfg.ramp_rounds > 0:
+        frac = jnp.minimum(jnp.asarray(round_idx, jnp.float32) / cfg.ramp_rounds, 1.0)
+        return cfg.std * frac
+    return jnp.full((), cfg.std, jnp.float32)
+
+
+def fvn_key(base_key, round_idx, client_idx, step_idx):
+    k = jax.random.fold_in(base_key, round_idx)
+    k = jax.random.fold_in(k, client_idx)
+    return jax.random.fold_in(k, step_idx)
+
+
+def perturb(params, key, sigma):
+    """params + N(0, sigma) — one independent draw per tensor."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [
+        (p.astype(jnp.float32) + sigma * jax.random.normal(k, p.shape, jnp.float32)).astype(p.dtype)
+        for p, k in zip(leaves, keys)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, noisy)

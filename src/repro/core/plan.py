@@ -1,0 +1,64 @@
+"""FederatedPlan — the experiment configuration of the paper's Alg. 1.
+
+One plan fully determines a federated optimization: client count and
+sampling, the non-IID dial (per-client data limit), client/server
+optimizers, FVN, and the CFMQ accounting constants. The experiment
+ladder E0–E10 is expressed as plans (see repro/core/experiments.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class FVNConfig:
+    """Federated Variational Noise (paper §4.2.2): per-client Gaussian
+    weight noise at each local step, std ramped linearly over rounds."""
+    enabled: bool = False
+    std: float = 0.01            # target std (E5: 0.01, E6: 0.02, E7: ramp to 0.03)
+    ramp_rounds: int = 0         # 0 = constant std; >0 = linear 0 -> std
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedPlan:
+    clients_per_round: int = 4          # K (paper sweeps 32 -> 128)
+    local_batch_size: int = 2           # b
+    local_epochs: int = 1               # e
+    local_steps: Optional[int] = None   # fixed step count (engine shape); None = from data
+    data_limit: Optional[int] = None    # paper §4.2.1 non-IID dial (None = no limit)
+    client_lr: float = 0.008            # paper's coarse-swept client SGD lr
+    server_optimizer: str = "adam"      # "adam" | "sgd" | "momentum" | "yogi"
+    server_lr: float = 1e-3
+    server_warmup_rounds: int = 0       # linear ramp-up (Baseline style)
+    server_decay_rounds: int = 0        # >0: exponential decay (E9/E10 style)
+    server_decay_rate: float = 0.9
+    fvn: FVNConfig = dataclasses.field(default_factory=FVNConfig)
+    engine: str = "fedavg"              # "fedavg" | "fedsgd" (FSDP large-model path)
+    # CFMQ constants (paper §4.3.1): payload/memory approximations
+    alpha: float = 1.0
+    param_bytes: int = 4                # bytes per parameter on the wire
+
+
+def server_lr_schedule(plan: FederatedPlan):
+    from repro.optim import constant, linear_rampup, linear_rampup_exp_decay
+
+    if plan.server_decay_rounds > 0:
+        return linear_rampup_exp_decay(
+            plan.server_lr, max(plan.server_warmup_rounds, 1),
+            plan.server_decay_rounds, plan.server_decay_rate)
+    if plan.server_warmup_rounds > 0:
+        return linear_rampup(plan.server_lr, plan.server_warmup_rounds)
+    return constant(plan.server_lr)
+
+
+def make_server_optimizer(plan: FederatedPlan):
+    from repro import optim
+
+    sched = server_lr_schedule(plan)
+    return {
+        "adam": lambda: optim.adam(sched),
+        "sgd": lambda: optim.sgd(sched),
+        "momentum": lambda: optim.momentum(sched),
+        "yogi": lambda: optim.yogi(sched),
+    }[plan.server_optimizer]()

@@ -1,0 +1,19 @@
+"""Data substrate: synthetic speaker-split corpora + federated round batching."""
+from repro.data.corpus import SpeakerCorpus, CorpusConfig, make_speaker_corpus
+from repro.data.pipeline import (
+    RoundBatch,
+    FederatedSampler,
+    pack_round,
+)
+from repro.data.synthetic import synthetic_lm_clients, synthetic_lm_batch
+
+__all__ = [
+    "SpeakerCorpus",
+    "CorpusConfig",
+    "make_speaker_corpus",
+    "RoundBatch",
+    "FederatedSampler",
+    "pack_round",
+    "synthetic_lm_clients",
+    "synthetic_lm_batch",
+]

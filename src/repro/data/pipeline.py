@@ -1,0 +1,126 @@
+"""Federated round batching: client selection, data limiting, packing.
+
+A federated round batch is a fixed-shape pytree:
+    features : (K, S, B, T, F)   S = local steps, B = local batch
+    labels   : (K, S, B, U)
+    label_len, frame_len : (K, S, B)
+    mask     : (K, S, B)  1.0 for real examples, 0.0 for padding
+    n_k      : (K,)       number of real examples per client (paper's n_k)
+
+The *data limit* L (paper §4.2.1) caps how many examples a client
+contributes in one round — the paper's dial between non-IID (L=None)
+and near-IID (L=1). The full per-speaker dataset is still traversed
+over multiple rounds via per-client cursors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RoundBatch:
+    features: np.ndarray
+    labels: np.ndarray
+    label_len: np.ndarray
+    frame_len: np.ndarray
+    mask: np.ndarray
+    n_k: np.ndarray
+
+    def tree(self):
+        return dataclasses.asdict(self)
+
+
+class FederatedSampler:
+    """Selects K clients per round and packs their (possibly limited)
+    local datasets into fixed-shape round batches."""
+
+    def __init__(
+        self,
+        corpus,
+        clients_per_round: int,
+        local_batch_size: int,
+        data_limit: Optional[int] = None,
+        local_epochs: int = 1,
+        seed: int = 0,
+        max_steps=None,
+    ):
+        self.corpus = corpus
+        self.K = clients_per_round
+        self.b = local_batch_size
+        self.data_limit = data_limit
+        self.local_epochs = local_epochs
+        self.rng = np.random.default_rng(seed)
+        # Per-client cursors so data-limited rounds still traverse all data.
+        self._cursors = np.zeros(corpus.num_speakers, np.int64)
+        self._orders = [
+            np.random.default_rng(seed + 7 * i).permutation(s["n"])
+            for i, s in enumerate(corpus.speakers)
+        ]
+        # Fixed max local steps for jit-stable shapes.
+        if data_limit is not None:
+            n_max = data_limit
+        else:
+            n_max = int(max(s["n"] for s in corpus.speakers))
+        self.steps = max(1, int(np.ceil(local_epochs * n_max / self.b)))
+        if max_steps is not None:
+            self.steps = min(self.steps, max_steps)
+
+    def _client_examples(self, cid: int):
+        sp = self.corpus.speakers[cid]
+        n = sp["n"]
+        order = self._orders[cid]
+        limit = min(self.data_limit, n) if self.data_limit is not None else n
+        idx = []
+        for _ in range(limit):
+            c = self._cursors[cid]
+            if c % n == 0 and c > 0:
+                # reshuffle each full pass
+                self._orders[cid] = self.rng.permutation(n)
+                order = self._orders[cid]
+            idx.append(order[c % n])
+            self._cursors[cid] += 1
+        return np.asarray(idx, np.int64)
+
+    def next_round(self) -> RoundBatch:
+        K, b, S = self.K, self.b, self.steps
+        chosen = self.rng.choice(self.corpus.num_speakers, size=K, replace=False)
+        c0 = self.corpus.speakers[0]
+        T, F = c0["features"].shape[1:]
+        U = c0["labels"].shape[1]
+        feats = np.zeros((K, S, b, T, F), np.float32)
+        labels = np.zeros((K, S, b, U), np.int32)
+        label_len = np.zeros((K, S, b), np.int32)
+        frame_len = np.zeros((K, S, b), np.int32)
+        mask = np.zeros((K, S, b), np.float32)
+        n_k = np.zeros((K,), np.float32)
+        for j, cid in enumerate(chosen):
+            idx = self._client_examples(int(cid))
+            idx = np.tile(idx, self.local_epochs)[: S * b]
+            n_k[j] = len(idx)
+            sp = self.corpus.speakers[int(cid)]
+            for e, ei in enumerate(idx):
+                s, bi = divmod(e, b)
+                feats[j, s, bi] = sp["features"][ei]
+                labels[j, s, bi] = sp["labels"][ei]
+                label_len[j, s, bi] = sp["label_len"][ei]
+                frame_len[j, s, bi] = sp["frame_len"][ei]
+                mask[j, s, bi] = 1.0
+        return RoundBatch(feats, labels, label_len, frame_len, mask, n_k)
+
+
+def pack_round(examples: dict, K: int, steps: int, batch: int) -> RoundBatch:
+    """Pack a flat example dict into a (K, steps, batch, ...) round —
+    used for IID baselines where examples are drawn from the global pool."""
+    need = K * steps * batch
+    n = examples["labels"].shape[0]
+    idx = np.resize(np.arange(n), need)
+    feats = examples["features"][idx].reshape(K, steps, batch, *examples["features"].shape[1:])
+    labels = examples["labels"][idx].reshape(K, steps, batch, -1)
+    label_len = examples["label_len"][idx].reshape(K, steps, batch)
+    frame_len = examples["frame_len"][idx].reshape(K, steps, batch)
+    mask = np.ones((K, steps, batch), np.float32)
+    n_k = np.full((K,), steps * batch, np.float32)
+    return RoundBatch(feats, labels, label_len, frame_len, mask, n_k)

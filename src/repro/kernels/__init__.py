@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+- ``rnnt_joint``      — fused RNN-T joint + log-softmax + (blank, label)
+                        gather (the paper-model's memory hot-spot)
+- ``flash_attention`` — blockwise causal/window/GQA attention
+- ``decode_attention``— flash-decode (one token vs. a long cache)
+- ``lstm_gates``      — fused LSTM cell pointwise update
+
+Each has a jnp oracle in ``ref.py`` and a jit'd wrapper in ``ops.py``.
+On this CPU-only container they run in interpret mode; TPU is the
+compile target (BlockSpec VMEM tiling, MXU-aligned tiles).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,104 @@
+"""Flash-decode Pallas TPU kernel: one query token vs. a long KV cache.
+
+Decode attention is memory-bound (the whole cache streams HBM->VMEM
+once per step); the kernel's job is to keep that stream dense and
+fuse the softmax so nothing round-trips. Grid: (B, Kv, S / ts) with
+the sequence axis innermost/sequential carrying (m, l, acc) scratch —
+per kv-head, all G grouped q-heads are processed together as the
+(G, D) left operand of the MXU matmuls.
+
+Under sequence-sharded caches (long_500k), each shard runs this
+kernel on its S/shards slice and the partials merge with the standard
+logsumexp combine (GSPMD all-reduce) — see repro/models/attention.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            window: int, scale: float, ts: int, n_s: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    q = q_ref[0].astype(jnp.float32) * scale          # (G, D)
+    k = k_ref[0].astype(jnp.float32)                  # (ts, D)
+    v = v_ref[0].astype(jnp.float32)                  # (ts, Dv)
+    s = q @ k.T                                       # (G, ts)
+    j = si * ts + jax.lax.broadcasted_iota(jnp.int32, (1, ts), 1)
+    valid = j <= pos
+    if window > 0:
+        valid &= j > pos - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(valid, p, 0.0)
+    corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_prev * corr[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jnp.ndarray,             # (B, H, D)
+    k_cache: jnp.ndarray,       # (B, S, Kv, D)
+    v_cache: jnp.ndarray,       # (B, S, Kv, Dv)
+    pos: jnp.ndarray,           # scalar int32: current token index
+    *,
+    window: int = 0,
+    ts: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    S, Kv = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    G = H // Kv
+    ts = min(ts, S)
+    assert S % ts == 0, (S, ts)
+    n_s = S // ts
+    scale = D ** -0.5
+
+    qr = q.reshape(B, Kv, G, D).reshape(B * Kv, G, D)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(B * Kv, S, D)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(B * Kv, S, Dv)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (1,))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, window=window, scale=scale, ts=ts, n_s=n_s),
+        grid=(B, Kv, n_s),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, D), lambda b, h, si: (b * pl.num_programs(1) + h, 0, 0)),
+            pl.BlockSpec((1, ts, D), lambda b, h, si: (b * pl.num_programs(1) + h, si, 0)),
+            pl.BlockSpec((1, ts, Dv), lambda b, h, si: (b * pl.num_programs(1) + h, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, Dv), lambda b, h, si: (b * pl.num_programs(1) + h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Kv, G, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qr, kr, vr)
+    return out.reshape(B, H, Dv)

@@ -1,0 +1,121 @@
+"""Flash attention (causal / sliding-window / GQA) Pallas TPU kernel.
+
+TPU-native adaptation: HBM->VMEM tiles are explicit BlockSpecs, the
+(tq, tk) score tile and the (tq, D) accumulator live in VMEM scratch
+persisted across the sequential k-grid dimension, and all matmul dims
+are MXU-aligned (tiles are multiples of 128 where shapes allow). GQA
+is expressed in the index_map: kv blocks for q-head h come from kv
+head h // (H // Kv) — no KV replication in HBM.
+
+Grid: (B * H, Sq / tq, Sk / tk); the kv axis is innermost and
+sequential, carrying (m, l, acc) scratch — the online-softmax
+recurrence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, window: int, scale: float, tq: int, tk: int,
+            n_k: int, logit_softcap: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (tq, D)
+    k = k_ref[0].astype(jnp.float32)                  # (tk, D)
+    v = v_ref[0].astype(jnp.float32)                  # (tk, Dv)
+    s = q @ k.T                                       # (tq, tk)
+    if logit_softcap > 0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+
+    q_pos = qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+    k_pos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * corr[:, None] + p @ v
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,             # (B, Sq, H, D)
+    k: jnp.ndarray,             # (B, Sk, Kv, D)
+    v: jnp.ndarray,             # (B, Sk, Kv, Dv)
+    *,
+    causal: bool = True,
+    window: int = 0,            # 0 = no window
+    logit_softcap: float = 0.0,
+    tq: int = 128,
+    tk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Kv
+    tq = min(tq, Sq)
+    tk = min(tk, Sk)
+    assert Sq % tq == 0 and Sk % tk == 0, (Sq, tq, Sk, tk)
+    n_q, n_k = Sq // tq, Sk // tk
+    scale = D ** -0.5
+
+    # layouts: q -> (B*H, Sq, D); kv -> (B*Kv, Sk, D)
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Kv, Sk, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Kv, Sk, Dv)
+
+    def q_map(h, qi, ki):
+        return (h, qi, 0)
+
+    def kv_map(h, qi, ki):
+        return ((h // H) * Kv + (h % H) // G, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, causal=causal, window=window, scale=scale,
+                          tq=tq, tk=tk, n_k=n_k, logit_softcap=logit_softcap),
+        grid=(B * H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, tq, D), q_map),
+            pl.BlockSpec((1, tk, D), kv_map),
+            pl.BlockSpec((1, tk, Dv), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, tq, Dv), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq,), jnp.float32),
+            pltpu.VMEM((tq,), jnp.float32),
+            pltpu.VMEM((tq, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Sq, Dv).transpose(0, 2, 1, 3)

@@ -1,0 +1,93 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU
+they compile to Mosaic. ``rnnt_joint`` carries a custom_vjp whose
+backward re-materializes through the U-chunked jnp path, preserving
+the forward's O(B·T·U) memory during training.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lstm_gates import lstm_gates_fused
+from repro.kernels.rnnt_joint import rnnt_joint_fused
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "logit_softcap"))
+def attention(q, k, v, causal: bool = True, window: int = 0, logit_softcap: float = 0.0):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           logit_softcap=logit_softcap, interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def decode_attention(q, k_cache, v_cache, pos, window: int = 0):
+    return flash_decode(q, k_cache, v_cache, pos, window=window, interpret=_on_cpu())
+
+
+@jax.jit
+def lstm_gates(gates, c):
+    return lstm_gates_fused(gates, c, interpret=_on_cpu())
+
+
+# ------------------------------------------------------------ rnnt joint
+
+def _joint_ref_chunked(enc_proj, pred_proj, w_out, bias, labels, u_chunk: int = 8):
+    """U-chunked jnp joint (differentiable; used for the custom bwd)."""
+    B, T, J = enc_proj.shape
+    U1 = pred_proj.shape[1]
+    n_chunks = max(1, U1 // u_chunk)
+    pad = (-U1) % n_chunks
+    g = jnp.pad(pred_proj, ((0, 0), (0, pad), (0, 0))) if pad else pred_proj
+    l = jnp.pad(labels, ((0, 0), (0, pad))) if pad else labels
+    c = g.shape[1] // n_chunks
+    gc = g.reshape(B, n_chunks, c, J).swapaxes(0, 1)
+    lc = l.reshape(B, n_chunks, c).swapaxes(0, 1)
+
+    def body(_, inp):
+        g_i, l_i = inp
+        h = jnp.tanh(enc_proj[:, :, None, :].astype(jnp.float32)
+                     + g_i[:, None, :, :].astype(jnp.float32))
+        logits = h @ w_out.astype(jnp.float32) + bias.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        blank = logits[..., 0] - lse
+        lab = jnp.take_along_axis(
+            logits, l_i[:, None, :, None].astype(jnp.int32), axis=-1)[..., 0] - lse
+        return None, (blank, lab)
+
+    _, (blanks, labs) = jax.lax.scan(body, None, (gc, lc))
+    blank_lp = blanks.swapaxes(0, 1).reshape(B, T, -1)[:, :, :U1]
+    label_lp = labs.swapaxes(0, 1).reshape(B, T, -1)[:, :, :U1]
+    return blank_lp, label_lp
+
+
+@jax.custom_vjp
+def rnnt_joint(enc_proj, pred_proj, w_out, bias, labels):
+    return rnnt_joint_fused(enc_proj, pred_proj, w_out, bias, labels,
+                            interpret=_on_cpu())
+
+
+def _rnnt_joint_fwd(enc_proj, pred_proj, w_out, bias, labels):
+    out = rnnt_joint(enc_proj, pred_proj, w_out, bias, labels)
+    return out, (enc_proj, pred_proj, w_out, bias, labels)
+
+
+def _rnnt_joint_bwd(res, cts):
+    enc_proj, pred_proj, w_out, bias, labels = res
+    _, vjp = jax.vjp(
+        lambda e, g, w, b: _joint_ref_chunked(e, g, w, b, labels),
+        enc_proj, pred_proj, w_out, bias)
+    de, dg, dw, db = vjp(cts)
+    return de, dg, dw, db, None
+
+
+rnnt_joint.defvjp(_rnnt_joint_fwd, _rnnt_joint_bwd)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are *definitions*, deliberately simple and memory-naive — tests
+sweep shapes/dtypes and assert the kernels (interpret=True on CPU)
+match them. Production jnp fallbacks live in repro/models (blockwise
+formulations); these oracles materialize everything for clarity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, q_offset=0, logit_softcap=0.0):
+    """q: (B, Sq, H, D); k, v: (B, Sk, Kv, D). Returns (B, Sq, H, Dv)."""
+    B, Sq, H, D = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Kv, G, D) * (D ** -0.5)
+    s = jnp.einsum("bqkgd,bjkd->bqkgj", qf, k.astype(jnp.float32))
+    if logit_softcap > 0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgj,bjkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, *, window=None):
+    """q: (B, H, D); caches: (B, S, Kv, D); pos scalar (current token
+    index, already written into the cache)."""
+    B, H, D = q.shape
+    S, Kv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kv
+    qf = q.astype(jnp.float32).reshape(B, Kv, G, D) * (D ** -0.5)
+    s = jnp.einsum("bkgd,bjkd->bkgj", qf, k_cache.astype(jnp.float32))
+    j = jnp.arange(S)
+    valid = j <= pos
+    if window is not None:
+        valid &= j > pos - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgj,bjkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+def rnnt_joint_ref(enc_proj, pred_proj, w_out, bias, labels):
+    """Fused joint oracle: materializes (B, T, U1, V) logits.
+
+    enc_proj: (B, T, J); pred_proj: (B, U1, J); w_out: (J, V);
+    bias: (V,); labels: (B, U1-? ) — (B, U1) label ids (last unused).
+    Returns (blank_lp, label_lp): (B, T, U1).
+    """
+    h = jnp.tanh(enc_proj[:, :, None, :].astype(jnp.float32)
+                 + pred_proj[:, None, :, :].astype(jnp.float32))
+    logits = h @ w_out.astype(jnp.float32) + bias.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    blank_lp = logits[..., 0] - lse
+    lbl = labels[:, None, :, None].astype(jnp.int32)            # (B,1,U1,1)
+    lbl = jnp.broadcast_to(lbl, logits.shape[:3] + (1,))
+    label_lp = jnp.take_along_axis(logits, lbl, axis=-1)[..., 0] - lse
+    return blank_lp, label_lp
+
+
+def lstm_gates_ref(gates, c):
+    """gates: (B, 4H) preactivation [i|f|g|o]; c: (B, H)."""
+    h4 = gates.shape[-1]
+    hd = h4 // 4
+    gf = gates.astype(jnp.float32)
+    i = jax.nn.sigmoid(gf[..., :hd])
+    f = jax.nn.sigmoid(gf[..., hd: 2 * hd] + 1.0)
+    g = jnp.tanh(gf[..., 2 * hd: 3 * hd])
+    o = jax.nn.sigmoid(gf[..., 3 * hd:])
+    c_new = f * c.astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new.astype(gates.dtype), c_new.astype(c.dtype)

@@ -1,0 +1,134 @@
+"""Fused RNN-T joint Pallas TPU kernel — the paper-model's memory wall.
+
+The naive joint materializes (B, T, U1, V) logits in HBM (V = 4096
+word-pieces): for the paper's batches that tensor dwarfs everything
+else in the step and its HBM round-trip dominates. On TPU this is a
+capacity/bandwidth problem (not a CUDA-occupancy one), so the
+adaptation is VMEM-resident fusion: tile the (T, U1) lattice, and for
+each tile stream V in MXU-aligned slabs, computing
+
+    h      = tanh(e_t + g_u)            (tq, tu, J)   VMEM scratch
+    logits = h @ Wo[:, v0:v1] + b       (tq, tu, tv)  transient
+    m, l   : running max / sum-exp      (tq, tu)      VMEM scratch
+    blank  = logits[..., 0]             (tq, tu)
+    label  = logits[..., labels[u]]     one-hot within the slab
+
+and emitting only blank/label log-probs (B, T, U1, 2) — a V/2 (=2048x)
+reduction in joint HBM traffic. Grid: (B, T/tq, U1/tu, V/tv) with the
+vocab axis innermost/sequential carrying the scratch.
+
+Backward: wrapped in ``jax.custom_vjp`` whose bwd re-materializes
+through the U-chunked jnp reference (rematerialization keeps the
+memory win during training); see ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(e_ref, g_ref, wo_ref, b_ref, lbl_ref,
+            blank_ref, label_ref,
+            h_ref, m_ref, l_ref, blk_ref, lab_ref, *,
+            tv: int, n_v: int):
+    vi = pl.program_id(3)
+
+    @pl.when(vi == 0)
+    def _init():
+        h_ref[...] = jnp.tanh(
+            e_ref[0].astype(jnp.float32)[:, None, :]
+            + g_ref[0].astype(jnp.float32)[None, :, :])
+        m_ref[...] = jnp.full_like(m_ref, -1.0e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        blk_ref[...] = jnp.zeros_like(blk_ref)
+        lab_ref[...] = jnp.zeros_like(lab_ref)
+
+    h = h_ref[...]                                             # (tq, tu, J)
+    wo = wo_ref[...].astype(jnp.float32)                       # (J, tv)
+    logits = jax.lax.dot_general(
+        h.reshape(-1, h.shape[-1]), wo,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(h.shape[0], h.shape[1], tv) + b_ref[...].astype(jnp.float32)
+
+    # running log-sum-exp over the vocab axis
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+
+    # blank logit lives in vocab slab 0, column 0
+    @pl.when(vi == 0)
+    def _blank():
+        blk_ref[...] = logits[..., 0]
+
+    # label logit: labels[u] may fall in this slab
+    lbl = lbl_ref[0]                                           # (tu,) int32
+    col = lbl - vi * tv                                        # position within slab
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (logits.shape[1], tv), 1)
+              == col[:, None]).astype(jnp.float32)             # (tu, tv)
+    lab_ref[...] += jnp.einsum("quv,uv->qu", logits, onehot)
+
+    @pl.when(vi == n_v - 1)
+    def _finalize():
+        lse = m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
+        blank_ref[0] = (blk_ref[...] - lse).astype(blank_ref.dtype)
+        label_ref[0] = (lab_ref[...] - lse).astype(label_ref.dtype)
+
+
+def rnnt_joint_fused(
+    enc_proj: jnp.ndarray,      # (B, T, J)  enc @ W_enc
+    pred_proj: jnp.ndarray,     # (B, U1, J) pred @ W_pred
+    w_out: jnp.ndarray,         # (J, V)
+    bias: jnp.ndarray,          # (V,)
+    labels: jnp.ndarray,        # (B, U1) int32 (labels[:, -1] unused)
+    *,
+    tq: int = 16,
+    tu: int = 8,
+    tv: int = 512,
+    interpret: bool = False,
+):
+    """Returns (blank_lp, label_lp): (B, T, U1) log-probs."""
+    B, T, J = enc_proj.shape
+    U1 = pred_proj.shape[1]
+    V = w_out.shape[1]
+    tq, tu, tv = min(tq, T), min(tu, U1), min(tv, V)
+    assert T % tq == 0 and U1 % tu == 0 and V % tv == 0, (T, tq, U1, tu, V, tv)
+    n_v = V // tv
+
+    bias2d = bias.reshape(1, V)
+    grid = (B, T // tq, U1 // tu, n_v)
+    blank, label = pl.pallas_call(
+        functools.partial(_kernel, tv=tv, n_v=n_v),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, J), lambda b, ti, ui, vi: (b, ti, 0)),
+            pl.BlockSpec((1, tu, J), lambda b, ti, ui, vi: (b, ui, 0)),
+            pl.BlockSpec((J, tv), lambda b, ti, ui, vi: (0, vi)),
+            pl.BlockSpec((1, tv), lambda b, ti, ui, vi: (0, vi)),
+            pl.BlockSpec((1, tu), lambda b, ti, ui, vi: (b, ui)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tq, tu), lambda b, ti, ui, vi: (b, ti, ui)),
+            pl.BlockSpec((1, tq, tu), lambda b, ti, ui, vi: (b, ti, ui)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, U1), jnp.float32),
+            jax.ShapeDtypeStruct((B, T, U1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, tu, J), jnp.float32),
+            pltpu.VMEM((tq, tu), jnp.float32),
+            pltpu.VMEM((tq, tu), jnp.float32),
+            pltpu.VMEM((tq, tu), jnp.float32),
+            pltpu.VMEM((tq, tu), jnp.float32),
+        ],
+        interpret=interpret,
+    )(enc_proj, pred_proj, w_out, bias2d, labels.astype(jnp.int32))
+    return blank, label

@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh), build the real step
+function — ``fed_round_step`` for train_4k (a full federated round IS
+the paper's training step), ``prefill_step`` for prefill_32k,
+``serve_step`` for the decode shapes — and ``.lower().compile()`` it
+against ShapeDtypeStruct inputs on the production mesh. Emits JSON
+with memory analysis, the trip-count-aware HLO cost model's roofline
+terms, and the collective schedule.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k [--multi-pod] [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import math
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.base import SHAPES, default_plan
+from repro.configs.registry import ASSIGNED, input_specs
+from repro.core.fedavg import init_server_state, make_round_step, server_state_specs
+from repro.launch import hlo_cost
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from repro.launch.sharding import fsdpify, make_param_specs, named, sanitize_specs
+from repro.models import build_model
+
+MODEL_FLOPS_NOTE = "6*N*D dense / 6*N_active*D MoE (train); 2*N*D per decoded token"
+
+
+def active_params(arch, cfg, n_params):
+    """N_active for MoE archs (routed experts scaled by top_k/E)."""
+    if arch.kind != "moe" or getattr(cfg, "moe", None) is None:
+        return n_params
+    moe = cfg.moe
+    n_scan = cfg.n_layers - cfg.moe_first_dense
+    expert_params = n_scan * moe.n_experts * 3 * cfg.d_model * moe.expert_ff
+    active_expert = expert_params * moe.top_k / moe.n_experts
+    return n_params - expert_params + active_expert
+
+
+def build_case(arch_id: str, shape_name: str, mesh, serve_ring: bool = False):
+    """Returns (jitted_fn, args_struct) ready to lower."""
+    arch = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and arch.long_policy == "skip":
+        return None, None, arch, None, f"skipped: {arch.skip_notes}"
+    if arch.kind == "rnnt" and shape.kind != "train":
+        return None, None, arch, None, "skipped: ASR training model (no serve step)"
+    if arch.kind == "hybrid" and shape.kind == "prefill":
+        # SSM prefill = the train-shape scan without the backward; lower
+        # the loss forward as the prefill proxy (documented).
+        pass
+
+    cfg = arch.config_for(shape_name)
+    variant = os.environ.get("REPRO_VARIANT")
+    if variant:
+        import dataclasses as _dc
+        import json as _json
+
+        cfg = _dc.replace(cfg, **_json.loads(variant))
+    bundle = build_model(cfg)
+    names = mesh.axis_names
+    n_client_shards = math.prod(
+        s for s, n in zip(mesh.devices.shape, names) if n in ("pod", "data"))
+
+    params_struct = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    pspecs = make_param_specs(params_struct, arch.param_rules)
+    pspecs = sanitize_specs(params_struct, pspecs, mesh)
+
+    args, aspecs = input_specs(arch, shape, cfg, bundle, n_client_shards)
+    aspecs = sanitize_specs(args, aspecs, mesh)
+
+    if shape.kind == "train":
+        plan = default_plan(arch.engine, n_client_shards)
+        if arch.engine == "fedsgd" and not os.environ.get("REPRO_FEDSGD_ZERO1"):
+            live_pspecs = fsdpify(params_struct, pspecs, mesh)   # ZeRO-3 default
+        else:
+            live_pspecs = pspecs                                  # ZeRO-1: weights TP-only
+        moment_specs = fsdpify(params_struct, pspecs, mesh)
+        state_struct = jax.eval_shape(
+            lambda p: init_server_state(plan, p), params_struct)
+        sspecs = server_state_specs(plan, live_pspecs, moment_specs)
+        round_step = make_round_step(bundle.loss_fn, plan, jax.random.PRNGKey(7))
+        fn = jax.jit(
+            round_step,
+            in_shardings=(named(mesh, sspecs), named(mesh, aspecs)),
+            out_shardings=(named(mesh, sspecs), None),
+        )
+        return fn, (state_struct, args), arch, cfg, None
+
+    if shape.kind == "prefill":
+        if bundle.prefill is None:
+            # hybrid: prefill proxy = forward loss (scan over sequence)
+            def fwd(params, batch):
+                return bundle.loss_fn(params, batch, None)[0]
+            fn = jax.jit(fwd, in_shardings=(named(mesh, pspecs), named(mesh, aspecs)),
+                         out_shardings=None)
+            return fn, (params_struct, args), arch, cfg, None
+        fn = jax.jit(
+            bundle.prefill,
+            in_shardings=(named(mesh, pspecs), named(mesh, aspecs)),
+            out_shardings=None,
+        )
+        return fn, (params_struct, args), arch, cfg, None
+
+    # decode
+    cache, tokens, pos = args
+    cache_specs, tok_specs, pos_specs = aspecs
+
+    def serve_step(params, cache, tokens, pos):
+        return bundle.decode_step(params, cache, tokens, pos)
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(named(mesh, pspecs), named(mesh, cache_specs),
+                      named(mesh, tok_specs), named(mesh, pos_specs)),
+        out_shardings=(None, named(mesh, cache_specs)),
+    )
+    return fn, (params_struct, cache, tokens, pos), arch, cfg, None
+
+
+def run_case(arch_id: str, shape_name: str, multi_pod: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = math.prod(mesh.devices.shape)
+    rec = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "chips": n_chips,
+    }
+    t0 = time.time()
+    try:
+        fn, args, arch, cfg, skip = build_case(arch_id, shape_name, mesh)
+        if skip:
+            rec["status"] = "skip"
+            rec["reason"] = skip
+            return rec
+        lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo_text = compiled.as_text()
+        if os.environ.get("REPRO_DUMP_HLO"):
+            with open(f"/tmp/hlo_{arch_id}_{shape_name}.txt", "w") as f:
+                f.write(hlo_text)
+        hlo_dir = os.environ.get("REPRO_HLO_DIR")
+        if hlo_dir:
+            import gzip
+            os.makedirs(hlo_dir, exist_ok=True)
+            tag = "mp" if multi_pod else "sp"
+            with gzip.open(os.path.join(
+                    hlo_dir, f"{arch_id}__{shape_name}__{tag}.hlo.gz"), "wt") as f:
+                f.write(hlo_text)
+        cost = hlo_cost.analyze(hlo_text)
+
+        compute_s = cost["flops"] / PEAK_FLOPS_BF16
+        memory_s = cost["bytes"] / HBM_BW
+        collective_s = cost["link_bytes"] / ICI_BW
+        terms = {"compute_s": compute_s, "memory_s": memory_s,
+                 "collective_s": collective_s}
+        dominant = max(terms, key=terms.get)
+
+        bundle = build_model(cfg)
+        params_struct = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+        n_params = sum(int(math.prod(l.shape)) for l in jax.tree.leaves(params_struct))
+        n_active = active_params(arch, cfg, n_params)
+        shape = SHAPES[shape_name]
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 6.0 * n_active * tokens
+        elif shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 2.0 * n_active * tokens
+        else:
+            tokens = shape.global_batch
+            model_flops = 2.0 * n_active * tokens
+        model_flops_per_chip = model_flops / n_chips
+
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "total_bytes": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                                + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+            },
+            "xla_cost_analysis": {k: ca.get(k) for k in ("flops", "bytes accessed")},
+            "hlo_cost": {
+                "flops_per_chip": cost["flops"],
+                "hbm_bytes_per_chip": cost["bytes"],
+                "collective_payload_bytes": cost["collective_bytes"],
+                "link_bytes": cost["link_bytes"],
+                "collectives": cost["collectives"],
+            },
+            "roofline": {
+                **terms,
+                "dominant": dominant,
+                "model_flops_per_chip": model_flops_per_chip,
+                "useful_flop_ratio": (model_flops_per_chip / cost["flops"]
+                                      if cost["flops"] else None),
+                "n_params": n_params,
+                "n_active_params": n_active,
+            },
+        })
+    except Exception as e:  # noqa: BLE001 — dry-run failures are data
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cases = []
+    if args.all:
+        for a in ASSIGNED + ["rnnt-librispeech"]:
+            for s in SHAPES:
+                cases.append((a, s, args.multi_pod))
+    else:
+        assert args.arch and args.shape
+        cases.append((args.arch, args.shape, args.multi_pod))
+
+    for arch_id, shape_name, mp in cases:
+        rec = run_case(arch_id, shape_name, multi_pod=mp)
+        tag = "mp" if mp else "sp"
+        fname = os.path.join(args.out, f"{arch_id}__{shape_name}__{tag}.json")
+        with open(fname, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                     f"collective={r['collective_s']:.3e}s dom={r['dominant']}")
+        elif status == "error":
+            extra = " " + rec["error"][:160]
+        print(f"[{status}] {arch_id} {shape_name} {rec['mesh']}{extra}", flush=True)
+        if status == "error":
+            sys.exitcode = 1
+
+
+if __name__ == "__main__":
+    main()

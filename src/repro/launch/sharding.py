@@ -1,0 +1,132 @@
+"""Parameter/batch sharding: path-regex rules -> PartitionSpecs.
+
+Each architecture config declares *intent* rules (MaxText-style logical
+rules): an ordered list of (path regex, PartitionSpec). ``make_param_specs``
+resolves them over the param pytree; ``sanitize_specs`` downgrades any
+axis whose dim doesn't divide the mesh axis size to replicated (e.g.
+kv-head params when n_kv < model-axis — the Megatron kv-replication
+fallback); ``fsdpify`` adds the ("pod","data") FSDP axis on the first
+free divisible dim for the fedsgd large-model engine.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+Rules = Sequence[tuple[str, P]]
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def make_param_specs(params: PyTree, rules: Rules) -> PyTree:
+    """First matching rule wins; default replicated P()."""
+    compiled = [(re.compile(rx), spec) for rx, spec in rules]
+
+    def resolve(path, leaf):
+        s = path_str(path)
+        for rx, spec in compiled:
+            if rx.search(s):
+                return spec
+        return P()
+
+    return jax.tree_util.tree_map_with_path(resolve, params)
+
+
+def _axis_size(mesh_shape: dict, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(mesh_shape[a] for a in axis)
+    return mesh_shape[axis]
+
+
+def _pad_spec(spec: P, ndim: int) -> list:
+    """Right-pad a spec with None to the leaf's rank. Rules must spell
+    out any leading layer-stack axes explicitly (e.g. (None, None,
+    "model") for a stacked (L, D, F) weight)."""
+    entries = list(spec)[:ndim]
+    return entries + [None] * (ndim - len(entries))
+
+
+def sanitize_specs(params: PyTree, specs: PyTree, mesh: Mesh) -> PyTree:
+    """Align specs to leaf ranks and drop mesh axes that don't divide
+    the dim size (e.g. kv-head params when n_kv < model-axis — the
+    Megatron kv-replication fallback)."""
+    shape_map = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def strip(axis):
+        """Drop axis names not present in this mesh (e.g. "pod" on the
+        single-pod mesh)."""
+        if axis is None:
+            return None
+        if isinstance(axis, (tuple, list)):
+            kept = tuple(a for a in axis if a in shape_map)
+            return kept if len(kept) > 1 else (kept[0] if kept else None)
+        return axis if axis in shape_map else None
+
+    def fix(leaf, spec):
+        out = []
+        for dim, axis in zip(leaf.shape, _pad_spec(spec, leaf.ndim)):
+            axis = strip(axis)
+            if axis is not None and dim % _axis_size(shape_map, axis) == 0:
+                out.append(axis)
+            else:
+                out.append(None)
+        return P(*out)
+
+    return jax.tree.map(fix, params, specs)
+
+
+def fsdpify(params: PyTree, specs: PyTree, mesh: Mesh,
+            fsdp_axes=("pod", "data"), min_size: int = 1 << 16) -> PyTree:
+    """Add the FSDP axis on the last unsharded, divisible dim of each
+    big leaf (fedsgd engine). Iterating last-to-first keeps the axis
+    off leading layer-stack dims. Leaves < min_size stay put."""
+    shape_map = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = tuple(a for a in fsdp_axes if a in shape_map)
+    if not axes:
+        return specs
+    fsdp_size = math.prod(shape_map[a] for a in axes)
+    fsdp_entry = axes if len(axes) > 1 else axes[0]
+
+    def fix(leaf, spec):
+        entries = _pad_spec(spec, leaf.ndim)
+        if leaf.size < min_size:
+            return P(*entries)
+        for i in range(leaf.ndim - 1, -1, -1):
+            if entries[i] is None and leaf.shape[i] % fsdp_size == 0:
+                entries[i] = fsdp_entry
+                break
+        return P(*entries)
+
+    return jax.tree.map(fix, params, specs)
+
+
+def named(mesh: Mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(mesh: Mesh):
+    """The client/batch sharding axes present in this mesh."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names) or (names[0],)

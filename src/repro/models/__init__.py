@@ -1,0 +1,13 @@
+"""Model zoo: the paper's RNN-T + the 10 assigned architectures.
+
+Every model exposes the same functional interface (pure pytrees):
+    init(key) -> params
+    loss_fn(params, batch, rng) -> (loss, aux)
+    prefill(params, batch) -> (logits, cache)
+    decode_step(params, cache, tokens, pos) -> (logits, cache)
+    init_cache(batch_size, seq_len) -> cache pytree
+plus ``param_spec_rules()`` (path-regex -> PartitionSpec) for pjit.
+"""
+from repro.models.model_zoo import build_model, ModelBundle
+
+__all__ = ["build_model", "ModelBundle"]

@@ -1,0 +1,243 @@
+"""Attention: blockwise (online-softmax) causal/windowed GQA + decode.
+
+Even the pure-jnp path is *blockwise* — a ``lax.scan`` over KV blocks
+carrying the running (max, denominator, accumulator) — so prefill at
+32k never materializes an S×S score matrix. This is the TPU-native
+working-set formulation (HBM->VMEM thinking); the Pallas kernel in
+``repro/kernels/flash_attention.py`` is the same algorithm with
+explicit BlockSpec VMEM tiles, and this module is its oracle.
+
+Decode attention (one query vs. a long cache) computes per-shard
+partials; under pjit with the cache's sequence axis sharded over
+``model``, the softmax's max/sum reductions lower to small all-reduces
+(the flash-decode logsumexp merge) instead of cache all-gathers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1.0e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    use_bias: bool = False
+    causal: bool = True
+    window: Optional[int] = None        # sliding-window width (None = full)
+    logit_softcap: float = 0.0
+    query_scale: Optional[float] = None  # default 1/sqrt(head_dim)
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    H, Kv, D, M = cfg.n_heads, cfg.n_kv, cfg.head_dim, cfg.d_model
+    p = {
+        "wq": dense_init(k1, M, H * D, dtype),
+        "wk": dense_init(k2, M, Kv * D, dtype),
+        "wv": dense_init(k3, M, Kv * D, dtype),
+        "wo": dense_init(k4, H * D, M, dtype),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((H * D,), dtype)
+        p["bk"] = jnp.zeros((Kv * D,), dtype)
+        p["bv"] = jnp.zeros((Kv * D,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((D,), dtype)
+        p["k_norm"] = jnp.ones((D,), dtype)
+    return p
+
+
+def _project_qkv(p, cfg: AttnConfig, x, positions):
+    """x: (B, S, M) -> q (B,S,H,D), k/v (B,S,Kv,D), rope applied."""
+    B, S, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.use_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def blockwise_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_softcap: float = 0.0,
+    q_offset: int = 0,
+    block_kv: int = 512,
+    query_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Online-softmax attention. q: (B, Sq, H, D); k,v: (B, Sk, Kv, D).
+
+    GQA via head grouping. Returns (B, Sq, H, D) in q.dtype.
+    """
+    B, Sq, H, D = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Kv
+    scale = query_scale if query_scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+
+    # GQA: repeat kv to H so every tensor keeps the head axis intact —
+    # under pjit this preserves head-aligned model-parallel sharding
+    # (a (Kv, G) reshape would split the sharded head dim and force
+    # GSPMD to replicate the whole attention computation).
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+
+    block_kv = min(block_kv, Sk)
+    while Sk % block_kv:         # largest divisor of Sk at ~the target block
+        block_kv -= 1
+    n_blocks = Sk // block_kv
+
+    kb = k.astype(jnp.float32).reshape(B, n_blocks, block_kv, H, D).swapaxes(0, 1)
+    vb = v.astype(jnp.float32).reshape(B, n_blocks, block_kv, H, Dv).swapaxes(0, 1)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, blk_idx = inp
+        k_pos = blk_idx * block_kv + jnp.arange(block_kv)
+        # scores: (B, Sq, H, block_kv)
+        s = jnp.einsum("bqhd,bjhd->bqhj", qf, kblk)
+        if logit_softcap > 0:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        mask = jnp.ones((Sq, block_kv), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new == NEG_INF)
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, :], p, 0.0)
+        corr = jnp.exp(jnp.where(m <= NEG_INF / 2, NEG_INF, m) - m_safe)
+        corr = jnp.where(m <= NEG_INF / 2, 0.0, corr)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bqhj,bjhd->bqhd", p, vblk)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, H), NEG_INF)
+    l0 = jnp.zeros((B, Sq, H))
+    acc0 = jnp.zeros((B, Sq, H, Dv))
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, acc0),
+                                  (kb, vb, jnp.arange(n_blocks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+    *,
+    window: Optional[int] = None,
+    ring: bool = False,
+    logit_softcap: float = 0.0,
+    query_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """One-token attention. q: (B, H, D); caches: (B, S, Kv, D);
+    pos: scalar int32 — index of the *current* token (already written).
+
+    ``ring=True`` means the cache is a ring buffer of width S=window:
+    slot j holds absolute position pos - ((pos - j) mod S).
+    """
+    B, H, D = q.shape
+    S, Kv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kv
+    scale = query_scale if query_scale is not None else D ** -0.5
+    # Grouped-query form: the cache stays (B, S, Kv, D) — decode's
+    # parallel axis is the (model-sharded) sequence, so repeating kv to
+    # H would force GSPMD to reshard multi-GB caches (observed); the
+    # softmax's max/sum over the S shards lower to scalar-sized
+    # all-reduces (the flash-decode logsumexp merge).
+    qf = q.astype(jnp.float32).reshape(B, Kv, G, D) * scale
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bjkd->bkgj", qf, kf)          # (B, Kv, G, S)
+    if logit_softcap > 0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    j = jnp.arange(S)
+    if ring:
+        abs_pos = pos - jnp.mod(pos - j, S)
+    else:
+        abs_pos = j
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    if window is not None:
+        valid &= abs_pos > pos - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    out = jnp.einsum("bkgj,bjkd->bkgd", p, vf) / jnp.maximum(
+        p.sum(axis=-1), 1e-30
+    )[..., None]
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def attn_forward(p, cfg: AttnConfig, x, positions=None, block_kv: int = 512):
+    """Full-sequence (train / prefill) attention. Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    o = blockwise_attention(
+        q, k, v,
+        causal=cfg.causal, window=cfg.window,
+        logit_softcap=cfg.logit_softcap, block_kv=min(block_kv, S),
+        query_scale=cfg.query_scale,
+    )
+    out = o.reshape(B, S, cfg.n_heads * cfg.head_dim) @ p["wo"].astype(x.dtype)
+    return out, (k, v)
+
+
+def attn_decode(p, cfg: AttnConfig, x, k_cache, v_cache, pos, ring: bool = False):
+    """Single-token decode. x: (B, 1, M); caches (B, S, Kv, D); pos scalar.
+
+    Writes the new token's k/v at slot (pos % S if ring else pos), then
+    attends. Returns (out (B,1,M), k_cache, v_cache).
+    """
+    B = x.shape[0]
+    S = k_cache.shape[1]
+    positions = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 else pos
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    slot = jnp.mod(pos, S) if ring else pos
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+    o = decode_attention(
+        q[:, 0], k_cache, v_cache, pos,
+        window=cfg.window, ring=ring, logit_softcap=cfg.logit_softcap,
+        query_scale=cfg.query_scale,
+    )
+    out = o.reshape(B, 1, cfg.n_heads * cfg.head_dim) @ p["wo"].astype(x.dtype)
+    return out, k_cache, v_cache

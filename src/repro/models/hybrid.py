@@ -1,0 +1,226 @@
+"""Zamba2-style hybrid (arXiv:2411.15242): a Mamba2 backbone with a
+single *shared* attention+MLP block applied periodically.
+
+Layout for n_layers Mamba2 layers with the shared block every
+``attn_every``: G full groups of [shared-attn -> attn_every x mamba]
+plus a tail [shared-attn -> rem x mamba]. The shared block's weights
+are identical at every application (that is Zamba's trick — attention
+quality at ~1/13 of the parameter cost) but each application has its
+own KV cache. Zamba2's concatenated-embedding input to the shared
+block is simplified to the plain residual stream (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import AttnConfig, attn_init, attn_forward, attn_decode
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    lm_loss,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+    stacked,
+)
+from repro.models.ssm import MambaConfig, mamba_forward, mamba_init, mamba_init_state, mamba_step
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    name: str
+    n_layers: int                 # number of Mamba2 layers
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int                     # shared attn block MLP
+    vocab: int
+    attn_every: int = 6
+    ssm_state: int = 64
+    ssm_headdim: int = 64
+    ssm_chunked: bool = False     # chunked SSD formulation (see ssm.py)
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    loss_chunk: int = 256
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def n_groups(self):
+        return self.n_layers // self.attn_every
+
+    @property
+    def tail(self):
+        return self.n_layers - self.n_groups * self.attn_every
+
+    @property
+    def n_attn_applications(self):
+        return self.n_groups + (1 if self.tail else 0)
+
+    def mamba_cfg(self) -> MambaConfig:
+        return MambaConfig(d_model=self.d_model, headdim=self.ssm_headdim,
+                           d_state=self.ssm_state)
+
+    def attn_cfg(self) -> AttnConfig:
+        return AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
+                          n_kv=self.n_kv, head_dim=self.head_dim)
+
+
+def _mamba_layer_init(key, cfg: HybridConfig):
+    return {"norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "mamba": mamba_init(key, cfg.mamba_cfg(), cfg.pdtype)}
+
+
+def init_params(cfg: HybridConfig, key) -> dict:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    dt = cfg.pdtype
+    G, E = cfg.n_groups, cfg.attn_every
+    params = {
+        "embed": embed_init(k1, cfg.vocab, cfg.d_model, dt),
+        "shared_attn": {
+            "norm1": jnp.ones((cfg.d_model,), dt),
+            "norm2": jnp.ones((cfg.d_model,), dt),
+            "attn": attn_init(k2, cfg.attn_cfg(), dt),
+            "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, gated=True, dtype=dt),
+        },
+        "groups": stacked(lambda k: stacked(_mamba_layer_init, k, E, cfg), k4, G),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "unembed": dense_init(k5, cfg.d_model, cfg.vocab, dt),
+    }
+    if cfg.tail:
+        params["tail"] = stacked(_mamba_layer_init, k6, cfg.tail, cfg)
+    return params
+
+
+def _shared_block_forward(cfg: HybridConfig, sp, x):
+    h = rms_norm(x, sp["norm1"])
+    a, kv = attn_forward(sp["attn"], cfg.attn_cfg(), h, block_kv=min(512, x.shape[1]))
+    x = x + a
+    h2 = rms_norm(x, sp["norm2"])
+    x = x + mlp_apply(sp["mlp"], h2, "silu")
+    return x, kv
+
+
+def _mamba_layer_fwd(cfg: HybridConfig, lp, x):
+    h = rms_norm(x, lp["norm"])
+    if cfg.ssm_chunked:
+        from repro.models.ssm import mamba_forward_chunked
+
+        return x + mamba_forward_chunked(lp["mamba"], cfg.mamba_cfg(), h)
+    return x + mamba_forward(lp["mamba"], cfg.mamba_cfg(), h)
+
+
+def forward(cfg: HybridConfig, params, tokens):
+    x = params["embed"].astype(cfg.cdtype)[tokens]
+    sp = params["shared_attn"]
+
+    @jax.checkpoint
+    def mamba_body(xi, lp):
+        return _mamba_layer_fwd(cfg, lp, xi), None
+
+    shared_fwd = jax.checkpoint(
+        lambda xc, sp_: _shared_block_forward(cfg, sp_, xc)[0])
+
+    def group_body(xc, gp):
+        xc = shared_fwd(xc, sp)
+        xc, _ = jax.lax.scan(mamba_body, xc, gp)
+        return xc, None
+
+    x, _ = jax.lax.scan(group_body, x, params["groups"])
+    if cfg.tail:
+        x = shared_fwd(x, sp)
+        x, _ = jax.lax.scan(mamba_body, x, params["tail"])
+    return rms_norm(x, params["final_norm"])
+
+
+def loss_fn(cfg: HybridConfig, params, batch, rng=None):
+    h = forward(cfg, params, batch["tokens"])
+    loss = lm_loss(h, params["unembed"].astype(cfg.cdtype), batch["tokens"],
+                   chunk=min(cfg.loss_chunk, h.shape[1]),
+                   weight=batch.get("weight"))
+    return loss, {"lm_loss": loss}
+
+
+# -------------------------------------------------------------- serving
+
+def init_cache(cfg: HybridConfig, batch: int, seq_len: int):
+    dt = cfg.cdtype
+    mc = cfg.mamba_cfg()
+    G, E = cfg.n_groups, cfg.attn_every
+    one = mamba_init_state(mc, batch, dt)
+
+    def rep(tree, *dims):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, dims + a.shape).copy() if dims else a, tree)
+
+    cache = {
+        "attn_k": jnp.zeros((cfg.n_attn_applications, batch, seq_len, cfg.n_kv, cfg.head_dim), dt),
+        "attn_v": jnp.zeros((cfg.n_attn_applications, batch, seq_len, cfg.n_kv, cfg.head_dim), dt),
+        "groups": rep(one, G, E),
+    }
+    if cfg.tail:
+        cache["tail"] = rep(one, cfg.tail)
+    return cache
+
+
+def _shared_block_decode(cfg: HybridConfig, sp, x, kc, vc, pos):
+    h = rms_norm(x, sp["norm1"])
+    a, kc, vc = attn_decode(sp["attn"], cfg.attn_cfg(), h, kc, vc, pos)
+    x = x + a
+    h2 = rms_norm(x, sp["norm2"])
+    x = x + mlp_apply(sp["mlp"], h2, "silu")
+    return x, kc, vc
+
+
+def decode_step(cfg: HybridConfig, params, cache, tokens, pos):
+    """tokens (B, 1); pos scalar. Returns (logits (B, V), cache)."""
+    x = params["embed"].astype(cfg.cdtype)[tokens]
+    sp = params["shared_attn"]
+    mc = cfg.mamba_cfg()
+    G = cfg.n_groups
+
+    def group_body(xc, inp):
+        gp, gstate, kc, vc = inp
+        xc, kc, vc = _shared_block_decode(cfg, sp, xc, kc, vc, pos)
+
+        def mamba_body(xi, inp2):
+            lp, st = inp2
+            out, st2 = mamba_step(lp["mamba"], mc, rms_norm(xi, lp["norm"]), st)
+            return xi + out, st2
+
+        xc, gstate = jax.lax.scan(mamba_body, xc, (gp, gstate))
+        return xc, (gstate, kc, vc)
+
+    x, (gstates, kcs, vcs) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], cache["groups"], cache["attn_k"][:G], cache["attn_v"][:G]))
+    new_cache = dict(cache, groups=gstates)
+    attn_k = cache["attn_k"].at[:G].set(kcs)
+    attn_v = cache["attn_v"].at[:G].set(vcs)
+    if cfg.tail:
+        x, kt, vt = _shared_block_decode(cfg, sp, x, cache["attn_k"][G], cache["attn_v"][G], pos)
+
+        def mamba_body(xi, inp2):
+            lp, st = inp2
+            out, st2 = mamba_step(lp["mamba"], mc, rms_norm(xi, lp["norm"]), st)
+            return xi + out, st2
+
+        x, tstates = jax.lax.scan(mamba_body, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = tstates
+        attn_k = attn_k.at[G].set(kt)
+        attn_v = attn_v.at[G].set(vt)
+    new_cache["attn_k"] = attn_k
+    new_cache["attn_v"] = attn_v
+    x = rms_norm(x, params["final_norm"])
+    logits = (x[:, 0] @ params["unembed"].astype(cfg.cdtype)).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,177 @@
+"""Shared neural-net layers (pure functions over pytree params).
+
+Conventions:
+- params are nested dicts of jnp arrays; init fns take an explicit key.
+- compute dtype is the caller's (we cast weights at use); params are
+  created in ``param_dtype``.
+- big stacks are created with a leading layer axis and consumed with
+  ``jax.lax.scan`` so HLO size is depth-independent (95-layer configs
+  must compile on a single-core container).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- init
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32, scale: float = 1.0):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * scale / jnp.sqrt(d)).astype(dtype)
+
+
+def stacked(init_fn: Callable, key, n: int, *args, **kwargs):
+    """Stack ``n`` independent inits along a leading axis (for lax.scan)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, *args, **kwargs))(keys)
+
+
+# ---------------------------------------------------------------- norms
+
+def rms_norm(x, scale, eps: float = 1e-6, plus_one: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    if plus_one:  # gemma convention
+        s = 1.0 + s
+    return (x * s).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32) / (head_dim // 2))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S) int32.
+
+    Split-half convention: pairs (x[..., :D/2], x[..., D/2:]).
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if x.ndim == ang.ndim + 1:                         # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------- mlp
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool = True, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": dense_init(k1, d_model, d_ff, dtype), "w_down": dense_init(k3, d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(k2, d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p, x, act: str = "silu"):
+    actf = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "gelu_tanh": lambda v: jax.nn.gelu(v, approximate=True), "relu": jax.nn.relu}[act]
+    up = x @ p["w_up"].astype(x.dtype)
+    if "w_gate" in p:
+        up = actf(x @ p["w_gate"].astype(x.dtype)) * up
+    else:
+        up = actf(up)
+    return up @ p["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- losses
+
+def chunked_softmax_xent(h, unembed, targets, mask=None, chunk: int = 256, logit_softcap: float = 0.0):
+    """Next-token CE without materializing (B, S, V) logits.
+
+    h: (B, S, D); unembed: (D, V); targets: (B, S) int32; mask: (B, S).
+    Scans over S in chunks; each chunk's logits are transient (and
+    vocab-sharded under pjit). Returns (sum_loss, sum_mask).
+    """
+    B, S, D = h.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    n_chunks = max(1, S // chunk)
+    while S % n_chunks:          # largest divisor of S near the target chunk
+        n_chunks -= 1
+    c = S // n_chunks
+    hs = h.reshape(B, n_chunks, c, D).swapaxes(0, 1)           # (n, B, c, D)
+    ts = targets.reshape(B, n_chunks, c).swapaxes(0, 1)
+    ms = mask.reshape(B, n_chunks, c).swapaxes(0, 1)
+
+    def body(carry, inp):
+        hh, tt, mm = inp
+        logits = (hh @ unembed.astype(hh.dtype)).astype(jnp.float32)
+        if logit_softcap > 0:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tt[..., None], axis=-1)[..., 0]
+        loss = (lse - gold) * mm
+        return (carry[0] + loss.sum(), carry[1] + mm.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(body),
+                                 (jnp.zeros(()), jnp.zeros(())), (hs, ts, ms))
+    return tot, cnt
+
+
+def lm_loss(h, unembed, tokens, chunk: int = 256, logit_softcap: float = 0.0, weight=None):
+    """Shifted next-token loss over (B, S) tokens given final hidden h.
+    ``weight``: optional per-example (B,) weights (0 = padding example,
+    used by the federated engine's fixed-shape round batches)."""
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    if weight is not None:
+        mask = mask * weight[:, None].astype(mask.dtype)
+    tot, cnt = chunked_softmax_xent(h, unembed, targets, mask, chunk, logit_softcap)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def chunked_scan(body, carry, xs, chunk: int, remat: bool = True, unroll: int = 1):
+    """O(sqrt(S))-memory scan: outer scan over chunks whose (optionally
+    rematerialized) body runs an inner scan. Backward stores only chunk
+    -boundary carries and recomputes within a chunk — the memory fix
+    for long recurrent scans (Mamba2 / RWKV / LSTM time axes).
+
+    xs leaves: (S, ...) with S % chunk == 0.
+    """
+    S = jax.tree.leaves(xs)[0].shape[0]
+    if S % chunk or S <= chunk:
+        return jax.lax.scan(body, carry, xs, unroll=unroll)
+    n = S // chunk
+    xs_c = jax.tree.map(lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+
+    def chunk_body(c, xc):
+        return jax.lax.scan(body, c, xc, unroll=unroll)
+
+    if remat:
+        chunk_body = jax.checkpoint(chunk_body)
+    carry, ys_c = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((S,) + a.shape[2:]), ys_c)
+    return carry, ys

@@ -1,0 +1,117 @@
+"""LSTM stack (the paper's RNN-T encoder substrate).
+
+Gates are computed as one fused (in+hidden) x 4h matmul per step; the
+elementwise gate nonlinearities + state update are the Pallas
+``lstm_gates`` kernel's target (ref path inline here). Sequence
+iteration is ``lax.scan``; multi-layer stacks scan over a stacked
+parameter axis when dims are homogeneous, else loop per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class LSTMConfig:
+    d_in: int
+    d_hidden: int
+    n_layers: int
+
+
+def lstm_cell_init(key, d_in: int, d_hidden: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_ih": dense_init(k1, d_in, 4 * d_hidden, dtype),
+        "w_hh": dense_init(k2, d_hidden, 4 * d_hidden, dtype),
+        "b": jnp.zeros((4 * d_hidden,), dtype),
+    }
+
+
+def lstm_gates(gates: jnp.ndarray, c: jnp.ndarray):
+    """Fused gate nonlinearities + cell update (jnp reference of the
+    Pallas kernel). gates: (..., 4h) pre-activation [i, f, g, o]."""
+    h4 = gates.shape[-1]
+    h = h4 // 4
+    gf = gates.astype(jnp.float32)
+    i = jax.nn.sigmoid(gf[..., :h])
+    f = jax.nn.sigmoid(gf[..., h : 2 * h] + 1.0)  # forget-gate bias +1
+    g = jnp.tanh(gf[..., 2 * h : 3 * h])
+    o = jax.nn.sigmoid(gf[..., 3 * h :])
+    c_new = f * c.astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new.astype(gates.dtype), c_new.astype(c.dtype)
+
+
+def lstm_cell_step(p, x, h, c):
+    """x: (B, d_in); h, c: (B, d_hidden)."""
+    gates = x @ p["w_ih"].astype(x.dtype) + h @ p["w_hh"].astype(x.dtype) + p["b"].astype(x.dtype)
+    return lstm_gates(gates, c)
+
+
+def lstm_layer(p, xs, h0=None, c0=None, unroll: int = 1, chunk: int = 0):
+    """xs: (B, S, d_in) -> (B, S, d_hidden), (h, c) final.
+
+    ``unroll`` replicates the step body inside each while iteration so
+    the recurrent weight matrix is fetched once per ``unroll`` steps
+    (the §Perf weight-amortization lever; on TPU the Pallas kernel
+    keeps it VMEM-resident outright)."""
+    B, S, _ = xs.shape
+    d_h = p["w_hh"].shape[0]
+    h = jnp.zeros((B, d_h), xs.dtype) if h0 is None else h0
+    c = jnp.zeros((B, d_h), jnp.float32) if c0 is None else c0
+    # hoist the input matmul out of the scan (one big MXU matmul)
+    xg = xs @ p["w_ih"].astype(xs.dtype) + p["b"].astype(xs.dtype)    # (B, S, 4h)
+
+    def step(carry, xg_t):
+        h, c = carry
+        gates = xg_t + h @ p["w_hh"].astype(xg_t.dtype)
+        h, c = lstm_gates(gates, c)
+        return (h, c), h
+
+    if chunk:
+        from repro.models.layers import chunked_scan
+
+        (h, c), ys = chunked_scan(step, (h, c), xg.swapaxes(0, 1),
+                                  chunk=chunk, unroll=unroll)
+    else:
+        (h, c), ys = jax.lax.scan(step, (h, c), xg.swapaxes(0, 1),
+                                  unroll=unroll)
+    return ys.swapaxes(0, 1), (h, c)
+
+
+def lstm_stack_init(key, cfg: LSTMConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, cfg.n_layers)
+    return [
+        lstm_cell_init(keys[i], cfg.d_in if i == 0 else cfg.d_hidden, cfg.d_hidden, dtype)
+        for i in range(cfg.n_layers)
+    ]
+
+
+def lstm_stack(params, xs, unroll: int = 1, chunk: int = 0):
+    """List-of-layers forward. Returns (B, S, d_hidden)."""
+    states = []
+    for p in params:
+        xs, st = lstm_layer(p, xs, unroll=unroll, chunk=chunk)
+        states.append(st)
+    return xs, states
+
+
+def lstm_stack_step(params, x, states):
+    """Single-step (decode). x: (B, d_in); states: [(h, c)] per layer."""
+    new_states = []
+    for p, (h, c) in zip(params, states):
+        x, c = lstm_cell_step(p, x, h, c)
+        new_states.append((x, c))
+    return x, new_states
+
+
+def lstm_stack_init_state(cfg: LSTMConfig, batch: int, dtype=jnp.float32):
+    return [
+        (jnp.zeros((batch, cfg.d_hidden), dtype), jnp.zeros((batch, cfg.d_hidden), jnp.float32))
+        for _ in range(cfg.n_layers)
+    ]

@@ -1,0 +1,126 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV states are compressed into a rank-``kv_lora`` latent c_kv plus a
+single shared RoPE key head; the cache stores only (c_kv, k_rope) —
+(S, kv_lora + rope_dim) per token instead of (S, 2·H·D). Per-head
+no-RoPE keys/values are re-expanded from the latent at attention time.
+This is the architecture's whole point: the decode-time memory term of
+the roofline drops by ~an order of magnitude vs. GQA.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1.0e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+    rope_theta: float = 10000.0
+
+
+def mla_init(key, cfg: MLAConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    H = cfg.n_heads
+    M = cfg.d_model
+    return {
+        "wq": dense_init(ks[0], M, H * (cfg.qk_nope_dim + cfg.qk_rope_dim), dtype),
+        "w_dkv": dense_init(ks[1], M, cfg.kv_lora, dtype),          # down-proj latent
+        "w_krope": dense_init(ks[2], M, cfg.qk_rope_dim, dtype),    # shared rope key
+        "w_uk": dense_init(ks[3], cfg.kv_lora, H * cfg.qk_nope_dim, dtype),
+        "w_uv": dense_init(ks[4], cfg.kv_lora, H * cfg.v_dim, dtype),
+        "wo": dense_init(ks[5], H * cfg.v_dim, M, dtype),
+        "kv_norm": jnp.ones((cfg.kv_lora,), dtype),
+    }
+
+
+def _queries(p, cfg: MLAConfig, x, positions):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, cfg: MLAConfig, x, positions):
+    c_kv = rms_norm(x @ p["w_dkv"].astype(x.dtype), p["kv_norm"])     # (B, S, R)
+    k_rope = x @ p["w_krope"].astype(x.dtype)                          # (B, S, dr)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def _expand(p, cfg: MLAConfig, c_kv):
+    """latent (B, S, R) -> k_nope (B, S, H, dn), v (B, S, H, dv)."""
+    B, S, _ = c_kv.shape
+    H = cfg.n_heads
+    k_nope = (c_kv @ p["w_uk"].astype(c_kv.dtype)).reshape(B, S, H, cfg.qk_nope_dim)
+    v = (c_kv @ p["w_uv"].astype(c_kv.dtype)).reshape(B, S, H, cfg.v_dim)
+    return k_nope, v
+
+
+def mla_forward(p, cfg: MLAConfig, x, positions=None, block_kv: int = 512):
+    """Full-sequence causal MLA. Returns (out, (c_kv, k_rope)) for caching."""
+    from repro.models.attention import blockwise_attention
+
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c_kv, k_rope = _latents(p, cfg, x, positions)
+    k_nope, v = _expand(p, cfg, c_kv)
+    H = cfg.n_heads
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)                     # (B,S,H,dn+dr)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  (B, S, H, cfg.qk_rope_dim))], axis=-1)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    o = blockwise_attention(q, k, v, causal=True, block_kv=min(block_kv, S),
+                            query_scale=scale)
+    out = o.reshape(B, S, H * cfg.v_dim) @ p["wo"].astype(x.dtype)
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(p, cfg: MLAConfig, x, ckv_cache, krope_cache, pos):
+    """Single-token decode against the *compressed* cache.
+
+    ckv_cache: (B, S, R); krope_cache: (B, S, dr); pos: scalar.
+    Scores are computed in latent space via the absorbed-projection
+    trick: q_nope^T k_nope = (q_nope W_uk^T) c_kv, so the per-head key
+    never rematerializes over S. Values expand per-head after the
+    softmax-weighted latent sum (another rank-R absorption).
+    """
+    B = x.shape[0]
+    S, R = ckv_cache.shape[1], ckv_cache.shape[2]
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_dim
+    positions = jnp.broadcast_to(pos[None], (B, 1))
+    q_nope, q_rope = _queries(p, cfg, x, positions)        # (B,1,H,dn),(B,1,H,dr)
+    c_kv, k_rope = _latents(p, cfg, x, positions)          # (B,1,R),(B,1,dr)
+    ckv_cache = jax.lax.dynamic_update_slice(ckv_cache, c_kv.astype(ckv_cache.dtype), (0, pos, 0))
+    krope_cache = jax.lax.dynamic_update_slice(krope_cache, k_rope.astype(krope_cache.dtype), (0, pos, 0))
+
+    # absorb W_uk into q: (B,H,dn) @ (R,H,dn)->(B,H,R)
+    w_uk = p["w_uk"].astype(x.dtype).reshape(R, H, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    s = jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32), ckv_cache.astype(jnp.float32))
+    s = s + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                       krope_cache.astype(jnp.float32))
+    s = s * ((dn + dr) ** -0.5)
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    lat = jnp.einsum("bhs,bsr->bhr", w, ckv_cache.astype(jnp.float32))  # (B,H,R)
+    w_uv = p["w_uv"].astype(x.dtype).reshape(R, H, dv)
+    o = jnp.einsum("bhr,rhd->bhd", lat.astype(x.dtype), w_uv)           # (B,H,dv)
+    out = o.reshape(B, 1, H * dv) @ p["wo"].astype(x.dtype)
+    return out, ckv_cache, krope_cache

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded sort-based
+dispatch, expert-parallel sharding, load-balance aux loss.
+
+Dispatch is *sort-based and per-batch-row* (vmapped over B): each row
+sorts its (token, choice) pairs by expert id and scatters into a
+static (E, C, D) capacity buffer; overflow tokens drop to an
+out-of-bounds slot (``mode='drop'``) and fall through the residual.
+Keeping the sort row-local means the batch axis stays sharded over
+``data`` and only the (B, E, C, D) buffer reshards token->expert — the
+all-to-all a production expert-parallel MoE performs — because the
+expert axis of the weight stacks is sharded over ``model``.
+Memory is O(B·S·K·D·capacity_factor), never O(T·E·C).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, mlp_apply, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    expert_ff: int
+    n_shared: int = 0            # dense "shared experts" (DeepSeek-V2 style)
+    shared_ff: int = 0           # hidden dim of the shared-expert MLP
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    renormalize: bool = True     # renormalize top-k gates to sum to 1
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32):
+    kr, ke1, ke2, ke3, ks = jax.random.split(key, 5)
+    E, F = cfg.n_experts, cfg.expert_ff
+    scale = d_model ** -0.5
+    p = {
+        "router": dense_init(kr, d_model, E, jnp.float32),  # router kept f32
+        "w_gate": (jax.random.normal(ke1, (E, d_model, F)) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ke2, (E, d_model, F)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ke3, (E, F, d_model)) * (F ** -0.5)).astype(dtype),
+    }
+    if cfg.n_shared > 0:
+        shared_ff = cfg.shared_ff or cfg.n_shared * cfg.expert_ff
+        p["shared"] = mlp_init(ks, d_model, shared_ff, gated=True, dtype=dtype)
+    return p
+
+
+def _route(logits, cfg: MoEConfig):
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.renormalize:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    return probs, gate_vals, expert_idx
+
+
+def _dispatch_row(xt, gate_vals, expert_idx, E: int, C: int):
+    """One batch row. xt: (S, D); gate/expert: (S, K).
+    Returns (buf (E, C, D), slot (S*K,), keep (S*K,), tok (S*K,), gate (S*K,))."""
+    S, D = xt.shape
+    K = expert_idx.shape[-1]
+    flat_e = expert_idx.reshape(S * K)
+    flat_g = gate_vals.reshape(S * K)
+    flat_t = jnp.arange(S * K) // K
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.zeros((E,), jnp.int32).at[se].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(S * K) - starts[se]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + jnp.clip(pos_in_e, 0, C - 1), E * C)
+    buf = jnp.zeros((E * C, D), xt.dtype).at[slot].set(xt[st], mode="drop")
+    return buf.reshape(E, C, D), slot, keep, st, sg
+
+
+def _combine_row(eout, slot, keep, st, sg, S: int):
+    """eout: (E, C, D) -> out (S, D), gathering each kept slot back."""
+    E, C, D = eout.shape
+    flat = eout.reshape(E * C, D)
+    vals = flat.at[slot].get(mode="fill", fill_value=0.0)
+    w = (sg * keep.astype(sg.dtype))[:, None].astype(vals.dtype)
+    return jnp.zeros((S, D), eout.dtype).at[st].add(vals * w)
+
+
+def moe_apply(p, cfg: MoEConfig, x, act: str = "silu"):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(1, int(cfg.capacity_factor * S * K / E))
+    C = min(C, S * K)
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (B, S, E)
+    probs, gate_vals, expert_idx = _route(logits, cfg)
+
+    buf, slot, keep, st, sg = jax.vmap(
+        lambda xr, gr, er: _dispatch_row(xr, gr, er, E, C)
+    )(x, gate_vals, expert_idx)                                         # buf (B, E, C, D)
+
+    actf = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_tanh": lambda v: jax.nn.gelu(v, approximate=True)}[act]
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(x.dtype))
+    eout = jnp.einsum("becf,efd->becd", actf(g) * u, p["w_down"].astype(x.dtype))
+
+    out = jax.vmap(lambda eo, sl, kp, t, g_: _combine_row(eo, sl, kp, t, g_, S))(
+        eout, slot, keep, st, sg
+    )
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    top1 = jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32)
+    frac_tokens = jnp.mean(top1, axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.aux_loss_weight * E * jnp.sum(frac_tokens * frac_probs)
+
+    if cfg.n_shared > 0:
+        out = out + mlp_apply(p["shared"], x, act)
+
+    return out, aux

@@ -1,0 +1,221 @@
+"""Mamba2 (state-space duality) block — the zamba2 substrate.
+
+Faithful to the Mamba2 recurrence with scalar-per-head decay:
+    h_t = exp(A · dt_t) · h_{t-1} + dt_t · (x_t ⊗ B_t)      h: (P, N)
+    y_t = h_t C_t + D · x_t
+with a depthwise causal conv over (x, B, C), softplus dt, and a gated
+RMSNorm before out-projection. Training uses a time scan (the baseline;
+the chunked SSD formulation is the §Perf optimization target) — decode
+is the natural O(1)-state step, which is why the hybrid archs run
+long_500k natively.
+
+Projections are stored *per segment* (z / x / BC / dt) rather than as
+one fused in_proj so the head-aligned dims (z, x, dt) can shard over
+the mesh ``model`` axis while the head-shared B/C stay replicated —
+the tensor-parallel layout a production Mamba uses. (XLA fuses the
+segment matmuls back together where profitable.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_inner: int = 0         # default 2*d_model
+    headdim: int = 64        # P
+    d_state: int = 64        # N
+    conv_width: int = 4
+
+    def __post_init__(self):
+        if self.d_inner == 0:
+            object.__setattr__(self, "d_inner", 2 * self.d_model)
+
+    @property
+    def n_heads(self):
+        assert self.d_inner % self.headdim == 0
+        return self.d_inner // self.headdim
+
+
+def mamba_init(key, cfg: MambaConfig, dtype=jnp.float32):
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    H, N = cfg.n_heads, cfg.d_state
+    d_in = cfg.d_inner
+    return {
+        "in_z": dense_init(k1, cfg.d_model, d_in, dtype),
+        "in_x": dense_init(k2, cfg.d_model, d_in, dtype),
+        "in_bc": dense_init(k3, cfg.d_model, 2 * N, dtype),
+        "in_dt": dense_init(k4, cfg.d_model, H, dtype),
+        "conv_x_w": (jax.random.normal(k5, (cfg.conv_width, d_in)) * 0.1).astype(dtype),
+        "conv_x_b": jnp.zeros((d_in,), dtype),
+        "conv_bc_w": (jax.random.normal(k6, (cfg.conv_width, 2 * N)) * 0.1).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * N,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        # Mamba2 convention: dt ~ 0.05 at init (softplus^-1); a zero
+        # bias gives dt~0.7, whose 40+-step decay products underflow
+        # and NaN the VJP for the fast heads.
+        "dt_bias": jnp.full((H,), math.log(math.expm1(0.05)), dtype),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(k7, d_in, cfg.d_model, dtype),
+    }
+
+
+def _conv(w, b, x, conv_state=None):
+    """Depthwise causal conv, width W. x: (B, S, C); returns (out, new
+    left-context state (B, W-1, C)) — silu applied."""
+    W = w.shape[0]
+    if conv_state is None:
+        xp = jnp.concatenate([jnp.zeros_like(x[:, : W - 1]), x], axis=1)
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w.astype(x.dtype)[i] for i in range(W))
+    out = jax.nn.silu(out + b.astype(x.dtype))
+    return out, xp[:, -(W - 1):]
+
+
+def _project(p, cfg: MambaConfig, x, conv_states=None):
+    """x (B, S, D) -> z, xin (B,S,H,P), Bc, Cc (B,S,N), dt (B,S,H), states."""
+    B, S, _ = x.shape
+    H, P, N = cfg.n_heads, cfg.headdim, cfg.d_state
+    z = x @ p["in_z"].astype(x.dtype)
+    xi = x @ p["in_x"].astype(x.dtype)
+    bc = x @ p["in_bc"].astype(x.dtype)
+    dt = x @ p["in_dt"].astype(x.dtype)
+    cs_x = None if conv_states is None else conv_states["x"]
+    cs_bc = None if conv_states is None else conv_states["bc"]
+    xi, ns_x = _conv(p["conv_x_w"], p["conv_x_b"], xi, cs_x)
+    bc, ns_bc = _conv(p["conv_bc_w"], p["conv_bc_b"], bc, cs_bc)
+    xin = xi.reshape(B, S, H, P)
+    Bc, Cc = bc[..., :N], bc[..., N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, xin, Bc, Cc, dt, {"x": ns_x, "bc": ns_bc}
+
+
+def mamba_forward(p, cfg: MambaConfig, x):
+    """Full-sequence training forward. x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    H, P, N = cfg.n_heads, cfg.headdim, cfg.d_state
+    z, xin, Bc, Cc, dt, _ = _project(p, cfg, x)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (H,)
+    decay = jnp.exp(dt * A)                                     # (B,S,H)
+
+    def step(h, inp):
+        x_t, B_t, C_t, dec_t, dt_t = inp
+        h = h * dec_t[..., None, None] + (dt_t[..., None] * x_t.astype(jnp.float32))[..., None] \
+            * B_t.astype(jnp.float32)[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t.astype(jnp.float32))
+        return h, y
+
+    from repro.models.layers import chunked_scan
+
+    xs = (xin.swapaxes(0, 1), Bc.swapaxes(0, 1), Cc.swapaxes(0, 1),
+          decay.swapaxes(0, 1), dt.swapaxes(0, 1))
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, ys = chunked_scan(step, h0, xs, chunk=64)                # (S, B, H, P)
+    y = ys.swapaxes(0, 1) + p["D"].astype(jnp.float32)[None, None, :, None] \
+        * xin.astype(jnp.float32)
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba_init_state(cfg: MambaConfig, batch: int, dtype=jnp.float32):
+    H, P, N = cfg.n_heads, cfg.headdim, cfg.d_state
+    W = cfg.conv_width
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": {
+            "x": jnp.zeros((batch, W - 1, cfg.d_inner), dtype),
+            "bc": jnp.zeros((batch, W - 1, 2 * N), dtype),
+        },
+    }
+
+
+def mamba_step(p, cfg: MambaConfig, x, state):
+    """Single-token decode. x: (B, 1, D); state from mamba_init_state."""
+    B = x.shape[0]
+    H, P, N = cfg.n_heads, cfg.headdim, cfg.d_state
+    z, xin, Bc, Cc, dt, conv_state = _project(p, cfg, x, conv_states=state["conv"])
+    xin, Bc, Cc, dt = xin[:, 0], Bc[:, 0], Cc[:, 0], dt[:, 0]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                     # (B,H)
+    h = state["ssm"] * decay[..., None, None] + (dt[..., None] * xin.astype(jnp.float32))[..., None] \
+        * Bc.astype(jnp.float32)[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, Cc.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_conv = jax.tree.map(lambda a, b: a.astype(b.dtype), conv_state, state["conv"])
+    return out, {"ssm": h, "conv": new_conv}
+
+
+def mamba_forward_chunked(p, cfg: MambaConfig, x, chunk: int = 128):
+    """Chunked SSD (state-space duality) forward — the MXU formulation.
+
+    Mathematically identical to ``mamba_forward`` (same recurrence),
+    restructured per Mamba2's SSD: within a Q-token chunk the output is
+    an attention-like einsum
+        y_t = C_t . (decay_t h_in) + sum_{tau<=t} Gamma[t,tau] dt_tau
+              (C_t.B_tau) x_tau + D x_t,
+        Gamma[t,tau] = exp(La_t - La_tau)   (cumulative log-decay)
+    and states propagate chunk-to-chunk through a lax.scan of length
+    S/chunk. Turns S sequential (P,N)-sized updates into S/Q einsums
+    over (Q,Q) tiles — the compute becomes matmul-shaped and the HBM
+    stream drops by ~Q (the §Perf optimization for the hybrid archs;
+    exactness is tested against the scan path).
+    """
+    B, S, D = x.shape
+    H, P, N = cfg.n_heads, cfg.headdim, cfg.d_state
+    z, xin, Bc, Cc, dt, _ = _project(p, cfg, x)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (H,)
+
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    n_chunks = S // Q
+
+    # (n, B, Q, ...) chunked views, f32
+    def ck(a):
+        return a.reshape(B, n_chunks, Q, *a.shape[2:]).swapaxes(0, 1)
+
+    xin_c = ck(xin.astype(jnp.float32))                         # (n,B,Q,H,P)
+    B_c = ck(Bc.astype(jnp.float32))                            # (n,B,Q,N)
+    C_c = ck(Cc.astype(jnp.float32))                            # (n,B,Q,N)
+    dt_c = ck(dt)                                               # (n,B,Q,H)
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(h, inp):
+        xq, Bq, Cq, dtq = inp                                   # per chunk
+        la = jnp.cumsum(dtq * A, axis=1)                        # (B,Q,H) cumulative log decay
+        # intra-chunk attention-like term
+        cb = jnp.einsum("btn,bqn->btq", Cq, Bq)                 # (B,Q,Q) shared across heads
+        gamma = jnp.exp(la[:, :, None, :] - la[:, None, :, :])  # (B,Q,Q,H)
+        gamma = jnp.where(tri[None, :, :, None], gamma, 0.0)
+        scores = cb[..., None] * gamma * dtq[:, None, :, :]     # (B,t,tau,H)
+        y = jnp.einsum("btqh,bqhp->bthp", scores, xq)           # (B,Q,H,P)
+        # cross-chunk: contribution of the carried state
+        y = y + jnp.einsum("bqh,bhpn,bqn->bqhp", jnp.exp(la), h, Cq)
+        # state update: h_out = exp(La_Q) h + sum_t exp(La_Q - La_t) dt_t x_t B_t
+        wts = jnp.exp(la[:, -1:, :] - la) * dtq                 # (B,Q,H)
+        h = h * jnp.exp(la[:, -1])[..., None, None] \
+            + jnp.einsum("bqh,bqhp,bqn->bhpn", wts, xq, Bq)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                         (xin_c, B_c, C_c, dt_c))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, P)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"].astype(x.dtype)

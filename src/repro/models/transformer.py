@@ -1,0 +1,381 @@
+"""Generic decoder-only transformer LM covering the dense/MoE/MLA
+assigned architectures (qwen3, deepseek-67b, command-r, gemma3,
+mistral/llava backbone, phi3.5-moe, deepseek-v2-lite).
+
+The layer stack is stored with a leading L axis and consumed with
+``lax.scan`` (HLO size and compile time are depth-independent; the
+95-layer deepseek-67b config must compile on this container).
+Heterogeneity is expressed per-layer *data*, not per-layer code:
+- sliding-window vs global layers: an (L,) window-width array
+  (0 = full attention), so gemma3's 5:1 local:global pattern is a
+  scanned input, and the all-window long-context variant of the dense
+  archs is a config change;
+- deepseek-v2-lite's dense first layer is a separate unscanned block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_lib
+from repro.models import mla as mla_lib
+from repro.models.attention import AttnConfig, attn_init, attn_forward, attn_decode
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    layer_norm,
+    lm_loss,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+    stacked,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"
+    gated_mlp: bool = True
+    norm: str = "rms"                  # "rms" | "ln"
+    rms_plus_one: bool = False         # gemma convention
+    qk_norm: bool = False
+    use_bias: bool = False
+    parallel_block: bool = False       # command-r style attn+mlp in parallel
+    rope_theta: float = 10000.0
+    window: Optional[int] = None       # sliding window width for local layers
+    global_every: int = 0              # 0 = all layers follow `window`;
+                                       # k>0 = every k-th layer is global (gemma3)
+    logit_softcap: float = 0.0
+    emb_scale: bool = False            # multiply embeddings by sqrt(d) (gemma)
+    moe: Optional[moe_lib.MoEConfig] = None
+    moe_first_dense: int = 0           # leading dense layers (deepseek-v2)
+    first_dense_ff: int = 0
+    mla: Optional[mla_lib.MLAConfig] = None
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    loss_chunk: int = 256
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def attn_cfg(self) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads, n_kv=self.n_kv,
+            head_dim=self.head_dim, rope_theta=self.rope_theta,
+            qk_norm=self.qk_norm, use_bias=self.use_bias,
+            logit_softcap=self.logit_softcap,
+        )
+
+    def layer_windows(self) -> jnp.ndarray:
+        """(n_scanned_layers,) int32; 0 = full attention."""
+        n = self.n_layers - self.moe_first_dense
+        if self.window is None:
+            return jnp.zeros((n,), jnp.int32)
+        w = jnp.full((n,), self.window, jnp.int32)
+        if self.global_every > 0:
+            idx = jnp.arange(self.moe_first_dense, self.n_layers)
+            w = jnp.where((idx + 1) % self.global_every == 0, 0, w)
+        return w
+
+
+# ------------------------------------------------------------------ init
+
+def _layer_init(key, cfg: TransformerConfig):
+    ka, km, kn = jax.random.split(key, 3)
+    dt = cfg.pdtype
+    p = {"norm1": jnp.ones((cfg.d_model,), dt)}
+    if not cfg.parallel_block:
+        p["norm2"] = jnp.ones((cfg.d_model,), dt)
+    if cfg.norm == "ln":
+        p["norm1_b"] = jnp.zeros((cfg.d_model,), dt)
+        if not cfg.parallel_block:
+            p["norm2_b"] = jnp.zeros((cfg.d_model,), dt)
+    if cfg.mla is not None:
+        p["attn"] = mla_lib.mla_init(ka, cfg.mla, dt)
+    else:
+        p["attn"] = attn_init(ka, cfg.attn_cfg(), dt)
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.moe_init(km, cfg.d_model, cfg.moe, dt)
+    else:
+        p["mlp"] = mlp_init(km, cfg.d_model, cfg.d_ff, cfg.gated_mlp, dt)
+    return p
+
+
+def init_params(cfg: TransformerConfig, key) -> dict:
+    k_emb, k_layers, k_out, k_dense = jax.random.split(key, 4)
+    n_scan = cfg.n_layers - cfg.moe_first_dense
+    params = {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.pdtype),
+        "layers": stacked(_layer_init, k_layers, n_scan, cfg),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+        "unembed": dense_init(k_out, cfg.d_model, cfg.vocab, cfg.pdtype),
+    }
+    if cfg.norm == "ln":
+        params["final_norm_b"] = jnp.zeros((cfg.d_model,), cfg.pdtype)
+    if cfg.moe_first_dense > 0:
+        dense_cfg = dataclasses.replace(cfg, moe=None, moe_first_dense=0,
+                                        d_ff=cfg.first_dense_ff or cfg.d_ff)
+        params["dense_layers"] = stacked(_layer_init, k_dense, cfg.moe_first_dense, dense_cfg)
+    return params
+
+
+# ------------------------------------------------------------------ fwd
+
+def _norm(cfg, p, x, which):
+    if cfg.norm == "ln":
+        return layer_norm(x, p[which], p[which + "_b"])
+    return rms_norm(x, p[which], plus_one=cfg.rms_plus_one)
+
+
+def _layer_forward(cfg: TransformerConfig, lp, x, window, is_moe: bool, block_kv: int = 512):
+    """One layer, full-sequence. window: traced int32 scalar (0 = full)."""
+    acfg = cfg.attn_cfg()
+    h = _norm(cfg, lp, x, "norm1")
+    if cfg.mla is not None:
+        attn_out, kv = mla_lib.mla_forward(lp["attn"], cfg.mla, h, block_kv=block_kv)
+    else:
+        # dynamic window: pass as masked width via AttnConfig None + manual mask
+        attn_out, kv = _attn_forward_dynwin(lp["attn"], acfg, h, window, block_kv)
+    aux = jnp.zeros(())
+    if cfg.parallel_block:
+        if is_moe:
+            m, aux = moe_lib.moe_apply(lp["moe"], cfg.moe, h, cfg.act)
+        else:
+            m = mlp_apply(lp["mlp"], h, cfg.act)
+        x = x + attn_out + m
+    else:
+        x = x + attn_out
+        h2 = _norm(cfg, lp, x, "norm2")
+        if is_moe:
+            m, aux = moe_lib.moe_apply(lp["moe"], cfg.moe, h2, cfg.act)
+        else:
+            m = mlp_apply(lp["mlp"], h2, cfg.act)
+        x = x + m
+    return x, kv, aux
+
+
+def _attn_forward_dynwin(p, acfg: AttnConfig, x, window, block_kv):
+    """attn_forward with a *traced* per-layer window (0 = full)."""
+    from repro.models.attention import _project_qkv, blockwise_attention
+
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, acfg, x, positions)
+    eff_window = jnp.where(window > 0, window, S + 1)   # wide window == full causal
+    o = blockwise_attention(
+        q, k, v, causal=True, window=eff_window,
+        logit_softcap=acfg.logit_softcap, block_kv=min(block_kv, S),
+        query_scale=acfg.query_scale,
+    )
+    out = o.reshape(B, S, acfg.n_heads * acfg.head_dim) @ p["wo"].astype(x.dtype)
+    return out, (k, v)
+
+
+def embed_tokens(cfg: TransformerConfig, params, tokens):
+    x = params["embed"].astype(cfg.cdtype)[tokens]
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def forward(cfg: TransformerConfig, params, tokens, return_hidden: bool = False):
+    """tokens (B, S) -> (final hidden (B, S, D), aux loss)."""
+    return trunk(cfg, params, embed_tokens(cfg, params, tokens))
+
+
+def trunk(cfg: TransformerConfig, params, x):
+    """Layer stack from embeddings x (B, S, D) -> (hidden, aux loss)."""
+    aux_total = jnp.zeros(())
+
+    if cfg.moe_first_dense > 0:
+        @jax.checkpoint
+        def dense_body(xc, lp):
+            xo, _, _ = _layer_forward(cfg, lp, xc, jnp.zeros((), jnp.int32), is_moe=False)
+            return xo, None
+        x, _ = jax.lax.scan(dense_body, x, params["dense_layers"])
+
+    windows = cfg.layer_windows()
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xc, aux = carry
+        lp, w = inp
+        xo, _, a = _layer_forward(cfg, lp, xc, w, is_moe=cfg.moe is not None)
+        return (xo, aux + a), None
+
+    (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), (params["layers"], windows))
+    x = _norm(cfg, {"final_norm": params["final_norm"],
+                    **({"final_norm_b": params["final_norm_b"]} if cfg.norm == "ln" else {})},
+              x, "final_norm")
+    return (x, aux_total)
+
+
+def loss_fn(cfg: TransformerConfig, params, batch, rng=None):
+    """Next-token LM loss. batch: {"tokens": (B, S) int32}."""
+    h, aux = forward(cfg, params, batch["tokens"])
+    loss = lm_loss(h, params["unembed"].astype(cfg.cdtype), batch["tokens"],
+                   chunk=cfg.loss_chunk, logit_softcap=cfg.logit_softcap,
+                   weight=batch.get("weight"))
+    return loss + aux, {"lm_loss": loss, "aux_loss": aux}
+
+
+# ------------------------------------------------------------------ cache
+
+def init_cache(cfg: TransformerConfig, batch: int, seq_len: int, ring: bool = False):
+    """Cache pytree. ``ring=True`` sizes windowed layers at their window
+    (ring buffer) instead of seq_len — the long-context memory saver."""
+    n_scan = cfg.n_layers - cfg.moe_first_dense
+    dt = cfg.cdtype
+
+    def kv_cache(n, s):
+        if cfg.mla is not None:
+            return {
+                "ckv": jnp.zeros((n, batch, s, cfg.mla.kv_lora), dt),
+                "krope": jnp.zeros((n, batch, s, cfg.mla.qk_rope_dim), dt),
+            }
+        return {
+            "k": jnp.zeros((n, batch, s, cfg.n_kv, cfg.head_dim), dt),
+            "v": jnp.zeros((n, batch, s, cfg.n_kv, cfg.head_dim), dt),
+        }
+
+    s_main = seq_len
+    if ring and cfg.window is not None and cfg.global_every == 0:
+        s_main = min(seq_len, cfg.window)
+    cache = {"layers": kv_cache(n_scan, s_main)}
+    if cfg.moe_first_dense > 0:
+        cache["dense_layers"] = kv_cache(cfg.moe_first_dense, seq_len)
+    return cache
+
+
+def _layer_decode(cfg: TransformerConfig, lp, x, cache_row, pos, window, is_moe, ring):
+    acfg = dataclasses.replace(cfg.attn_cfg(), window=None)
+    h = _norm(cfg, lp, x, "norm1")
+    if cfg.mla is not None:
+        attn_out, ckv, krope = mla_lib.mla_decode(lp["attn"], cfg.mla, h,
+                                                  cache_row["ckv"], cache_row["krope"], pos)
+        new_cache = {"ckv": ckv, "krope": krope}
+    else:
+        attn_out, kc, vc = _attn_decode_dynwin(lp["attn"], acfg, h, cache_row, pos, window, ring)
+        new_cache = {"k": kc, "v": vc}
+    if cfg.parallel_block:
+        m = mlp_apply(lp["mlp"], h, cfg.act) if not is_moe else moe_lib.moe_apply(lp["moe"], cfg.moe, h, cfg.act)[0]
+        x = x + attn_out + m
+    else:
+        x = x + attn_out
+        h2 = _norm(cfg, lp, x, "norm2")
+        m = mlp_apply(lp["mlp"], h2, cfg.act) if not is_moe else moe_lib.moe_apply(lp["moe"], cfg.moe, h2, cfg.act)[0]
+        x = x + m
+    return x, new_cache
+
+
+def _attn_decode_dynwin(p, acfg: AttnConfig, x, cache_row, pos, window, ring):
+    from repro.models.attention import _project_qkv, decode_attention
+
+    B = x.shape[0]
+    S = cache_row["k"].shape[1]
+    positions = jnp.broadcast_to(pos[None], (B, 1))
+    q, k, v = _project_qkv(p, acfg, x, positions)
+    slot = jnp.mod(pos, S) if ring else pos
+    kc = jax.lax.dynamic_update_slice(cache_row["k"], k.astype(cache_row["k"].dtype), (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache_row["v"], v.astype(cache_row["v"].dtype), (0, slot, 0, 0))
+    eff_window = jnp.where(window > 0, window, pos + 2)  # wide == full
+    o = decode_attention(q[:, 0], kc, vc, pos, window=eff_window, ring=ring,
+                         logit_softcap=acfg.logit_softcap, query_scale=acfg.query_scale)
+    out = o.reshape(B, 1, acfg.n_heads * acfg.head_dim) @ p["wo"].astype(x.dtype)
+    return out, kc, vc
+
+
+def decode_step(cfg: TransformerConfig, params, cache, tokens, pos, ring: bool = False):
+    """tokens (B, 1); pos scalar int32 = position being written.
+    Returns (logits (B, V), new cache)."""
+    x = params["embed"].astype(cfg.cdtype)[tokens]
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    new_cache = {}
+    if cfg.moe_first_dense > 0:
+        def dense_body(xc, inp):
+            lp, cr = inp
+            xo, nc = _layer_decode(cfg, lp, xc, cr, pos, jnp.zeros((), jnp.int32),
+                                   is_moe=False, ring=False)
+            return xo, nc
+        x, nc = jax.lax.scan(dense_body, x, (params["dense_layers"], cache["dense_layers"]))
+        new_cache["dense_layers"] = nc
+
+    windows = cfg.layer_windows()
+
+    def body(xc, inp):
+        lp, cr, w = inp
+        xo, nc = _layer_decode(cfg, lp, xc, cr, pos, w, is_moe=cfg.moe is not None, ring=ring)
+        return xo, nc
+
+    x, nc = jax.lax.scan(body, x, (params["layers"], cache["layers"], windows))
+    new_cache["layers"] = nc
+    x = _norm(cfg, {"final_norm": params["final_norm"],
+                    **({"final_norm_b": params["final_norm_b"]} if cfg.norm == "ln" else {})},
+              x, "final_norm")
+    logits = (x[:, 0] @ params["unembed"].astype(cfg.cdtype)).astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, new_cache
+
+
+def prefill(cfg: TransformerConfig, params, tokens):
+    """Causal forward building a cache; returns (last-token logits, cache).
+
+    Cache layout matches ``init_cache(..., ring=False)`` with
+    seq_len = tokens.shape[1].
+    """
+    return prefill_embeds(cfg, params, embed_tokens(cfg, params, tokens))
+
+
+def prefill_embeds(cfg: TransformerConfig, params, x):
+    """Prefill from embeddings x (B, S, D) — the VLM entry point."""
+    cache = {}
+    if cfg.moe_first_dense > 0:
+        def dense_body(xc, lp):
+            xo, kv, _ = _layer_forward(cfg, lp, xc, jnp.zeros((), jnp.int32), is_moe=False)
+            return xo, kv
+        x, kvs = jax.lax.scan(dense_body, x, params["dense_layers"])
+        cache["dense_layers"] = _kv_to_cache(cfg, kvs)
+
+    windows = cfg.layer_windows()
+
+    def body(xc, inp):
+        lp, w = inp
+        xo, kv, _ = _layer_forward(cfg, lp, xc, w, is_moe=cfg.moe is not None)
+        return xo, kv
+
+    x, kvs = jax.lax.scan(body, x, (params["layers"], windows))
+    cache["layers"] = _kv_to_cache(cfg, kvs)
+    x = _norm(cfg, {"final_norm": params["final_norm"],
+                    **({"final_norm_b": params["final_norm_b"]} if cfg.norm == "ln" else {})},
+              x, "final_norm")
+    logits = (x[:, -1] @ params["unembed"].astype(cfg.cdtype)).astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, cache
+
+
+def _kv_to_cache(cfg, kvs):
+    if cfg.mla is not None:
+        ckv, krope = kvs
+        return {"ckv": ckv, "krope": krope}
+    k, v = kvs
+    return {"k": k, "v": v}

@@ -1,0 +1,92 @@
+"""LLaVA-NeXT-style VLM: a Mistral-7B language backbone consuming
+projected vision embeddings.
+
+Per the assignment carve-out, the ViT/SigLIP encoder is a STUB —
+``input_specs`` provides anyres tile patch embeddings (B, N_img,
+vit_dim). The LM side is fully implemented: the 2-layer MLP projector,
+token/image interleaving (image tiles prefixed), LM loss masked to
+text positions, and decode against a cache whose prefix holds the
+projected image tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.layers import chunked_softmax_xent, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    name: str
+    lm: tfm.TransformerConfig
+    vit_dim: int = 1024
+    n_img_tokens: int = 576        # tokens per anyres tile grid (stubbed)
+
+    @property
+    def cdtype(self):
+        return self.lm.cdtype
+
+
+def init_params(cfg: VLMConfig, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.lm.pdtype
+    return {
+        "lm": tfm.init_params(cfg.lm, k1),
+        "projector": {
+            "w1": dense_init(k2, cfg.vit_dim, cfg.lm.d_model, dt),
+            "b1": jnp.zeros((cfg.lm.d_model,), dt),
+            "w2": dense_init(k3, cfg.lm.d_model, cfg.lm.d_model, dt),
+            "b2": jnp.zeros((cfg.lm.d_model,), dt),
+        },
+    }
+
+
+def project(params, cfg: VLMConfig, image_embeds):
+    """(B, N_img, vit_dim) -> (B, N_img, d_model); 2-layer GELU MLP."""
+    p = params["projector"]
+    x = image_embeds.astype(cfg.cdtype)
+    h = jax.nn.gelu(x @ p["w1"].astype(x.dtype) + p["b1"].astype(x.dtype))
+    return h @ p["w2"].astype(x.dtype) + p["b2"].astype(x.dtype)
+
+
+def _embed_multimodal(cfg: VLMConfig, params, batch):
+    img = project(params, cfg, batch["image_embeds"])          # (B, N, D)
+    txt = tfm.embed_tokens(cfg.lm, params["lm"], batch["tokens"])
+    return jnp.concatenate([img, txt], axis=1)
+
+
+def loss_fn(cfg: VLMConfig, params, batch, rng=None):
+    """batch: image_embeds (B, N_img, vit_dim), tokens (B, S_text)."""
+    x = _embed_multimodal(cfg, params, batch)
+    h, aux = tfm.trunk(cfg.lm, params["lm"], x)
+    n_img = batch["image_embeds"].shape[1]
+    h_txt = h[:, n_img:]
+    tokens = batch["tokens"]
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    if "weight" in batch:
+        mask = mask * batch["weight"][:, None].astype(mask.dtype)
+    tot, cnt = chunked_softmax_xent(
+        h_txt, params["lm"]["unembed"].astype(cfg.cdtype), targets, mask,
+        chunk=min(cfg.lm.loss_chunk, tokens.shape[1]))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + aux, {"lm_loss": loss, "aux_loss": aux}
+
+
+def prefill(cfg: VLMConfig, params, batch):
+    """Image tiles + text prompt -> (last logits, cache). The cache's
+    leading n_img positions hold the image tokens."""
+    x = _embed_multimodal(cfg, params, batch)
+    return tfm.prefill_embeds(cfg.lm, params["lm"], x)
+
+
+def init_cache(cfg: VLMConfig, batch: int, seq_len: int, ring: bool = False):
+    return tfm.init_cache(cfg.lm, batch, seq_len, ring=ring)
+
+
+def decode_step(cfg: VLMConfig, params, cache, tokens, pos, ring: bool = False):
+    return tfm.decode_step(cfg.lm, params["lm"], cache, tokens, pos, ring=ring)

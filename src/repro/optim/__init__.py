@@ -1,0 +1,46 @@
+"""Pure-JAX optimizer substrate (optax-like, no external deps).
+
+Gradient transformations are (init_fn, update_fn) pairs operating on
+pytrees. Used both as the *client* optimizer (SGD inside the federated
+local loop) and the *server* optimizer (Adam on aggregated deltas), per
+the paper's two-level FedAvg optimization.
+"""
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adam,
+    adamw,
+    yogi,
+    clip_by_global_norm,
+    chain,
+    scale_by_schedule,
+    apply_updates,
+    global_norm,
+)
+from repro.optim.schedules import (
+    constant,
+    linear_rampup,
+    linear_rampup_exp_decay,
+    linear_ramp_to,
+    piecewise,
+)
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "momentum",
+    "adam",
+    "adamw",
+    "yogi",
+    "clip_by_global_norm",
+    "chain",
+    "scale_by_schedule",
+    "apply_updates",
+    "global_norm",
+    "constant",
+    "linear_rampup",
+    "linear_rampup_exp_decay",
+    "linear_ramp_to",
+    "piecewise",
+]

@@ -1,0 +1,210 @@
+"""Gradient-transformation optimizers as pure pytree functions.
+
+Design mirrors optax: an ``Optimizer`` is a pair of pure functions
+``init(params) -> state`` and ``update(grads, state, params) ->
+(updates, state)``; ``apply_updates`` adds the (already negated)
+updates to the params. All state is a pytree of arrays so it shards,
+vmaps and scans transparently — the federated engine vmaps client
+optimizers over the client axis and FSDP-shards server state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]
+
+
+def _tree_zeros_like(params: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+
+
+def _resolve_lr(lr, count):
+    if callable(lr):
+        return lr(count)
+    return jnp.asarray(lr, jnp.float32)
+
+
+class ScaleState(NamedTuple):
+    count: jnp.ndarray
+
+
+def sgd(learning_rate) -> Optimizer:
+    """Plain SGD — the paper's client optimizer (constant lr 0.008)."""
+
+    def init(params):
+        return ScaleState(count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        lr = _resolve_lr(learning_rate, state.count)
+        updates = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+        return updates, ScaleState(count=state.count + 1)
+
+    return Optimizer(init, update)
+
+
+class MomentumState(NamedTuple):
+    count: jnp.ndarray
+    trace: PyTree
+
+
+def momentum(learning_rate, decay: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return MomentumState(count=jnp.zeros((), jnp.int32), trace=_tree_zeros_like(params))
+
+    def update(grads, state, params=None):
+        lr = _resolve_lr(learning_rate, state.count)
+        trace = jax.tree.map(lambda t, g: decay * t + g.astype(jnp.float32), state.trace, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda t, g: -(lr * (decay * t + g.astype(jnp.float32))), trace, grads)
+        else:
+            upd = jax.tree.map(lambda t: -lr * t, trace)
+        return upd, MomentumState(count=state.count + 1, trace=trace)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+def adam(learning_rate, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    """Adam — the paper's server optimizer (Reddi et al. adaptive FL)."""
+
+    def init(params):
+        return AdamState(
+            count=jnp.zeros((), jnp.int32),
+            mu=_tree_zeros_like(params),
+            nu=_tree_zeros_like(params),
+        )
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        lr = _resolve_lr(learning_rate, state.count)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads
+        )
+        c = count.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1**c)
+        nu_hat_scale = 1.0 / (1 - b2**c)
+        upd = jax.tree.map(
+            lambda m, v: -lr * (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps), mu, nu
+        )
+        return upd, AdamState(count=count, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(learning_rate, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> Optimizer:
+    base = adam(learning_rate, b1, b2, eps)
+
+    def update(grads, state, params):
+        upd, state = base.update(grads, state, params)
+        lr = _resolve_lr(learning_rate, state.count - 1)
+        upd = jax.tree.map(
+            lambda u, p: u - lr * weight_decay * p.astype(jnp.float32), upd, params
+        )
+        return upd, state
+
+    return Optimizer(base.init, update)
+
+
+def yogi(learning_rate, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-3) -> Optimizer:
+    """Yogi (additive second moment) — from Adaptive Federated Optimization."""
+
+    def init(params):
+        return AdamState(
+            count=jnp.zeros((), jnp.int32),
+            mu=_tree_zeros_like(params),
+            nu=_tree_zeros_like(params),
+        )
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        lr = _resolve_lr(learning_rate, state.count)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+
+        def nu_update(v, g):
+            g2 = jnp.square(g.astype(jnp.float32))
+            return v - (1 - b2) * jnp.sign(v - g2) * g2
+
+        nu = jax.tree.map(nu_update, state.nu, grads)
+        c = count.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1**c)
+        upd = jax.tree.map(lambda m, v: -lr * (m * mu_hat_scale) / (jnp.sqrt(jnp.abs(v)) + eps), mu, nu)
+        return upd, AdamState(count=count, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+class ClipState(NamedTuple):
+    inner: PyTree
+
+
+def clip_by_global_norm(inner: Optimizer, max_norm: float) -> Optimizer:
+    def init(params):
+        return ClipState(inner=inner.init(params))
+
+    def update(grads, state, params=None):
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        upd, inner_state = inner.update(grads, state.inner, params)
+        return upd, ClipState(inner=inner_state)
+
+    return Optimizer(init, update)
+
+
+class ChainState(NamedTuple):
+    states: tuple
+
+
+def chain(*optimizers: Optimizer) -> Optimizer:
+    """Compose transformations left-to-right on the update stream."""
+
+    def init(params):
+        return ChainState(states=tuple(o.init(params) for o in optimizers))
+
+    def update(grads, state, params=None):
+        upd = grads
+        new_states = []
+        for o, s in zip(optimizers, state.states):
+            upd, s = o.update(upd, s, params)
+            new_states.append(s)
+        return upd, ChainState(states=tuple(new_states))
+
+    return Optimizer(init, update)
+
+
+def scale_by_schedule(schedule: Schedule) -> Optimizer:
+    def init(params):
+        return ScaleState(count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        s = schedule(state.count)
+        upd = jax.tree.map(lambda g: g * s, grads)
+        return upd, ScaleState(count=state.count + 1)
+
+    return Optimizer(init, update)

@@ -1,0 +1,63 @@
+"""Learning-rate and noise schedules used by the paper's experiments.
+
+The Baseline (E0) uses a linear ramp-up LR; the cost-reduced federated
+configs (E9/E10) use a *shorter* ramp-up plus exponential decay; FVN
+(E7) linearly ramps the noise std-dev to a target (0.03 in the paper).
+All schedules are ``step -> scalar`` pure functions of an integer count.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def schedule(count):
+        return jnp.full((), value, jnp.float32)
+
+    return schedule
+
+
+def linear_rampup(peak: float, warmup_steps: int):
+    """Linear 0->peak over warmup_steps, then constant (Baseline E0)."""
+
+    def schedule(count):
+        c = jnp.asarray(count, jnp.float32)
+        frac = jnp.minimum(c / jnp.maximum(warmup_steps, 1), 1.0)
+        return peak * frac
+
+    return schedule
+
+
+def linear_rampup_exp_decay(peak: float, warmup_steps: int, decay_steps: int, decay_rate: float):
+    """Short ramp-up + exponential decay — the E9/E10 cost-reducing schedule."""
+
+    def schedule(count):
+        c = jnp.asarray(count, jnp.float32)
+        warm = jnp.minimum(c / jnp.maximum(warmup_steps, 1), 1.0)
+        decay = decay_rate ** (jnp.maximum(c - warmup_steps, 0.0) / jnp.maximum(decay_steps, 1))
+        return peak * warm * decay
+
+    return schedule
+
+
+def linear_ramp_to(target: float, ramp_steps: int, start: float = 0.0):
+    """Linear start->target over ramp_steps then hold — FVN sigma ramp (E7)."""
+
+    def schedule(count):
+        c = jnp.asarray(count, jnp.float32)
+        frac = jnp.minimum(c / jnp.maximum(ramp_steps, 1), 1.0)
+        return start + (target - start) * frac
+
+    return schedule
+
+
+def piecewise(boundaries, values):
+    """Step function: values[i] for count in [boundaries[i-1], boundaries[i])."""
+    assert len(values) == len(boundaries) + 1
+
+    def schedule(count):
+        c = jnp.asarray(count, jnp.int32)
+        idx = jnp.sum(jnp.asarray(boundaries, jnp.int32) <= c)
+        return jnp.asarray(values, jnp.float32)[idx]
+
+    return schedule

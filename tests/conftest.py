@@ -1,0 +1,15 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU
+device (the 512-device override belongs to the dry-run only)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,192 @@
+"""Cross-path model consistency: decode==prefill, ring==full cache,
+MLA absorbed decode == expanded forward, SSM/RWKV state streaming."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.models.hybrid import HybridConfig
+from repro.models.mla import MLAConfig, mla_decode, mla_forward, mla_init
+from repro.models.model_zoo import RWKVModelConfig
+from repro.models.rwkv import RWKVConfig
+from repro.models.transformer import TransformerConfig
+
+RNG = np.random.default_rng(0)
+
+
+def test_mla_decode_matches_forward():
+    cfg = MLAConfig(d_model=64, n_heads=4, kv_lora=32, qk_nope_dim=16,
+                    qk_rope_dim=8, v_dim=16)
+    p = mla_init(jax.random.PRNGKey(1), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 8, 64)), jnp.float32)
+    out_fwd, (ckv, krope) = mla_forward(p, cfg, x)
+    ckv_c = jnp.zeros((2, 8, 32))
+    kr_c = jnp.zeros((2, 8, 8))
+    outs = []
+    for t in range(8):
+        o, ckv_c, kr_c = mla_decode(p, cfg, x[:, t : t + 1], ckv_c, kr_c,
+                                    jnp.asarray(t, jnp.int32))
+        outs.append(o[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)), np.asarray(out_fwd),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(ckv_c), np.asarray(ckv), atol=1e-6)
+
+
+def test_sliding_window_ring_cache_equals_full():
+    cfg = TransformerConfig(name="sw", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                            head_dim=16, d_ff=128, vocab=64, dtype="float32",
+                            window=8, loss_chunk=16)
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    tok = jnp.asarray(RNG.integers(0, 64, (2, 32)), jnp.int32)
+    cfull = m.init_cache(2, 32)
+    cring = m.init_cache(2, 32, ring=True)
+    assert jax.tree.leaves(cring)[0].shape[2] == 8       # ring buffer = window
+    df = jax.jit(lambda *a: m.decode_step(*a, ring=False))
+    dr = jax.jit(lambda *a: m.decode_step(*a, ring=True))
+    for t in range(32):
+        lf, cfull = df(p, cfull, tok[:, t : t + 1], jnp.asarray(t, jnp.int32))
+        lr, cring = dr(p, cring, tok[:, t : t + 1], jnp.asarray(t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lr), atol=1e-5)
+
+
+def test_gemma_pattern_window_layers():
+    cfg = TransformerConfig(name="g", n_layers=6, d_model=32, n_heads=2, n_kv=1,
+                            head_dim=16, d_ff=64, vocab=32, dtype="float32",
+                            window=4, global_every=3)
+    w = np.asarray(cfg.layer_windows())
+    np.testing.assert_array_equal(w, [4, 4, 0, 4, 4, 0])
+
+
+def test_hybrid_decode_matches_forward_logits():
+    cfg = HybridConfig(name="hy", n_layers=5, d_model=64, n_heads=4, n_kv=4,
+                       head_dim=16, d_ff=128, vocab=64, attn_every=2,
+                       ssm_state=16, ssm_headdim=16, dtype="float32", loss_chunk=8)
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    S = 12
+    tok = jnp.asarray(RNG.integers(0, 64, (2, S)), jnp.int32)
+    # teacher-forced final hidden -> logits of last token
+    from repro.models.hybrid import forward
+
+    h = forward(cfg, p, tok)
+    logits_tf = (h[:, -1] @ p["unembed"]).astype(jnp.float32)
+    cache = m.init_cache(2, S)
+    dstep = jax.jit(m.decode_step)
+    for t in range(S):
+        lg, cache = dstep(p, cache, tok[:, t : t + 1], jnp.asarray(t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_tf),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_rwkv_streaming_equals_batch():
+    cfg = RWKVModelConfig(name="rw", n_layers=2,
+                          rwkv=RWKVConfig(d_model=64, head_size=16, d_ff=128,
+                                          decay_lora=8),
+                          vocab=64, dtype="float32", loss_chunk=16)
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    tok = jnp.asarray(RNG.integers(0, 64, (2, 16)), jnp.int32)
+    lp, _ = jax.jit(m.prefill)(p, {"tokens": tok})
+    cache = m.init_cache(2, 16)
+    dstep = jax.jit(m.decode_step)
+    for t in range(16):
+        lg, cache = dstep(p, cache, tok[:, t : t + 1], jnp.asarray(t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lp), atol=1e-5)
+
+
+def test_mamba_step_streams_forward():
+    from repro.models.ssm import MambaConfig, mamba_forward, mamba_init, mamba_init_state, mamba_step
+
+    cfg = MambaConfig(d_model=32, headdim=16, d_state=8)
+    p = mamba_init(jax.random.PRNGKey(2), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 10, 32)), jnp.float32)
+    y_full = mamba_forward(p, cfg, x)
+    st = mamba_init_state(cfg, 2)
+    ys = []
+    for t in range(10):
+        y, st = mamba_step(p, cfg, x[:, t : t + 1], st)
+        ys.append(y[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)), np.asarray(y_full),
+                               atol=2e-5)
+
+
+def test_specaugment_masks_and_preserves_shape():
+    from repro.asr.specaugment import SpecAugmentConfig, spec_augment
+
+    x = jnp.ones((2, 50, 16))
+    cfg = SpecAugmentConfig(freq_masks=2, freq_mask_width=4, time_masks=2,
+                            time_mask_frac=0.2)
+    y = spec_augment(jax.random.PRNGKey(0), x, cfg)
+    assert y.shape == x.shape
+    assert float(y.sum()) < float(x.sum())          # something was masked
+    y2 = spec_augment(jax.random.PRNGKey(0), x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2))  # deterministic
+    assert float(jnp.abs(
+        spec_augment(jax.random.PRNGKey(1), x, cfg) - y).max()) > 0
+
+
+def test_vlm_loss_masks_image_positions():
+    from repro.models.vlm import VLMConfig
+
+    lm = TransformerConfig(name="lm", n_layers=1, d_model=32, n_heads=2, n_kv=2,
+                           head_dim=16, d_ff=64, vocab=32, dtype="float32",
+                           loss_chunk=8)
+    cfg = VLMConfig(name="v", lm=lm, vit_dim=16, n_img_tokens=4)
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    batch = {
+        "image_embeds": jnp.asarray(RNG.normal(size=(2, 4, 16)), jnp.float32),
+        "tokens": jnp.asarray(RNG.integers(0, 32, (2, 8)), jnp.int32),
+    }
+    loss, _ = m.loss_fn(p, batch, None)
+    assert bool(jnp.isfinite(loss))
+    # changing image content changes the loss (cross-modal flow)
+    batch2 = dict(batch, image_embeds=batch["image_embeds"] + 1.0)
+    loss2, _ = m.loss_fn(p, batch2, None)
+    assert abs(float(loss - loss2)) > 1e-6
+
+
+def test_mamba_chunked_ssd_matches_scan():
+    """The §Perf chunked SSD formulation is exact vs the sequential scan."""
+    from repro.models.ssm import MambaConfig, mamba_forward, mamba_forward_chunked, mamba_init
+
+    cfg = MambaConfig(d_model=32, headdim=16, d_state=8)
+    p = mamba_init(jax.random.PRNGKey(2), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 40, 32)), jnp.float32)
+    y1 = mamba_forward(p, cfg, x)
+    for chunk in (5, 8, 40):
+        y2 = mamba_forward_chunked(p, cfg, x, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y2), np.asarray(y1), atol=3e-5)
+    # grads agree where the sequential-scan reference is finite. (The
+    # scan path's VJP can underflow to NaN through 40-step decay
+    # products; the chunked-SSD path works in cumulative log-decays and
+    # stays finite — a robustness win of the SSD formulation.)
+    g1 = jax.grad(lambda pp: mamba_forward(pp, cfg, x).sum())(p)
+    g2 = jax.grad(lambda pp: mamba_forward_chunked(pp, cfg, x, chunk=8).sum())(p)
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(g2))
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        a, b = np.asarray(a), np.asarray(b)
+        finite = np.isfinite(a)
+        np.testing.assert_allclose(a[finite], b[finite], atol=1e-3, rtol=1e-3)
+
+
+def test_hybrid_chunked_flag():
+    import dataclasses as dc
+
+    from repro.models.hybrid import HybridConfig, forward
+
+    cfg = HybridConfig(name="hy", n_layers=4, d_model=32, n_heads=2, n_kv=2,
+                       head_dim=16, d_ff=64, vocab=32, attn_every=2,
+                       ssm_state=8, ssm_headdim=16, dtype="float32", loss_chunk=8)
+    from repro.models import build_model
+
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    tok = jnp.asarray(RNG.integers(0, 32, (2, 16)), jnp.int32)
+    h1 = forward(cfg, p, tok)
+    h2 = forward(dc.replace(cfg, ssm_chunked=True), p, tok)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h1), atol=3e-5)
