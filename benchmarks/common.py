@@ -1,6 +1,11 @@
 """Shared benchmark scaffolding: the paper's experiment ladder at
 container scale, cached per-experiment so tables reuse runs.
 
+The ladder itself is declared in ``repro.launch.sweeps`` (the
+multi-sweep runner); this module owns the bench policy — round budget
+via REPRO_BENCH_ROUNDS, a process-wide shared SweepRunner (one corpus,
+one jit cache for all experiments) and the on-disk result cache.
+
 Scale disclosure: the paper trains a 122M RNN-T on 960h Librispeech
 for thousands of rounds on TPU; this harness runs the SAME code paths
 (FedAvg engine, FVN, data-limit dial, CFMQ accounting, WER metric) on
@@ -12,58 +17,30 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
-from repro.core import FederatedPlan, FVNConfig
-from repro.launch.train import run_federated_asr, tiny_asr_setup
+from repro.launch.sweeps import LADDER_LIMIT, SweepRunner, ladder_points, ladder_specs
 
 ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "100"))
 CACHE = os.environ.get("REPRO_BENCH_CACHE", "results/bench_cache")
 
-BASE = dict(clients_per_round=8, local_batch_size=4, client_lr=0.3,
-            server_lr=0.05, server_warmup_rounds=max(2, ROUNDS // 15),
-            local_steps=12)   # pad cap for unlimited rounds (~2x mean data)
-LIMIT = 8
-FVN_STD = 0.02
+LIMIT = LADDER_LIMIT   # the ladder's E2 data limit (part of the cache key)
+
+_MEM = {}
+_RUNNER = None
+
+
+def shared_runner() -> SweepRunner:
+    """One corpus + one jitted-round-fn cache for every experiment."""
+    global _RUNNER
+    if _RUNNER is None:
+        _RUNNER = SweepRunner(seed=0, eval_examples=64)
+    return _RUNNER
 
 
 def ladder_plans() -> dict:
-    fvn = lambda std, ramp=0: FVNConfig(enabled=True, std=std, ramp_rounds=ramp)
-    ramp = ROUNDS // 2
-    decay = dict(server_warmup_rounds=max(2, ROUNDS // 30),
-                 server_decay_rounds=max(5, ROUNDS // 4), server_decay_rate=0.85)
-    plans = {
-        "E0": dict(plan=FederatedPlan(**BASE, fvn=fvn(FVN_STD, ramp)), iid=True),
-        "E1": dict(plan=FederatedPlan(**BASE), iid=False),
-        "E2": dict(plan=FederatedPlan(**BASE, data_limit=LIMIT), iid=False),
-        "E3": dict(plan=FederatedPlan(**BASE, data_limit=2 * LIMIT), iid=False),
-        "E4": dict(plan=FederatedPlan(**BASE, data_limit=4 * LIMIT), iid=False),
-        "E5": dict(plan=FederatedPlan(**BASE, data_limit=LIMIT, fvn=fvn(FVN_STD / 2)), iid=False),
-        "E6": dict(plan=FederatedPlan(**BASE, data_limit=LIMIT, fvn=fvn(FVN_STD)), iid=False),
-        "E7": dict(plan=FederatedPlan(**BASE, data_limit=LIMIT, fvn=fvn(1.5 * FVN_STD, ramp)), iid=False),
-        "E8": dict(plan=FederatedPlan(**BASE, fvn=fvn(1.5 * FVN_STD, ramp)), iid=False),
-        "E9": dict(plan=FederatedPlan(**{**BASE, **decay}, data_limit=LIMIT,
-                                      fvn=fvn(1.5 * FVN_STD, ramp)), iid=False),
-        "E10": dict(plan=FederatedPlan(**{**BASE, **decay}, data_limit=LIMIT,
-                                       fvn=fvn(1.5 * FVN_STD, ramp)), iid=False,
-                    specaug_scale=2.0),
-    }
-    return plans
-
-
-_MEM = {}
-MEAN_CLIENT_EXAMPLES = 24.0          # corpus mean_utterances
-
-
-def experiment_rounds(plan) -> int:
-    """Equal-examples budgeting: the paper trains every config to
-    convergence; data-limited rounds see fewer examples, so they get
-    proportionally more rounds ("the entire per-speaker dataset was
-    still seen over the course of multiple rounds", §4.2.1)."""
-    if plan.data_limit is None:
-        return ROUNDS
-    mult = MEAN_CLIENT_EXAMPLES / plan.data_limit
-    return int(ROUNDS * max(1.0, min(mult, 5.0)))
+    """The ladder's {eid: {plan, iid, ...}} specs (tables/fig3 use the
+    plan objects for CFMQ accounting)."""
+    return ladder_specs(ROUNDS)
 
 
 def run_experiment(eid: str, seed: int = 0) -> dict:
@@ -77,30 +54,17 @@ def run_experiment(eid: str, seed: int = 0) -> dict:
         with open(path) as f:
             _MEM[key] = json.load(f)
         return _MEM[key]
-    import dataclasses
 
-    spec = ladder_plans()[eid]
-    cfg, corpus = tiny_asr_setup(seed)
-    t0 = time.time()
-    n_rounds = experiment_rounds(spec["plan"])
-    plan = spec["plan"]
-    if plan.fvn.enabled and plan.fvn.ramp_rounds:
-        plan = dataclasses.replace(
-            plan, fvn=dataclasses.replace(plan.fvn, ramp_rounds=n_rounds // 2))
-    if plan.server_decay_rounds:
-        plan = dataclasses.replace(plan, server_decay_rounds=max(5, n_rounds // 4))
-    spec = dict(spec, plan=plan)
-    _, hist = run_federated_asr(
-        cfg, corpus, spec["plan"], rounds=n_rounds, seed=seed, iid=spec["iid"],
-        specaug_scale=spec.get("specaug_scale", 1.0), eval_examples=64)
+    (point,) = ladder_points(ROUNDS, seed=seed, experiments=[eid])
+    row = shared_runner().run_point(point)
     out = {
-        "id": eid, "rounds": n_rounds,
-        "final_loss": hist["final_loss"],
-        "wer": hist["wer"], "wer_hard": hist["wer_hard"],
-        "cfmq_tb": hist["cfmq_tb"], "cfmq_bytes": hist["cfmq_bytes"],
-        "n_params": hist["n_params"],
-        "wall_s": time.time() - t0,
-        "loss_curve": hist["loss"][:: max(1, n_rounds // 50)],
+        "id": eid, "rounds": row["rounds"],
+        "final_loss": row["final_loss"],
+        "wer": row["wer"], "wer_hard": row["wer_hard"],
+        "cfmq_tb": row["cfmq_tb"], "cfmq_bytes": row["cfmq_bytes"],
+        "n_params": row["n_params"],
+        "wall_s": row["wall_s"],
+        "loss_curve": row["loss_curve"],
     }
     with open(path, "w") as f:
         json.dump(out, f)

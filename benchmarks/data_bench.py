@@ -1,0 +1,78 @@
+"""Host data-plane micro-benches: round packing + async prefetch.
+
+``fed_pack_vectorized`` is the tentpole number: arena fancy-indexing
+vs the legacy per-example Python loop at the bench round shape
+(K=8, S=8, b=4 -> 256 examples/round). Medians over batched reps so
+container timer noise doesn't swamp the ratio.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.data import FederatedSampler, PrefetchIterator, make_speaker_corpus, round_batches
+
+
+def _median_us(fn, reps: int = 30, batch: int = 10) -> float:
+    fn()
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(batch):
+            fn()
+        samples.append((time.perf_counter() - t0) / batch * 1e6)
+    return float(np.median(samples))
+
+
+def bench_packing(K: int = 8, S: int = 8, b: int = 4):
+    """Vectorized vs legacy round packing (acceptance: >=5x)."""
+    corpus = make_speaker_corpus(num_speakers=48, vocab_size=64, feat_dim=16,
+                                 mean_utterances=40.0, seed=0)
+    limit = S * b
+    vec = FederatedSampler(corpus, K, b, data_limit=limit, seed=0)
+    leg = FederatedSampler(corpus, K, b, data_limit=limit, seed=0, legacy=True)
+    assert vec.steps == S, vec.steps
+    t_vec = _median_us(vec.next_round)
+    t_leg = _median_us(leg.next_round)
+    speedup = t_leg / t_vec
+    print(csv_row(f"fed_pack_vectorized_K{K}S{S}b{b}", t_vec,
+                  f"legacy_us={t_leg:.1f};speedup={speedup:.1f}x"))
+    return t_vec, t_leg, speedup
+
+
+def bench_prefetch(rounds: int = 30, compute_ms: float = 3.0):
+    """Serial pack->compute vs prefetch-overlapped (simulated device
+    step of ``compute_ms``); ideal overlap hides all packing time."""
+    corpus = make_speaker_corpus(num_speakers=48, vocab_size=64, feat_dim=16,
+                                 mean_utterances=40.0, seed=0)
+
+    def make_sampler():
+        return FederatedSampler(corpus, 8, 4, data_limit=32, seed=0)
+
+    t0 = time.perf_counter()
+    for batch in round_batches(make_sampler(), rounds):
+        time.sleep(compute_ms / 1e3)
+    t_serial = (time.perf_counter() - t0) / rounds * 1e6
+
+    with PrefetchIterator(round_batches(make_sampler(), rounds),
+                          device_put=False) as it:
+        t0 = time.perf_counter()
+        for batch in it:
+            time.sleep(compute_ms / 1e3)
+        t_prefetch = (time.perf_counter() - t0) / rounds * 1e6
+
+    hidden = t_serial - t_prefetch
+    print(csv_row("fed_round_prefetch", t_prefetch,
+                  f"serial_us={t_serial:.1f};hidden_us={hidden:.1f}"))
+    return t_prefetch, t_serial
+
+
+def main():
+    bench_packing()
+    bench_prefetch()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,40 +1,66 @@
 """Benchmark harness entry point — one function per paper table.
 
-``PYTHONPATH=src python -m benchmarks.run [--rounds N] [--tables t1,t3]``
+``PYTHONPATH=src python -m benchmarks.run [--smoke] [--tables t1,t3]``
 
 Prints (a) name,us_per_call,derived CSV lines for the micro-benches and
 (b) the paper's Tables 1-5 + Fig. 3 reproduced on the synthetic
 speaker-split corpus with PASS/FAIL on each qualitative claim.
 Set REPRO_BENCH_ROUNDS to control the round budget (default 150).
+
+``--smoke`` is the CI mode: a tiny round budget and a tables subset
+(<2 min) writing the same ``results/bench_summary.json`` schema.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
+
+SMOKE_ROUNDS = "6"
+SMOKE_TABLES = ["kernels", "data", "t1", "fig3"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--tables", default="all",
-                    help="comma list: t1,t2,t3,t4,t5,fig3,kernels or all")
+    ap.add_argument("--tables", default=None,
+                    help="comma list: t1,t2,t3,t4,t5,fig3,kernels,data or all")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI budget: tiny rounds + tables subset, same "
+                         "summary schema")
     ap.add_argument("--out", default="results/bench_summary.json")
     args = ap.parse_args()
 
-    from benchmarks import kernels_bench, tables
+    if args.smoke:
+        # must precede the benchmarks.common import: the round budget is
+        # read at module import
+        os.environ.setdefault("REPRO_BENCH_ROUNDS", SMOKE_ROUNDS)
 
-    want = args.tables.split(",") if args.tables != "all" else \
-        ["kernels", "t1", "t2", "t3", "t4", "t5", "fig3"]
+    from benchmarks import data_bench, kernels_bench, tables
+
+    if args.tables:
+        want = args.tables.split(",")
+    elif args.smoke:
+        want = list(SMOKE_TABLES)
+    else:
+        want = ["kernels", "data", "t1", "t2", "t3", "t4", "t5", "fig3"]
+    if want == ["all"]:
+        want = ["kernels", "data", "t1", "t2", "t3", "t4", "t5", "fig3"]
     t0 = time.time()
-    summary = {}
+    summary = {"smoke": args.smoke}
     if "kernels" in want:
         print("== kernel micro-benches (name,us_per_call,derived) ==")
         kernels_bench.main()
+    if "data" in want:
+        print("== data-plane micro-benches (name,us_per_call,derived) ==")
+        _, _, speedup = data_bench.bench_packing()
+        data_bench.bench_prefetch()
+        summary["data"] = {"pack_speedup": speedup, "pass": speedup >= 5.0}
     fns = {"t1": tables.table1_noniid_gap, "t2": tables.table2_data_limiting,
            "t3": tables.table3_fvn, "t4": tables.table4_fvn_no_limit,
            "t5": tables.table5_cost, "fig3": tables.fig3_quality_cost}
-    passes = []
+    passes = [summary["data"]["pass"]] if "data" in summary else []
     for k, fn in fns.items():
         if k in want:
             res = fn()
@@ -42,8 +68,7 @@ def main() -> None:
             passes.append(res["pass"])
     print(f"\n== summary: {sum(bool(p) for p in passes)}/{len(passes)} "
           f"qualitative claims reproduced; wall={time.time()-t0:.0f}s ==")
-    import os
-    os.makedirs("results", exist_ok=True)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(summary, f, indent=1)
 

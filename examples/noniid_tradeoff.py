@@ -1,42 +1,35 @@
 """The paper's core idea as one picture: sweep the non-IID dial (per-
 client data limit) and plot quality vs CFMQ cost (Fig. 3 flavor).
 
+Thin wrapper over the multi-sweep runner (``repro.launch.sweeps``),
+which shares one corpus + one jitted round fn across all sweep points
+and prefetches round batches asynchronously:
+
     PYTHONPATH=src python examples/noniid_tradeoff.py --rounds 60
+    PYTHONPATH=src python -m repro.launch.sweeps --grid noniid_fvn  # same engine
 """
 import argparse
-import json
 
-from repro.core import FederatedPlan, FVNConfig
-from repro.launch.train import run_federated_asr, tiny_asr_setup
+from repro.launch.sweeps import run_grid
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--fvn", action="store_true", help="also sweep with FVN on")
+    ap.add_argument("--smoke", action="store_true", help="tiny CI budget")
     ap.add_argument("--out", default="results/noniid_tradeoff.json")
     args = ap.parse_args()
 
-    cfg, corpus = tiny_asr_setup(seed=0)
-    rows = []
-    fvn_opts = [False, True] if args.fvn else [False]
-    for fvn_on in fvn_opts:
-        for limit in (1, 2, 4, 8, None):
-            plan = FederatedPlan(
-                clients_per_round=8, local_batch_size=4, data_limit=limit,
-                client_lr=0.3, server_lr=0.05, server_warmup_rounds=4,
-                fvn=FVNConfig(enabled=fvn_on, std=0.03,
-                              ramp_rounds=args.rounds // 2))
-            _, h = run_federated_asr(cfg, corpus, plan, rounds=args.rounds,
-                                     seed=0, eval_examples=48)
-            rows.append(dict(limit=limit, fvn=fvn_on, loss=h["final_loss"],
-                             wer=h["wer"], cfmq_tb=h["cfmq_tb"]))
-            print(f"limit={str(limit):>4s} fvn={fvn_on}: loss={h['final_loss']:.3f} "
-                  f"wer={h['wer']:.3f} cfmq={h['cfmq_tb']:.5f}TB")
+    frontier = run_grid(
+        "noniid_fvn", rounds=args.rounds, smoke=args.smoke, out=args.out,
+        fvn_opts=(False, True) if args.fvn else (False,))
+    for r in frontier["points"]:
+        print(f"limit={str(r['limit']):>4s} fvn={r['fvn']}: "
+              f"loss={r['final_loss']:.3f} wer={r['wer']:.3f} "
+              f"cfmq={r['cfmq_tb']:.5f}TB{'  <- pareto' if r['pareto'] else ''}")
     print("\nsmaller limit -> closer to IID (better quality per round) but "
           "more rounds/bytes per example — the paper's §2.2 trade-off.")
-    with open(args.out, "w") as f:
-        json.dump(rows, f, indent=1)
 
 
 if __name__ == "__main__":

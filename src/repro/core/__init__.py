@@ -12,7 +12,9 @@ from repro.core.fedavg import (
     init_server_state,
     make_fedavg_round,
     make_fedsgd_round,
+    make_hyper_round_step,
     make_round_step,
+    plan_hypers,
 )
 from repro.core.cfmq import CFMQTerms, cfmq, mu_local_steps, paper_payload, paper_peak_memory
 from repro.core import fvn
@@ -26,7 +28,9 @@ __all__ = [
     "init_server_state",
     "make_fedavg_round",
     "make_fedsgd_round",
+    "make_hyper_round_step",
     "make_round_step",
+    "plan_hypers",
     "CFMQTerms",
     "cfmq",
     "mu_local_steps",

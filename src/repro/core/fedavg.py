@@ -52,7 +52,7 @@ def init_server_state(plan: FederatedPlan, params: PyTree) -> ServerState:
 def _client_update(
     loss_fn: Callable,
     client_opt: Optimizer,
-    plan: FederatedPlan,
+    sigma_fn: Optional[Callable],
     base_key,
     params: PyTree,
     client_batch: PyTree,
@@ -61,17 +61,19 @@ def _client_update(
 ):
     """Local optimization for one client (vmapped over the K axis).
 
-    client_batch leaves have shape (S_local, b, ...). Returns
-    (delta = w^r - w_hat, mean loss, examples seen).
+    client_batch leaves have shape (S_local, b, ...). ``sigma_fn``
+    maps round_idx -> FVN noise std (None disables the perturbation
+    entirely; a sigma of 0.0 is numerically identical but keeps the
+    draw in the graph so one compilation covers FVN on AND off).
+    Returns (delta = w^r - w_hat, mean loss, examples seen).
     """
     n_steps = jax.tree.leaves(client_batch)[0].shape[0]
 
     def local_step(carry, inp):
         p, opt_state = carry
         step_batch, step_idx = inp
-        sigma = fvn_lib.fvn_sigma(plan.fvn, round_idx)
         key = fvn_lib.fvn_key(base_key, round_idx, client_idx, step_idx)
-        p_eval = fvn_lib.perturb(p, key, sigma) if plan.fvn.enabled else p
+        p_eval = p if sigma_fn is None else fvn_lib.perturb(p, key, sigma_fn(round_idx))
         data_key = jax.random.fold_in(key, 1)
         (loss, _aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             p_eval, step_batch, data_key)
@@ -93,6 +95,33 @@ def _client_update(
     return delta, mean_loss, n_k
 
 
+def _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn, base_key,
+                       state: ServerState, round_batch: PyTree):
+    """One FedAvg round given already-materialized optimizers/schedules."""
+    K = jax.tree.leaves(round_batch)[0].shape[0]
+
+    deltas, losses, n_k = jax.vmap(
+        lambda cb, ci: _client_update(
+            loss_fn, client_opt, sigma_fn, base_key,
+            state.params, cb, ci, state.round_idx)
+    )(round_batch, jnp.arange(K))
+
+    n = jnp.maximum(n_k.sum(), 1.0)
+    w = (n_k / n).astype(jnp.float32)                       # (K,)
+    wbar = jax.tree.map(
+        lambda d: jnp.tensordot(w, d, axes=(0, 0)), deltas)  # Σ_k n_k/n Δ_k
+
+    updates, opt_state = server_opt.update(wbar, state.opt_state, state.params)
+    params = apply_updates(state.params, updates)
+    metrics = {
+        "loss": (losses * n_k).sum() / n,
+        "examples": n_k.sum(),
+        "delta_norm": jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                                   for x in jax.tree.leaves(wbar))),
+    }
+    return ServerState(params, opt_state, state.round_idx + 1), metrics
+
+
 def make_fedavg_round(
     loss_fn: Callable,
     plan: FederatedPlan,
@@ -105,30 +134,11 @@ def make_fedavg_round(
     """
     client_opt = sgd(plan.client_lr)
     server_opt = make_server_optimizer(plan)
+    sigma_fn = (lambda r: fvn_lib.fvn_sigma(plan.fvn, r)) if plan.fvn.enabled else None
 
     def round_step(state: ServerState, round_batch: PyTree):
-        K = jax.tree.leaves(round_batch)[0].shape[0]
-
-        deltas, losses, n_k = jax.vmap(
-            lambda cb, ci: _client_update(
-                loss_fn, client_opt, plan, base_key,
-                state.params, cb, ci, state.round_idx)
-        )(round_batch, jnp.arange(K))
-
-        n = jnp.maximum(n_k.sum(), 1.0)
-        w = (n_k / n).astype(jnp.float32)                       # (K,)
-        wbar = jax.tree.map(
-            lambda d: jnp.tensordot(w, d, axes=(0, 0)), deltas)  # Σ_k n_k/n Δ_k
-
-        updates, opt_state = server_opt.update(wbar, state.opt_state, state.params)
-        params = apply_updates(state.params, updates)
-        metrics = {
-            "loss": (losses * n_k).sum() / n,
-            "examples": n_k.sum(),
-            "delta_norm": jnp.sqrt(sum(jnp.sum(jnp.square(x))
-                                       for x in jax.tree.leaves(wbar))),
-        }
-        return ServerState(params, opt_state, state.round_idx + 1), metrics
+        return _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn,
+                                  base_key, state, round_batch)
 
     return round_step
 
@@ -147,39 +157,126 @@ def make_fedsgd_round(
     FSDP-sharded, no per-client weight replicas exist.
     """
     server_opt = make_server_optimizer(plan)
+    sigma_fn = (lambda r: fvn_lib.fvn_sigma(plan.fvn, r)) if plan.fvn.enabled else None
 
     def round_step(state: ServerState, round_batch: PyTree):
-        K, S = jax.tree.leaves(round_batch)[0].shape[:2]
-        flat = jax.tree.map(
-            lambda x: x.reshape((K * S * x.shape[2],) + x.shape[3:]), round_batch)
-        sigma = fvn_lib.fvn_sigma(plan.fvn, state.round_idx)
-        key = fvn_lib.fvn_key(base_key, state.round_idx, 0, 0)
-        p_eval = (fvn_lib.perturb(state.params, key, sigma)
-                  if plan.fvn.enabled else state.params)
-        data_key = jax.random.fold_in(key, 1)
-        (loss, _aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            p_eval, flat, data_key)
-        # delta of the 1-step client update = client_lr * grad
-        wbar = jax.tree.map(lambda g: plan.client_lr * g.astype(jnp.float32), grads)
-        updates, opt_state = server_opt.update(wbar, state.opt_state, state.params)
-        params = apply_updates(state.params, updates)
-        w = flat.get("weight")
-        n = w.sum() if w is not None else jnp.asarray(K * S, jnp.float32)
-        metrics = {
-            "loss": loss,
-            "examples": n,
-            "delta_norm": jnp.sqrt(sum(jnp.sum(jnp.square(x))
-                                       for x in jax.tree.leaves(wbar))),
-        }
-        return ServerState(params, opt_state, state.round_idx + 1), metrics
+        return _fedsgd_round_body(loss_fn, server_opt, sigma_fn, plan.client_lr,
+                                  base_key, state, round_batch)
 
     return round_step
+
+
+def _fedsgd_round_body(loss_fn, server_opt, sigma_fn, client_lr, base_key,
+                       state: ServerState, round_batch: PyTree):
+    K, S = jax.tree.leaves(round_batch)[0].shape[:2]
+    flat = jax.tree.map(
+        lambda x: x.reshape((K * S * x.shape[2],) + x.shape[3:]), round_batch)
+    key = fvn_lib.fvn_key(base_key, state.round_idx, 0, 0)
+    p_eval = (state.params if sigma_fn is None
+              else fvn_lib.perturb(state.params, key, sigma_fn(state.round_idx)))
+    data_key = jax.random.fold_in(key, 1)
+    (loss, _aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        p_eval, flat, data_key)
+    # delta of the 1-step client update = client_lr * grad
+    wbar = jax.tree.map(lambda g: client_lr * g.astype(jnp.float32), grads)
+    updates, opt_state = server_opt.update(wbar, state.opt_state, state.params)
+    params = apply_updates(state.params, updates)
+    w = flat.get("weight")
+    n = w.sum() if w is not None else jnp.asarray(K * S, jnp.float32)
+    metrics = {
+        "loss": loss,
+        "examples": n,
+        "delta_norm": jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                                   for x in jax.tree.leaves(wbar))),
+    }
+    return ServerState(params, opt_state, state.round_idx + 1), metrics
 
 
 def make_round_step(loss_fn, plan: FederatedPlan, base_key):
     if plan.engine == "fedsgd":
         return make_fedsgd_round(loss_fn, plan, base_key)
     return make_fedavg_round(loss_fn, plan, base_key)
+
+
+# ----------------------------------------------------------------------
+# Hyper-parameterized round steps: every scalar knob a sweep varies
+# (client/server lr, warmup/decay, FVN std + ramp) enters as a *traced*
+# input instead of a Python constant, so ONE compiled round function
+# serves every point of a sweep grid that shares batch shapes and the
+# structural plan (engine + server optimizer family).
+# ----------------------------------------------------------------------
+
+HYPER_KEYS = ("client_lr", "server_lr", "warmup_rounds", "decay_rounds",
+              "decay_rate", "fvn_std", "fvn_ramp")
+
+
+def plan_hypers(plan: FederatedPlan) -> dict:
+    """The plan's dynamic scalars as f32 arrays (FVN off -> std 0)."""
+    return {
+        "client_lr": jnp.float32(plan.client_lr),
+        "server_lr": jnp.float32(plan.server_lr),
+        "warmup_rounds": jnp.float32(plan.server_warmup_rounds),
+        "decay_rounds": jnp.float32(plan.server_decay_rounds),
+        "decay_rate": jnp.float32(plan.server_decay_rate),
+        "fvn_std": jnp.float32(plan.fvn.std if plan.fvn.enabled else 0.0),
+        "fvn_ramp": jnp.float32(plan.fvn.ramp_rounds if plan.fvn.enabled else 0),
+    }
+
+
+def _hyper_server_lr(hypers, count):
+    """Unifies constant / linear-rampup / rampup+exp-decay (the three
+    schedules of server_lr_schedule) into one traced formula, matching
+    plan.server_lr_schedule exactly — including the decay path's
+    max(warmup, 1) floor on the warmup window."""
+    c = jnp.asarray(count, jnp.float32)
+    w = jnp.where(hypers["decay_rounds"] > 0,
+                  jnp.maximum(hypers["warmup_rounds"], 1.0),
+                  hypers["warmup_rounds"])
+    warm = jnp.where(w > 0, jnp.minimum(c / jnp.maximum(w, 1.0), 1.0), 1.0)
+    decay = jnp.where(
+        hypers["decay_rounds"] > 0,
+        hypers["decay_rate"] ** (jnp.maximum(c - w, 0.0)
+                                 / jnp.maximum(hypers["decay_rounds"], 1.0)),
+        1.0)
+    return hypers["server_lr"] * warm * decay
+
+
+def _hyper_fvn_sigma(hypers, round_idx):
+    c = jnp.asarray(round_idx, jnp.float32)
+    frac = jnp.where(hypers["fvn_ramp"] > 0,
+                     jnp.minimum(c / jnp.maximum(hypers["fvn_ramp"], 1.0), 1.0),
+                     1.0)
+    return hypers["fvn_std"] * frac
+
+
+def make_hyper_round_step(loss_fn, engine: str = "fedavg",
+                          server_optimizer: str = "adam"):
+    """Returns round_step(state, round_batch, hypers, base_key).
+
+    Only ``engine`` and ``server_optimizer`` are compile-time structure;
+    everything in ``hypers`` (see HYPER_KEYS / plan_hypers) is traced.
+    The FVN perturbation always stays in the graph with a traced sigma
+    (0.0 == off, bit-identical to the unperturbed path), so FVN on/off
+    points share the compilation too.
+    """
+    from repro import optim
+
+    server_opt_fns = {"adam": optim.adam, "sgd": optim.sgd,
+                      "momentum": optim.momentum, "yogi": optim.yogi}
+    make_server = server_opt_fns[server_optimizer]
+
+    def round_step(state: ServerState, round_batch: PyTree, hypers: dict, base_key):
+        server_opt = make_server(lambda count: _hyper_server_lr(hypers, count))
+        sigma_fn = lambda r: _hyper_fvn_sigma(hypers, r)
+        if engine == "fedsgd":
+            return _fedsgd_round_body(loss_fn, server_opt, sigma_fn,
+                                      hypers["client_lr"], base_key,
+                                      state, round_batch)
+        client_opt = sgd(lambda count: hypers["client_lr"])
+        return _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn,
+                                  base_key, state, round_batch)
+
+    return round_step
 
 
 def server_state_specs(plan: FederatedPlan, param_specs, moment_specs=None):

@@ -27,6 +27,7 @@ class FederatedPlan:
     local_epochs: int = 1               # e
     local_steps: Optional[int] = None   # fixed step count (engine shape); None = from data
     data_limit: Optional[int] = None    # paper §4.2.1 non-IID dial (None = no limit)
+    client_sampling: str = "uniform"    # see repro.data.strategies registry
     client_lr: float = 0.008            # paper's coarse-swept client SGD lr
     server_optimizer: str = "adam"      # "adam" | "sgd" | "momentum" | "yogi"
     server_lr: float = 1e-3

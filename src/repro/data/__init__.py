@@ -5,6 +5,8 @@ from repro.data.pipeline import (
     FederatedSampler,
     pack_round,
 )
+from repro.data.prefetch import PrefetchIterator, round_batches
+from repro.data.strategies import available_strategies, get_strategy, register_strategy
 from repro.data.synthetic import synthetic_lm_clients, synthetic_lm_batch
 
 __all__ = [
@@ -14,6 +16,11 @@ __all__ = [
     "RoundBatch",
     "FederatedSampler",
     "pack_round",
+    "PrefetchIterator",
+    "round_batches",
+    "available_strategies",
+    "get_strategy",
+    "register_strategy",
     "synthetic_lm_clients",
     "synthetic_lm_batch",
 ]

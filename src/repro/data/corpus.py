@@ -47,8 +47,10 @@ class CorpusConfig:
 class SpeakerCorpus:
     """Container of per-speaker (features, labels) example lists.
 
-    Everything is padded to fixed shapes so federated round batches are
-    jit-stable:
+    All examples live in one padded arena built once at construction —
+    (num_speakers, n_max, ...) arrays — so the federated sampler packs
+    round batches by pure fancy-indexing with no per-example Python
+    loop. ``speakers[i]`` entries are views into the arena rows:
       features: (n_i, T_max, feat_dim) float32
       labels:   (n_i, U_max)           int32   (0 is blank / pad)
       label_len:(n_i,)                 int32
@@ -69,7 +71,10 @@ class SpeakerCorpus:
         base_p = 1.0 / ranks
         self.base_unigram = base_p / base_p.sum()
 
-        self.speakers = []
+        # Pass 1: per-speaker metadata draws. Each speaker has its own
+        # generator, carried into pass 2 so the example stream continues
+        # exactly where the metadata draws left off.
+        metas = []
         for s in range(cfg.num_speakers):
             srng = np.random.default_rng(cfg.seed * 100003 + s + 1)
             bias = srng.normal(0.0, cfg.speaker_bias_std, size=(F,)).astype(np.float32)
@@ -79,10 +84,23 @@ class SpeakerCorpus:
             else:
                 unigram = srng.dirichlet(self.base_unigram * (V - 1) * cfg.vocab_concentration)
             n = max(2, int(srng.lognormal(np.log(cfg.mean_utterances), cfg.utterance_sigma)))
-            feats = np.zeros((n, self.t_max, F), np.float32)
-            labels = np.zeros((n, self.u_max), np.int32)
-            label_len = np.zeros((n,), np.int32)
-            frame_len = np.zeros((n,), np.int32)
+            metas.append((srng, bias, gain, unigram, n))
+
+        # Pass 2: one padded arena for every speaker's examples.
+        P = cfg.num_speakers
+        self.counts = np.array([m[4] for m in metas], np.int64)
+        self.n_max = int(self.counts.max())
+        self.arena_features = np.zeros((P, self.n_max, self.t_max, F), np.float32)
+        self.arena_labels = np.zeros((P, self.n_max, self.u_max), np.int32)
+        self.arena_label_len = np.zeros((P, self.n_max), np.int32)
+        self.arena_frame_len = np.zeros((P, self.n_max), np.int32)
+
+        self.speakers = []
+        for s, (srng, bias, gain, unigram, n) in enumerate(metas):
+            feats = self.arena_features[s]
+            labels = self.arena_labels[s]
+            label_len = self.arena_label_len[s]
+            frame_len = self.arena_frame_len[s]
             for i in range(n):
                 u = int(srng.integers(cfg.min_label_len, cfg.max_label_len + 1))
                 toks = srng.choice(np.arange(1, V), size=u, p=unigram)
@@ -94,8 +112,8 @@ class SpeakerCorpus:
                 noise = srng.normal(0.0, cfg.noise_std, size=(t, F))
                 feats[i, :t] = gain * emission + bias + noise
             self.speakers.append(
-                dict(features=feats, labels=labels, label_len=label_len,
-                     frame_len=frame_len, bias=bias, gain=gain, n=n)
+                dict(features=feats[:n], labels=labels[:n], label_len=label_len[:n],
+                     frame_len=frame_len[:n], bias=bias, gain=gain, n=n)
             )
 
     @property

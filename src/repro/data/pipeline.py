@@ -11,6 +11,12 @@ The *data limit* L (paper §4.2.1) caps how many examples a client
 contributes in one round — the paper's dial between non-IID (L=None)
 and near-IID (L=1). The full per-speaker dataset is still traversed
 over multiple rounds via per-client cursors.
+
+Packing is pure numpy fancy-indexing against the corpus arena
+(one gather per field, no per-example Python loop); the original
+per-example loop survives behind ``legacy=True`` solely as the parity
+oracle for tests/benchmarks and will be removed once a few PRs of CI
+history have exercised the vectorized path.
 """
 from __future__ import annotations
 
@@ -18,6 +24,8 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
+
+from repro.data.strategies import get_strategy
 
 
 @dataclasses.dataclass
@@ -31,6 +39,28 @@ class RoundBatch:
 
     def tree(self):
         return dataclasses.asdict(self)
+
+    def engine_batch(self) -> dict:
+        """The round engine's input layout (mask enters as "weight")."""
+        return {"features": self.features, "labels": self.labels,
+                "frame_len": self.frame_len, "label_len": self.label_len,
+                "weight": self.mask}
+
+    def pad_steps(self, steps: int) -> "RoundBatch":
+        """Append weight-0 local steps up to ``steps`` (exact no-ops
+        under the engine's n_k weighting) so differently-shaped rounds
+        can share one compiled round fn."""
+        S = self.mask.shape[1]
+        if steps <= S:
+            return self
+
+        def pad(a):
+            extra = np.zeros((a.shape[0], steps - S) + a.shape[2:], a.dtype)
+            return np.concatenate([a, extra], axis=1)
+
+        return RoundBatch(pad(self.features), pad(self.labels),
+                          pad(self.label_len), pad(self.frame_len),
+                          pad(self.mask), self.n_k)
 
 
 class FederatedSampler:
@@ -46,6 +76,9 @@ class FederatedSampler:
         local_epochs: int = 1,
         seed: int = 0,
         max_steps=None,
+        steps: Optional[int] = None,
+        strategy: str = "uniform",
+        legacy: bool = False,
     ):
         self.corpus = corpus
         self.K = clients_per_round
@@ -53,20 +86,118 @@ class FederatedSampler:
         self.data_limit = data_limit
         self.local_epochs = local_epochs
         self.rng = np.random.default_rng(seed)
+        self.legacy = legacy
+        self._select = get_strategy(strategy)
         # Per-client cursors so data-limited rounds still traverse all data.
         self._cursors = np.zeros(corpus.num_speakers, np.int64)
+        self._counts = np.array([s["n"] for s in corpus.speakers], np.int64)
         self._orders = [
             np.random.default_rng(seed + 7 * i).permutation(s["n"])
             for i, s in enumerate(corpus.speakers)
         ]
-        # Fixed max local steps for jit-stable shapes.
+        # Fixed max local steps for jit-stable shapes. ``steps`` forces
+        # an exact S (sweep runners pad every point to one shape so a
+        # single compiled round fn serves the whole grid).
+        self.steps = (int(steps) if steps is not None else
+                      self.natural_steps(corpus, local_batch_size,
+                                         data_limit=data_limit,
+                                         local_epochs=local_epochs,
+                                         max_steps=max_steps))
+
+    @staticmethod
+    def natural_steps(corpus, local_batch_size: int,
+                      data_limit: Optional[int] = None, local_epochs: int = 1,
+                      max_steps: Optional[int] = None) -> int:
+        """The local-step count a round needs to hold every selected
+        client's (possibly limited) contribution — the single source of
+        truth for batch shapes AND for CFMQ mu accounting (sweeps)."""
         if data_limit is not None:
             n_max = data_limit
         else:
             n_max = int(max(s["n"] for s in corpus.speakers))
-        self.steps = max(1, int(np.ceil(local_epochs * n_max / self.b)))
+        steps = max(1, int(np.ceil(local_epochs * n_max / local_batch_size)))
         if max_steps is not None:
-            self.steps = min(self.steps, max_steps)
+            steps = min(steps, max_steps)
+        return steps
+
+    def _client_indices(self, cid: int) -> np.ndarray:
+        """This round's example indices for one client (length = limit),
+        advancing the cursor with a reshuffle at each full pass. Loops
+        over *passes* (segments), never over examples."""
+        n = int(self._counts[cid])
+        limit = min(self.data_limit, n) if self.data_limit is not None else n
+        c = int(self._cursors[cid])
+        pos = c % n
+        if limit <= n - pos and not (pos == 0 and c > 0):
+            # fast path: the whole contribution sits inside the current
+            # pass — return a view of the live order, no copies
+            self._cursors[cid] = c + limit
+            return self._orders[cid][pos:pos + limit]
+        out = np.empty(limit, np.int64)
+        filled = 0
+        while filled < limit:
+            if c % n == 0 and c > 0:
+                self._orders[cid] = self.rng.permutation(n)
+            take = min(n - c % n, limit - filled)
+            out[filled:filled + take] = self._orders[cid][c % n:c % n + take]
+            filled += take
+            c += take
+        self._cursors[cid] = c
+        return out
+
+    def _gather_indices(self, chosen: np.ndarray):
+        """(K, S*b) example-index matrix (-1 = padding) + per-client n_k.
+
+        The K-iteration loop only advances cursors/reshuffles (which is
+        inherently sequential in the RNG stream); all example payloads
+        move in the single arena gather in ``next_round``."""
+        E = self.steps * self.b
+        ex = np.full((len(chosen), E), -1, np.int64)
+        n_k = np.zeros((len(chosen),), np.float32)
+        for j, cid in enumerate(chosen):
+            idx = self._client_indices(int(cid))
+            if self.local_epochs > 1:
+                idx = np.tile(idx, self.local_epochs)
+            m = min(len(idx), E)
+            ex[j, :m] = idx[:m]
+            n_k[j] = m
+        return ex, n_k
+
+    def next_round(self) -> RoundBatch:
+        K, b, S = self.K, self.b, self.steps
+        chosen = np.asarray(self._select(self.rng, self.corpus, K), np.int64)
+        if self.legacy:
+            return self._next_round_legacy(chosen)
+        ex, n_k = self._gather_indices(chosen)
+        pad = ex < 0
+        np.copyto(ex, 0, where=pad)                  # safe gather index
+        rows = chosen[:, None]                       # (K, 1) client ids
+        c = self.corpus
+        # fancy-indexing copies, so padded slots can be zeroed in place
+        feats = c.arena_features[rows, ex]           # (K, S*b, T, F)
+        labels = c.arena_labels[rows, ex]
+        label_len = c.arena_label_len[rows, ex]
+        frame_len = c.arena_frame_len[rows, ex]
+        if pad.any():
+            feats[pad] = 0.0
+            labels[pad] = 0
+            label_len[pad] = 0
+            frame_len[pad] = 0
+        mask = (~pad).astype(np.float32)
+        T, F = feats.shape[2:]
+        U = labels.shape[-1]
+        return RoundBatch(
+            feats.reshape(K, S, b, T, F),
+            labels.reshape(K, S, b, U),
+            label_len.reshape(K, S, b),
+            frame_len.reshape(K, S, b),
+            mask.reshape(K, S, b),
+            n_k,
+        )
+
+    # ------------------------------------------------------------------
+    # Legacy per-example packing: parity oracle only (see module doc).
+    # ------------------------------------------------------------------
 
     def _client_examples(self, cid: int):
         sp = self.corpus.speakers[cid]
@@ -84,9 +215,8 @@ class FederatedSampler:
             self._cursors[cid] += 1
         return np.asarray(idx, np.int64)
 
-    def next_round(self) -> RoundBatch:
+    def _next_round_legacy(self, chosen) -> RoundBatch:
         K, b, S = self.K, self.b, self.steps
-        chosen = self.rng.choice(self.corpus.num_speakers, size=K, replace=False)
         c0 = self.corpus.speakers[0]
         T, F = c0["features"].shape[1:]
         U = c0["labels"].shape[1]

@@ -1,0 +1,90 @@
+"""Client sampling strategies for federated rounds.
+
+The paper samples K clients uniformly per round; its Fig. 2 shows the
+per-speaker utterance histogram is roughly log-normal, so uniform
+sampling makes a round's *example* mass very uneven across rounds.
+This registry opens the dial on that second non-IID axis:
+
+- ``uniform``: the paper's default — every speaker equally likely.
+- ``weighted-by-examples``: selection probability proportional to the
+  client's utterance count, so heavy speakers appear in more rounds
+  (round example-mass variance shrinks; per-speaker coverage skews).
+- ``stratified``: split speakers into utterance-count quantile strata
+  and draw round-robin across strata, guaranteeing every round mixes
+  data-rich and data-poor clients.
+
+A strategy is ``fn(rng, corpus, k) -> (k,) int64`` of distinct client
+ids. Register new ones with ``@register_strategy("name")``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+Strategy = Callable[[np.random.Generator, object, int], np.ndarray]
+
+_STRATEGIES: Dict[str, Strategy] = {}
+
+
+def register_strategy(name: str):
+    def deco(fn: Strategy) -> Strategy:
+        _STRATEGIES[name] = fn
+        return fn
+
+    return deco
+
+
+def get_strategy(name: str) -> Strategy:
+    try:
+        return _STRATEGIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown client sampling strategy {name!r}; "
+            f"available: {sorted(_STRATEGIES)}") from None
+
+
+def available_strategies() -> list[str]:
+    return sorted(_STRATEGIES)
+
+
+def _counts(corpus) -> np.ndarray:
+    """Per-speaker example counts without per-round Python iteration
+    (the arena builds ``counts`` once; fall back for duck-typed corpora)."""
+    c = getattr(corpus, "counts", None)
+    return c if c is not None else corpus.utterance_histogram()
+
+
+@register_strategy("uniform")
+def uniform(rng: np.random.Generator, corpus, k: int) -> np.ndarray:
+    return rng.choice(corpus.num_speakers, size=k, replace=False)
+
+
+@register_strategy("weighted-by-examples")
+def weighted_by_examples(rng: np.random.Generator, corpus, k: int) -> np.ndarray:
+    counts = _counts(corpus).astype(np.float64)
+    p = counts / counts.sum()
+    return rng.choice(corpus.num_speakers, size=k, replace=False, p=p)
+
+
+@register_strategy("stratified")
+def stratified(rng: np.random.Generator, corpus, k: int) -> np.ndarray:
+    """Round-robin over utterance-count quantile strata (Fig. 2 skew)."""
+    counts = _counts(corpus)
+    n_strata = int(min(4, k, corpus.num_speakers))
+    # speakers sorted by count, split into n_strata near-equal bins
+    order = np.argsort(counts, kind="stable")
+    strata = np.array_split(order, n_strata)
+    # shuffle within each stratum, then deal clients round-robin
+    pools = [rng.permutation(s) for s in strata]
+    chosen = []
+    i = 0
+    while len(chosen) < k:
+        pool = pools[i % n_strata]
+        j = i // n_strata
+        if j < len(pool):
+            chosen.append(pool[j])
+        i += 1
+        if i >= n_strata * max(len(p) for p in pools):
+            break
+    return np.asarray(chosen[:k], np.int64)

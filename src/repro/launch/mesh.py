@@ -9,18 +9,27 @@ from __future__ import annotations
 import jax
 
 
+def compat_make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist from jax 0.5; older releases
+    default every axis to Auto anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; 2 pods = 512 chips when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1-device mesh for CPU smoke runs of the pjit code paths."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 # TPU v5e hardware constants for the roofline (per chip).

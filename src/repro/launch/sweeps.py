@@ -1,0 +1,386 @@
+"""Multi-sweep experiment runner — the paper's grids as declarative specs.
+
+The paper's central artifact is a *sweep*: vary the non-IID dial (the
+per-client data limit, §4.2.1) and/or FVN (§4.2.2) and measure quality
+vs CFMQ cost (Fig. 3). This module expresses those grids as lists of
+``SweepPoint``s and runs them on shared infrastructure:
+
+- ONE corpus + model bundle built per runner, reused by every point;
+- ONE jitted round function per (engine, server-optimizer, batch
+  shape): every scalar knob a sweep varies — client/server lr, warmup,
+  decay, FVN std/ramp — enters the compiled function as a *traced*
+  hyper input (see ``repro.core.fedavg.make_hyper_round_step``), and
+  all points are padded to a common local-step count, so the whole grid
+  shares one compilation;
+- async host->device prefetch (``repro.data.prefetch``) per point.
+
+Grids:
+- ``noniid_fvn``: data-limit x FVN cross — the Fig. 3 quality/cost
+  frontier (engine behind ``examples/noniid_tradeoff.py``);
+- ``ladder``: the paper's E0-E10 experiment ladder at container scale
+  (engine behind ``benchmarks/tables.py``).
+
+CLI::
+
+    PYTHONPATH=src python -m repro.launch.sweeps --grid noniid_fvn --smoke
+    PYTHONPATH=src python -m repro.launch.sweeps --grid ladder --rounds 100
+
+emits one frontier JSON (WER + final loss vs ``cfmq_tb`` per point,
+pareto-marked) under ``results/``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core import (
+    FederatedPlan,
+    FVNConfig,
+    cfmq,
+    init_server_state,
+    make_hyper_round_step,
+    plan_hypers,
+)
+from repro.data import FederatedSampler, PrefetchIterator, pack_round
+from repro.models import build_model
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One experiment of a sweep: a plan plus its run budget."""
+    id: str
+    plan: FederatedPlan
+    rounds: int
+    iid: bool = False                    # feed IID-shuffled pools (E0 style)
+    specaug_scale: float = 1.0
+    seed: int = 0
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+class SweepRunner:
+    """Runs SweepPoints against one shared corpus + jit cache.
+
+    ``pad_steps=True`` forces every point of a grid to the grid's max
+    local-step count S; padded steps carry weight-0 batches, which the
+    engine's n_k weighting makes exact no-ops, so all points share one
+    compiled round fn (verified in tests/test_data_plane.py). Default
+    False: at full round budgets the no-op steps cost more than the
+    per-shape retraces they avoid — ``run_grid`` flips it on for smoke
+    runs, where compile time dominates.
+    """
+
+    def __init__(self, cfg=None, corpus=None, seed: int = 0,
+                 eval_examples: int = 64, prefetch: bool = True,
+                 pad_steps: bool = False):
+        if cfg is None or corpus is None:
+            from repro.launch.train import tiny_asr_setup
+
+            cfg, corpus = tiny_asr_setup(seed)
+        self.cfg = cfg
+        self.corpus = corpus
+        self.eval_examples = eval_examples
+        self.prefetch = prefetch
+        self.pad_steps = pad_steps
+        self._bundles: Dict[float, object] = {}
+        self._jit_cache: Dict[tuple, Callable] = {}
+
+    # -------------------------------------------------------- internals
+
+    def _bundle(self, specaug_scale: float):
+        if specaug_scale not in self._bundles:
+            cfg = self.cfg
+            if specaug_scale != 1.0:
+                sa = cfg.specaug
+                cfg = dataclasses.replace(
+                    cfg, specaug=dataclasses.replace(
+                        sa,
+                        freq_masks=max(1, int(round(sa.freq_masks * specaug_scale))),
+                        time_masks=max(1, int(round(sa.time_masks * specaug_scale)))))
+            self._bundles[specaug_scale] = (cfg, build_model(cfg))
+        return self._bundles[specaug_scale]
+
+    def _round_fn(self, plan: FederatedPlan, specaug_scale: float):
+        key = (plan.engine, plan.server_optimizer, float(specaug_scale))
+        if key not in self._jit_cache:
+            _, bundle = self._bundle(specaug_scale)
+            self._jit_cache[key] = jax.jit(make_hyper_round_step(
+                bundle.loss_fn, plan.engine, plan.server_optimizer))
+        return self._jit_cache[key]
+
+    def native_steps(self, plan: FederatedPlan) -> int:
+        """The local-step count the plan would get on its own (the
+        FederatedSampler formula) — CFMQ accounting always uses this,
+        never the padded shape."""
+        return FederatedSampler.natural_steps(
+            self.corpus, plan.local_batch_size, data_limit=plan.data_limit,
+            local_epochs=plan.local_epochs, max_steps=plan.local_steps)
+
+    def common_steps(self, points) -> Optional[int]:
+        if not self.pad_steps:
+            return None
+        return max(self.native_steps(p.plan) for p in points)
+
+    # ------------------------------------------------------------- runs
+
+    def run_point(self, point: SweepPoint, steps: Optional[int] = None,
+                  log=print) -> dict:
+        plan = point.plan
+        cfg, bundle = self._bundle(point.specaug_scale)
+        params = bundle.init(jax.random.PRNGKey(point.seed))
+        n_params = bundle.param_count(params)
+        state = init_server_state(plan, params)
+        round_fn = self._round_fn(plan, point.specaug_scale)
+        hypers = plan_hypers(plan)
+        base_key = jax.random.PRNGKey(point.seed + 1)
+
+        native = self.native_steps(plan)
+        S = steps if steps is not None else native
+        sampler = FederatedSampler(
+            self.corpus, clients_per_round=plan.clients_per_round,
+            local_batch_size=plan.local_batch_size, data_limit=plan.data_limit,
+            local_epochs=plan.local_epochs, seed=point.seed, steps=S,
+            strategy=plan.client_sampling)
+        rng = np.random.default_rng(point.seed)
+
+        def host_batches():
+            for _ in range(point.rounds):
+                if point.iid:
+                    pool = self.corpus.iid_pool()
+                    idx = rng.permutation(pool["labels"].shape[0])
+                    pool = {k: v[idx] for k, v in pool.items()}
+                    # pack at the plan's native steps, then zero-pad to
+                    # the grid shape — pad_steps must stay a no-op, not
+                    # extra weight-1 recycled examples
+                    rb = pack_round(pool, plan.clients_per_round, native,
+                                    plan.local_batch_size).pad_steps(S)
+                else:
+                    rb = sampler.next_round()
+                yield rb.engine_batch()
+
+        t0 = time.time()
+        losses = []
+        batches = (PrefetchIterator(host_batches(), depth=2) if self.prefetch
+                   else map(lambda b: jax.tree.map(jax.numpy.asarray, b),
+                            host_batches()))
+        try:
+            for batch in batches:
+                state, metrics = round_fn(state, batch, hypers, base_key)
+                losses.append(float(metrics["loss"]))
+        finally:
+            if self.prefetch:
+                batches.close()
+
+        from repro.launch.train import evaluate_wer
+
+        wers = evaluate_wer(cfg, bundle, state.params, self.corpus,
+                            self.eval_examples)
+        mu = plan.local_epochs * (plan.data_limit or native * plan.local_batch_size)
+        terms = cfmq(rounds=point.rounds, clients_per_round=plan.clients_per_round,
+                     model_bytes=n_params * plan.param_bytes,
+                     local_steps=mu / plan.local_batch_size, alpha=plan.alpha)
+        row = {
+            "id": point.id,
+            "rounds": point.rounds,
+            "final_loss": float(np.mean(losses[-5:])),
+            "wer": wers["wer"], "wer_hard": wers["wer_hard"],
+            "cfmq_tb": terms.total_terabytes, "cfmq_bytes": terms.total_bytes,
+            "n_params": n_params,
+            "wall_s": time.time() - t0,
+            "loss_curve": losses[:: max(1, point.rounds // 50)],
+            **point.meta,
+        }
+        log(f"  {point.id:>10s}: loss={row['final_loss']:.3f} "
+            f"wer={row['wer']:.3f} cfmq={row['cfmq_tb']:.5f}TB "
+            f"({row['wall_s']:.0f}s)")
+        return row
+
+    def run(self, points, log=print) -> list[dict]:
+        steps = self.common_steps(points)
+        if steps is not None:
+            log(f"[sweeps] {len(points)} points padded to S={steps} local "
+                f"steps -> one compiled round fn per engine/optimizer")
+        return [self.run_point(p, steps=steps, log=log) for p in points]
+
+
+# ----------------------------------------------------------------------
+# Grids
+# ----------------------------------------------------------------------
+
+def noniid_fvn_points(rounds: int = 60, smoke: bool = False, seed: int = 0,
+                      limits=(1, 2, 4, 8, None), fvn_opts=(False, True),
+                      client_sampling: str = "uniform") -> list[SweepPoint]:
+    """Data-limit x FVN cross — the paper's Fig. 3 frontier grid."""
+    if smoke:
+        rounds = min(rounds, 6)
+        limits = (1, 4, None)
+    points = []
+    for fvn_on in fvn_opts:
+        for limit in limits:
+            plan = FederatedPlan(
+                clients_per_round=8, local_batch_size=4, data_limit=limit,
+                local_steps=12, client_lr=0.3, server_lr=0.05,
+                server_warmup_rounds=4, client_sampling=client_sampling,
+                fvn=FVNConfig(enabled=fvn_on, std=0.03,
+                              ramp_rounds=max(1, rounds // 2)))
+            points.append(SweepPoint(
+                id=f"L{limit if limit is not None else 'inf'}_fvn{int(fvn_on)}",
+                plan=plan, rounds=rounds, seed=seed,
+                meta={"limit": limit, "fvn": fvn_on}))
+    return points
+
+
+# Container-scale ladder constants (shared with benchmarks/common.py).
+LADDER_BASE = dict(clients_per_round=8, local_batch_size=4, client_lr=0.3,
+                   server_lr=0.05, local_steps=12)
+LADDER_LIMIT = 8
+LADDER_FVN_STD = 0.02
+MEAN_CLIENT_EXAMPLES = 24.0          # tiny corpus mean_utterances
+
+
+def ladder_rounds(plan: FederatedPlan, rounds: int) -> int:
+    """Equal-examples budgeting: the paper trains every config to
+    convergence; data-limited rounds see fewer examples, so they get
+    proportionally more rounds ("the entire per-speaker dataset was
+    still seen over the course of multiple rounds", §4.2.1)."""
+    if plan.data_limit is None:
+        return rounds
+    mult = MEAN_CLIENT_EXAMPLES / plan.data_limit
+    return int(rounds * max(1.0, min(mult, 5.0)))
+
+
+def ladder_specs(rounds: int = 100) -> dict:
+    """The paper's E0-E10 ladder (Tables 1-5) as plan specs."""
+    fvn = lambda std, ramp=0: FVNConfig(enabled=True, std=std, ramp_rounds=ramp)
+    base = dict(LADDER_BASE, server_warmup_rounds=max(2, rounds // 15))
+    ramp = rounds // 2
+    decay = dict(server_warmup_rounds=max(2, rounds // 30),
+                 server_decay_rounds=max(5, rounds // 4), server_decay_rate=0.85)
+    L, STD = LADDER_LIMIT, LADDER_FVN_STD
+    return {
+        "E0": dict(plan=FederatedPlan(**base, fvn=fvn(STD, ramp)), iid=True),
+        "E1": dict(plan=FederatedPlan(**base), iid=False),
+        "E2": dict(plan=FederatedPlan(**base, data_limit=L), iid=False),
+        "E3": dict(plan=FederatedPlan(**base, data_limit=2 * L), iid=False),
+        "E4": dict(plan=FederatedPlan(**base, data_limit=4 * L), iid=False),
+        "E5": dict(plan=FederatedPlan(**base, data_limit=L, fvn=fvn(STD / 2)), iid=False),
+        "E6": dict(plan=FederatedPlan(**base, data_limit=L, fvn=fvn(STD)), iid=False),
+        "E7": dict(plan=FederatedPlan(**base, data_limit=L,
+                                      fvn=fvn(1.5 * STD, ramp)), iid=False),
+        "E8": dict(plan=FederatedPlan(**base, fvn=fvn(1.5 * STD, ramp)), iid=False),
+        "E9": dict(plan=FederatedPlan(**{**base, **decay}, data_limit=L,
+                                      fvn=fvn(1.5 * STD, ramp)), iid=False),
+        "E10": dict(plan=FederatedPlan(**{**base, **decay}, data_limit=L,
+                                       fvn=fvn(1.5 * STD, ramp)), iid=False,
+                    specaug_scale=2.0),
+    }
+
+
+def ladder_points(rounds: int = 100, smoke: bool = False, seed: int = 0,
+                  experiments=None) -> list[SweepPoint]:
+    """E0-E10 as SweepPoints with per-point equal-examples budgets and
+    budget-scaled FVN ramps / LR decay (matching the bench harness)."""
+    if smoke:
+        rounds = min(rounds, 6)
+    specs = ladder_specs(rounds)
+    if experiments is not None:
+        specs = {e: specs[e] for e in experiments}
+    points = []
+    for eid, spec in specs.items():
+        plan = spec["plan"]
+        n_rounds = ladder_rounds(plan, rounds)
+        if plan.fvn.enabled and plan.fvn.ramp_rounds:
+            plan = dataclasses.replace(
+                plan, fvn=dataclasses.replace(plan.fvn, ramp_rounds=n_rounds // 2))
+        if plan.server_decay_rounds:
+            plan = dataclasses.replace(plan,
+                                       server_decay_rounds=max(5, n_rounds // 4))
+        points.append(SweepPoint(
+            id=eid, plan=plan, rounds=n_rounds, iid=spec["iid"],
+            specaug_scale=spec.get("specaug_scale", 1.0), seed=seed,
+            meta={"experiment": eid}))
+    return points
+
+
+GRIDS: Dict[str, Callable[..., list]] = {
+    "noniid_fvn": noniid_fvn_points,
+    "ladder": ladder_points,
+}
+
+
+# ----------------------------------------------------------------------
+# Frontier assembly + CLI
+# ----------------------------------------------------------------------
+
+def mark_pareto(rows: list[dict], cost="cfmq_tb", quality="wer") -> list[dict]:
+    """Flag points on the quality/cost pareto front (min both)."""
+    for r in rows:
+        r["pareto"] = not any(
+            (o[cost] <= r[cost] and o[quality] <= r[quality]) and
+            (o[cost] < r[cost] or o[quality] < r[quality])
+            for o in rows if o is not r)
+    return rows
+
+
+def run_grid(grid: str, rounds: Optional[int] = None, smoke: bool = False,
+             seed: int = 0, out: Optional[str] = None, runner: Optional[SweepRunner] = None,
+             pad_steps: Optional[bool] = None, log=print, **grid_kwargs) -> dict:
+    """Run a named grid and write one quality/cost frontier JSON.
+
+    ``pad_steps`` defaults to the smoke flag: with tiny round budgets
+    compile time dominates, so padding every point to one shape (one
+    compilation for the whole grid) wins; at full budgets the padded
+    no-op steps cost more than the extra per-shape retraces save.
+    """
+    make_points = GRIDS[grid]
+    kwargs = dict(grid_kwargs, smoke=smoke, seed=seed)
+    if rounds is not None:
+        kwargs["rounds"] = rounds
+    points = make_points(**kwargs)
+    if runner is None:
+        runner = SweepRunner(seed=seed,
+                             eval_examples=24 if smoke else 64,
+                             pad_steps=smoke if pad_steps is None else pad_steps)
+    t0 = time.time()
+    log(f"[sweeps] grid={grid} points={len(points)} "
+        f"rounds={[p.rounds for p in points]}")
+    rows = mark_pareto(runner.run(points, log=log))
+    frontier = {
+        "grid": grid, "smoke": smoke, "seed": seed,
+        "n_points": len(rows), "wall_s": time.time() - t0,
+        "points": rows,
+    }
+    out = out or f"results/sweep_{grid}.json"
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(frontier, f, indent=1)
+    log(f"[sweeps] frontier ({sum(r['pareto'] for r in rows)} pareto points) "
+        f"-> {out} [{frontier['wall_s']:.0f}s]")
+    return frontier
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--grid", default="noniid_fvn", choices=sorted(GRIDS))
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny budget (<2min): fewer points, few rounds")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--pad-steps", dest="pad_steps", action="store_true",
+                    default=None, help="pad all points to one batch shape "
+                    "(one compiled round fn for the whole grid)")
+    ap.add_argument("--no-pad-steps", dest="pad_steps", action="store_false")
+    args = ap.parse_args()
+    run_grid(args.grid, rounds=args.rounds, smoke=args.smoke, seed=args.seed,
+             out=args.out, pad_steps=args.pad_steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,13 @@ from repro.asr.wer import wer
 from repro.checkpoint import Checkpointer
 from repro.configs import get_arch
 from repro.core import FederatedPlan, FVNConfig, cfmq, init_server_state, make_round_step
-from repro.data import FederatedSampler, make_speaker_corpus, pack_round
+from repro.data import (
+    FederatedSampler,
+    PrefetchIterator,
+    available_strategies,
+    make_speaker_corpus,
+    pack_round,
+)
 from repro.models import build_model
 from repro.models.rnnt import greedy_decode
 
@@ -60,6 +66,7 @@ def run_federated_asr(
     specaug_scale: float = 1.0,
     log=print,
     ckpt_dir: str | None = None,
+    prefetch: bool = True,
 ):
     """Returns history dict with per-round losses + final WERs + CFMQ."""
     if specaug_scale != 1.0:
@@ -79,39 +86,42 @@ def run_federated_asr(
         corpus, clients_per_round=plan.clients_per_round,
         local_batch_size=plan.local_batch_size, data_limit=plan.data_limit,
         local_epochs=plan.local_epochs, seed=seed,
-        max_steps=plan.local_steps)
+        max_steps=plan.local_steps, strategy=plan.client_sampling)
     rng = np.random.default_rng(seed)
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
 
+    def host_batches():
+        """Host packing stream — runs on the prefetch worker thread so
+        round r+1 packs (and transfers) while the device runs round r."""
+        for _ in range(rounds):
+            if iid:
+                # fresh IID shuffle each round
+                pool = corpus.iid_pool()
+                idx = rng.permutation(pool["labels"].shape[0])
+                pool = {k: v[idx] for k, v in pool.items()}
+                rb = pack_round(pool, plan.clients_per_round, sampler.steps,
+                                plan.local_batch_size)
+            else:
+                rb = sampler.next_round()
+            yield rb.engine_batch()
+
     history = {"loss": [], "rounds": rounds}
     t0 = time.time()
-    for r in range(rounds):
-        if iid:
-            rb = pack_round(corpus.iid_pool(), plan.clients_per_round,
-                            sampler.steps, plan.local_batch_size)
-            # fresh IID shuffle each round
-            pool = corpus.iid_pool()
-            idx = rng.permutation(pool["labels"].shape[0])
-            pool = {k: v[idx] for k, v in pool.items()}
-            rb = pack_round(pool, plan.clients_per_round, sampler.steps,
-                            plan.local_batch_size)
-        else:
-            rb = sampler.next_round()
-        batch = {
-            "features": jnp.asarray(rb.features),
-            "labels": jnp.asarray(rb.labels),
-            "frame_len": jnp.asarray(rb.frame_len),
-            "label_len": jnp.asarray(rb.label_len),
-            "weight": jnp.asarray(rb.mask),
-        }
-        state, metrics = round_step(state, batch)
-        history["loss"].append(float(metrics["loss"]))
-        if eval_every and (r + 1) % eval_every == 0:
-            w = evaluate_wer(cfg, bundle, state.params, corpus, eval_examples)
-            log(f"round {r+1}: loss={history['loss'][-1]:.4f} "
-                f"wer={w['wer']:.3f} wer_hard={w['wer_hard']:.3f}")
-        if ckpt and (r + 1) % max(1, rounds // 3) == 0:
-            ckpt.save(r + 1, state.params)
+    batches = (PrefetchIterator(host_batches(), depth=2) if prefetch
+               else map(lambda b: jax.tree.map(jnp.asarray, b), host_batches()))
+    try:
+        for r, batch in enumerate(batches):
+            state, metrics = round_step(state, batch)
+            history["loss"].append(float(metrics["loss"]))
+            if eval_every and (r + 1) % eval_every == 0:
+                w = evaluate_wer(cfg, bundle, state.params, corpus, eval_examples)
+                log(f"round {r+1}: loss={history['loss'][-1]:.4f} "
+                    f"wer={w['wer']:.3f} wer_hard={w['wer_hard']:.3f}")
+            if ckpt and (r + 1) % max(1, rounds // 3) == 0:
+                ckpt.save(r + 1, state.params)
+    finally:
+        if prefetch:
+            batches.close()
 
     history["train_time_s"] = time.time() - t0
     history.update(evaluate_wer(cfg, bundle, state.params, corpus, eval_examples))
@@ -152,6 +162,10 @@ def main():
     ap.add_argument("--iid", action="store_true")
     ap.add_argument("--server-lr", type=float, default=0.01)
     ap.add_argument("--client-lr", type=float, default=0.05)
+    ap.add_argument("--client-sampling", default="uniform",
+                    choices=available_strategies())
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable the async host->device prefetch")
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -165,12 +179,14 @@ def main():
     plan = FederatedPlan(
         clients_per_round=args.clients, local_batch_size=args.batch,
         data_limit=args.data_limit, client_lr=args.client_lr,
+        client_sampling=args.client_sampling,
         server_lr=args.server_lr, server_warmup_rounds=max(2, args.rounds // 8),
         fvn=FVNConfig(enabled=args.fvn_std > 0, std=args.fvn_std,
                       ramp_rounds=args.fvn_ramp),
     )
     _, hist = run_federated_asr(cfg, corpus, plan, args.rounds, iid=args.iid,
-                                eval_every=args.eval_every)
+                                eval_every=args.eval_every,
+                                prefetch=not args.no_prefetch)
     print(json.dumps({k: v for k, v in hist.items() if k != "loss"}, indent=1))
     if args.out:
         with open(args.out, "w") as f:

@@ -1,9 +1,21 @@
-"""CFMQ (Eqs. 1-2) unit + property tests, incl. the paper's own numbers."""
+"""CFMQ (Eqs. 1-2) unit + property tests, incl. the paper's own numbers.
+
+The property tests run under hypothesis when it is installed and fall
+back to a fixed deterministic case list otherwise, so tier-1 collects
+and passes without the dev extra.
+"""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
 
 from repro.core.cfmq import cfmq, mu_local_steps, paper_payload, paper_peak_memory
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs the dev extra
+    HAVE_HYPOTHESIS = False
 
 
 def test_eq1_mu():
@@ -31,15 +43,7 @@ def test_paper_scale_cfmq():
     assert 100 < terms.total_terabytes < 10000
 
 
-@settings(max_examples=50, deadline=None)
-@given(
-    rounds=st.integers(1, 10000),
-    K=st.integers(1, 512),
-    mb=st.floats(1e6, 1e12),
-    mu=st.floats(0.1, 100),
-    alpha=st.floats(0.0, 10.0),
-)
-def test_cfmq_properties(rounds, K, mb, mu, alpha):
+def _check_cfmq_properties(rounds, K, mb, mu, alpha):
     t = cfmq(rounds=rounds, clients_per_round=K, model_bytes=mb,
              local_steps=mu, alpha=alpha)
     # positivity & linearity in rounds
@@ -59,6 +63,36 @@ def test_cfmq_properties(rounds, K, mb, mu, alpha):
               local_steps=mu, alpha=0.0)
     np.testing.assert_allclose(t0.total_bytes,
                                rounds * K * paper_payload(mb), rtol=1e-9)
+
+
+# Deterministic fallback grid: corners + paper-magnitude interior points.
+CFMQ_CASES = [
+    (1, 1, 1e6, 0.1, 0.0),
+    (1, 512, 1e12, 100.0, 10.0),
+    (3000, 128, 488e6, 1.0, 1.0),
+    (10000, 1, 1e6, 100.0, 0.0),
+    (7, 32, 5e8, 4.0, 2.5),
+    (250, 64, 1e9, 0.5, 0.1),
+]
+
+
+@pytest.mark.parametrize("rounds,K,mb,mu,alpha", CFMQ_CASES)
+def test_cfmq_properties_deterministic(rounds, K, mb, mu, alpha):
+    _check_cfmq_properties(rounds, K, mb, mu, alpha)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        rounds=st.integers(1, 10000),
+        K=st.integers(1, 512),
+        mb=st.floats(1e6, 1e12),
+        mu=st.floats(0.1, 100),
+        alpha=st.floats(0.0, 10.0),
+    )
+    def test_cfmq_properties(rounds, K, mb, mu, alpha):
+        _check_cfmq_properties(rounds, K, mb, mu, alpha)
 
 
 def test_data_limit_reduces_cfmq_e7_vs_e8():

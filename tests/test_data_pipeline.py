@@ -1,10 +1,16 @@
 """Speaker corpus + federated sampler: the non-IID dial's mechanics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.data import FederatedSampler, make_speaker_corpus, pack_round
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - deterministic fallback below
+    HAVE_HYPOTHESIS = False
 
 
 @pytest.fixture(scope="module")
@@ -61,9 +67,7 @@ def test_limited_rounds_traverse_all_data(corpus):
     assert s._cursors.sum() >= 12 * 2
 
 
-@settings(max_examples=15, deadline=None)
-@given(limit=st.integers(1, 8), K=st.integers(1, 6), b=st.integers(1, 4))
-def test_sampler_shapes_property(limit, K, b):
+def _check_sampler_shapes(limit, K, b):
     corpus = make_speaker_corpus(num_speakers=8, vocab_size=16, feat_dim=4,
                                  mean_utterances=6.0, seed=3)
     s = FederatedSampler(corpus, clients_per_round=K, local_batch_size=b,
@@ -75,6 +79,20 @@ def test_sampler_shapes_property(limit, K, b):
     assert (rb.n_k <= limit).all()
     # mask count == n_k per client
     np.testing.assert_allclose(rb.mask.sum(axis=(1, 2)), rb.n_k)
+
+
+@pytest.mark.parametrize("limit,K,b", [(1, 1, 1), (1, 6, 4), (8, 1, 1),
+                                       (8, 6, 4), (3, 4, 2), (5, 2, 3)])
+def test_sampler_shapes_deterministic(limit, K, b):
+    _check_sampler_shapes(limit, K, b)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(limit=st.integers(1, 8), K=st.integers(1, 6), b=st.integers(1, 4))
+    def test_sampler_shapes_property(limit, K, b):
+        _check_sampler_shapes(limit, K, b)
 
 
 def test_pack_round_iid():

@@ -1,0 +1,388 @@
+"""Vectorized data plane: arena packing parity, prefetch, sampling
+strategies, the hyper-parameterized round step, and the sweep runner."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (
+    FederatedSampler,
+    PrefetchIterator,
+    available_strategies,
+    get_strategy,
+    make_speaker_corpus,
+    round_batches,
+)
+
+FIELDS = ("features", "labels", "label_len", "frame_len", "mask", "n_k")
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_speaker_corpus(num_speakers=12, vocab_size=32, feat_dim=8,
+                               mean_utterances=10.0, seed=1)
+
+
+# ----------------------------------------------------------- arena + parity
+
+def test_corpus_arena_views(corpus):
+    assert corpus.arena_features.shape[0] == 12
+    assert corpus.arena_features.shape[1] == corpus.n_max
+    for i, s in enumerate(corpus.speakers):
+        n = s["n"]
+        assert corpus.counts[i] == n
+        # speakers are views into the arena, not copies
+        np.testing.assert_array_equal(corpus.arena_features[i, :n], s["features"])
+        assert np.shares_memory(corpus.arena_features, s["features"])
+
+
+@pytest.mark.parametrize("kw", [
+    dict(data_limit=3),
+    dict(),                                   # no limit: full client data
+    dict(data_limit=5, local_epochs=2),       # epoch tiling
+    dict(data_limit=20),                      # limit > n: multi-pass reshuffle
+    dict(data_limit=1),
+])
+def test_vectorized_matches_legacy(corpus, kw):
+    """The tentpole parity oracle: for a fixed seed the vectorized
+    gather produces bit-identical round batches to the per-example
+    loop, across enough rounds to hit cursor wraps + reshuffles."""
+    vec = FederatedSampler(corpus, clients_per_round=4, local_batch_size=2,
+                           seed=0, **kw)
+    leg = FederatedSampler(corpus, clients_per_round=4, local_batch_size=2,
+                           seed=0, legacy=True, **kw)
+    for r in range(12):
+        rv, rl = vec.next_round(), leg.next_round()
+        for f in FIELDS:
+            np.testing.assert_array_equal(
+                getattr(rv, f), getattr(rl, f), err_msg=f"round {r} field {f}")
+    np.testing.assert_array_equal(vec._cursors, leg._cursors)
+
+
+def test_next_round_dtypes_and_no_arena_aliasing(corpus):
+    s = FederatedSampler(corpus, clients_per_round=4, local_batch_size=2,
+                         data_limit=3, seed=0)
+    rb = s.next_round()
+    assert rb.features.dtype == np.float32
+    assert rb.labels.dtype == np.int32
+    assert not np.shares_memory(rb.features, corpus.arena_features)
+
+
+def test_steps_override_pads_with_zero_weight(corpus):
+    s8 = FederatedSampler(corpus, clients_per_round=4, local_batch_size=2,
+                          data_limit=3, seed=0, steps=8)
+    rb = s8.next_round()
+    assert rb.mask.shape == (4, 8, 2)
+    assert rb.mask.sum() == 12                # only the real examples
+    # padded slots are zeroed
+    assert (rb.features[rb.mask == 0] == 0).all()
+
+
+# ----------------------------------------------------------------- strategies
+
+def test_strategy_registry_contents():
+    names = available_strategies()
+    assert {"uniform", "weighted-by-examples", "stratified"} <= set(names)
+    with pytest.raises(KeyError):
+        get_strategy("nope")
+
+
+@pytest.mark.parametrize("name", ["uniform", "weighted-by-examples", "stratified"])
+def test_strategies_select_distinct_valid_clients(corpus, name):
+    fn = get_strategy(name)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        chosen = np.asarray(fn(rng, corpus, 6))
+        assert chosen.shape == (6,)
+        assert len(set(chosen.tolist())) == 6
+        assert (0 <= chosen).all() and (chosen < corpus.num_speakers).all()
+
+
+def test_weighted_strategy_prefers_data_rich_clients(corpus):
+    counts = corpus.utterance_histogram()
+    rng_u, rng_w = np.random.default_rng(0), np.random.default_rng(0)
+    uni, wei = [], []
+    for _ in range(300):
+        uni.append(counts[get_strategy("uniform")(rng_u, corpus, 4)].mean())
+        wei.append(counts[get_strategy("weighted-by-examples")(rng_w, corpus, 4)].mean())
+    assert np.mean(wei) > np.mean(uni) * 1.05
+
+
+def test_stratified_strategy_mixes_quantiles(corpus):
+    counts = corpus.utterance_histogram()
+    order = np.argsort(counts, kind="stable")
+    strata = [set(s.tolist()) for s in np.array_split(order, 4)]
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        chosen = set(get_strategy("stratified")(rng, corpus, 4).tolist())
+        # one client from every utterance-count quantile
+        assert all(chosen & s for s in strata)
+
+
+def test_sampler_accepts_strategy(corpus):
+    s = FederatedSampler(corpus, clients_per_round=4, local_batch_size=2,
+                         data_limit=2, seed=0, strategy="stratified")
+    rb = s.next_round()
+    assert rb.mask.sum() == 8
+
+
+# ------------------------------------------------------------------ prefetch
+
+def test_prefetch_preserves_order_and_values(corpus):
+    mk = lambda: FederatedSampler(corpus, 4, 2, data_limit=3, seed=0)
+    serial = list(round_batches(mk(), 10))
+    with PrefetchIterator(round_batches(mk(), 10), device_put=False) as it:
+        prefetched = list(it)
+    assert len(prefetched) == 10
+    for a, b in zip(serial, prefetched):
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_prefetch_device_put_yields_jax_arrays(corpus):
+    with PrefetchIterator(round_batches(FederatedSampler(corpus, 2, 2, seed=0), 2),
+                          depth=1) as it:
+        batch = next(it)
+    assert isinstance(batch["features"], jax.Array)
+
+
+def test_prefetch_early_close_stops_worker():
+    started = threading.Event()
+
+    def slow_source():
+        for i in range(1000):
+            started.wait(0)
+            yield {"i": np.asarray(i)}
+            time.sleep(0.001)
+
+    it = PrefetchIterator(slow_source(), depth=2, device_put=False)
+    assert next(it)["i"] == 0
+    it.close()
+    assert not it._thread.is_alive()
+    with pytest.raises(StopIteration):
+        next(it)
+
+
+def test_prefetch_propagates_source_exception():
+    def bad_source():
+        yield {"i": np.asarray(0)}
+        raise RuntimeError("boom")
+
+    with PrefetchIterator(bad_source(), device_put=False) as it:
+        assert next(it)["i"] == 0
+        with pytest.raises(RuntimeError, match="boom"):
+            next(it)
+
+
+def test_prefetch_overlaps_host_work():
+    """Consumer 'compute' and producer packing run concurrently: total
+    wall must be well under the serial sum."""
+    delay = 0.01
+
+    def source():
+        for i in range(10):
+            time.sleep(delay)
+            yield i
+
+    t0 = time.perf_counter()
+    with PrefetchIterator(source(), depth=2, device_put=False) as it:
+        for _ in it:
+            time.sleep(delay)
+    wall = time.perf_counter() - t0
+    assert wall < 10 * 2 * delay * 0.85, wall
+
+
+# --------------------------------------------- hyper round step + sweep glue
+
+W_TRUE = np.random.default_rng(42).normal(size=(4, 2)).astype(np.float32)
+
+
+def toy_loss(params, batch, rng):
+    pred = batch["x"] @ params["w"]
+    w = batch["weight"]
+    l = jnp.sum((pred - batch["y"]) ** 2 * w[:, None]) / jnp.maximum(w.sum(), 1)
+    return l, {}
+
+
+def toy_batch(K, S, b, seed=0):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(K, S, b, 4)).astype(np.float32)
+    return {"x": jnp.asarray(x), "y": jnp.asarray(x @ W_TRUE),
+            "weight": jnp.ones((K, S, b), jnp.float32)}
+
+
+def pad_toy_batch(batch, total_steps):
+    """Append weight-0 steps (the sweep runner's pad_steps layout)."""
+    def pad(a):
+        extra = np.zeros((a.shape[0], total_steps - a.shape[1]) + a.shape[2:],
+                         np.asarray(a).dtype)
+        return jnp.concatenate([a, jnp.asarray(extra)], axis=1)
+
+    return {k: pad(v) for k, v in batch.items()}
+
+
+@pytest.mark.parametrize("schedule_kw", [
+    dict(server_warmup_rounds=2, server_decay_rounds=6, server_decay_rate=0.8),
+    dict(server_warmup_rounds=0, server_decay_rounds=6, server_decay_rate=0.8),
+    dict(server_warmup_rounds=3),
+    dict(),                                   # constant lr
+])
+def test_hyper_round_step_matches_plain(schedule_kw):
+    from repro.core import (FederatedPlan, FVNConfig, init_server_state,
+                            make_hyper_round_step, make_round_step, plan_hypers)
+
+    plan = FederatedPlan(clients_per_round=4, client_lr=0.1,
+                         server_optimizer="adam", server_lr=0.05,
+                         fvn=FVNConfig(enabled=True, std=0.05, ramp_rounds=4),
+                         **schedule_kw)
+    key = jax.random.PRNGKey(9)
+    plain = jax.jit(make_round_step(toy_loss, plan, key))
+    hyper = jax.jit(make_hyper_round_step(toy_loss, plan.engine,
+                                          plan.server_optimizer))
+    hypers = plan_hypers(plan)
+    s1 = s2 = init_server_state(plan, {"w": jnp.zeros((4, 2))})
+    for r in range(6):
+        batch = toy_batch(4, 2, 4, seed=r)
+        s1, _ = plain(s1, batch)
+        s2, _ = hyper(s2, batch, hypers, key)
+    np.testing.assert_allclose(np.asarray(s1.params["w"]),
+                               np.asarray(s2.params["w"]), atol=1e-6)
+
+
+def test_hyper_round_step_shares_compilation_across_hypers():
+    from repro.core import (FederatedPlan, FVNConfig, init_server_state,
+                            make_hyper_round_step, plan_hypers)
+
+    plans = [
+        FederatedPlan(clients_per_round=4, client_lr=0.1, server_lr=0.05),
+        FederatedPlan(clients_per_round=4, client_lr=0.3, server_lr=0.01,
+                      server_warmup_rounds=5,
+                      fvn=FVNConfig(enabled=True, std=0.02, ramp_rounds=3)),
+    ]
+    hyper = jax.jit(make_hyper_round_step(toy_loss, "fedavg", "adam"))
+    key = jax.random.PRNGKey(0)
+    batch = toy_batch(4, 2, 4)
+    for plan in plans:
+        state = init_server_state(plan, {"w": jnp.zeros((4, 2))})
+        hyper(state, batch, plan_hypers(plan), key)
+    # both plans hit one trace: hypers are traced args, not constants
+    assert hyper._cache_size() == 1
+
+
+def test_padded_zero_weight_steps_are_noops():
+    """pad_steps correctness: a batch padded with weight-0 steps gives
+    the same server update as the unpadded batch."""
+    from repro.core import (FederatedPlan, init_server_state,
+                            make_hyper_round_step, plan_hypers)
+
+    plan = FederatedPlan(clients_per_round=3, client_lr=0.1,
+                         server_optimizer="adam", server_lr=0.05)
+    hyper = jax.jit(make_hyper_round_step(toy_loss, "fedavg", "adam"))
+    hypers = plan_hypers(plan)
+    key = jax.random.PRNGKey(1)
+    state0 = init_server_state(plan, {"w": jnp.zeros((4, 2))})
+
+    native = toy_batch(3, 2, 4, seed=5)
+    padded = pad_toy_batch(native, 6)
+    # identical real content
+    np.testing.assert_array_equal(np.asarray(native["x"]),
+                                  np.asarray(padded["x"][:, :2]))
+    s_native, m_native = hyper(state0, native, hypers, key)
+    s_padded, m_padded = hyper(state0, padded, hypers, key)
+    np.testing.assert_allclose(np.asarray(s_native.params["w"]),
+                               np.asarray(s_padded.params["w"]), atol=1e-6)
+    np.testing.assert_allclose(float(m_native["loss"]),
+                               float(m_padded["loss"]), atol=1e-6)
+
+
+def test_pack_round_pad_steps_is_weight_zero():
+    """IID points padded to a grid shape must gain weight-0 no-op
+    steps, never extra weight-1 recycled examples."""
+    from repro.data import pack_round
+
+    corpus = make_speaker_corpus(num_speakers=6, vocab_size=16, feat_dim=4,
+                                 mean_utterances=6.0, seed=4)
+    rb = pack_round(corpus.iid_pool(), K=3, steps=2, batch=2).pad_steps(5)
+    assert rb.mask.shape == (3, 5, 2)
+    assert rb.mask[:, :2].all() and not rb.mask[:, 2:].any()
+    assert (rb.features[:, 2:] == 0).all()
+    np.testing.assert_array_equal(rb.n_k, np.full(3, 4.0))
+
+
+def test_mark_pareto():
+    from repro.launch.sweeps import mark_pareto
+
+    rows = [
+        {"id": "a", "cfmq_tb": 1.0, "wer": 0.5},
+        {"id": "b", "cfmq_tb": 2.0, "wer": 0.4},
+        {"id": "c", "cfmq_tb": 2.0, "wer": 0.6},   # dominated by a and b
+        {"id": "d", "cfmq_tb": 0.5, "wer": 0.9},
+    ]
+    out = {r["id"]: r["pareto"] for r in mark_pareto(rows)}
+    assert out == {"a": True, "b": True, "c": False, "d": True}
+
+
+def test_noniid_fvn_grid_spec():
+    from repro.launch.sweeps import GRIDS, noniid_fvn_points
+
+    assert set(GRIDS) >= {"noniid_fvn", "ladder"}
+    pts = noniid_fvn_points(smoke=True)
+    assert len(pts) >= 6
+    assert len({p.id for p in pts}) == len(pts)
+    limits = {p.meta["limit"] for p in pts}
+    assert None in limits and len(limits) >= 3
+    assert {p.meta["fvn"] for p in pts} == {False, True}
+
+
+def test_ladder_points_budgets():
+    from repro.launch.sweeps import ladder_points
+
+    pts = {p.id: p for p in ladder_points(rounds=30)}
+    assert set(pts) == {f"E{i}" for i in range(11)}
+    assert pts["E0"].iid and not pts["E1"].iid
+    # equal-examples budgeting: tighter limits get more rounds
+    assert pts["E2"].rounds > pts["E3"].rounds > pts["E1"].rounds == 30
+    assert pts["E10"].specaug_scale == 2.0
+
+
+def test_sweep_runner_end_to_end(tmp_path):
+    """Two-point micro-sweep on a micro RNN-T: one shared jitted round
+    fn, frontier JSON written, rows carry quality/cost fields."""
+    from repro.asr.specaugment import SpecAugmentConfig
+    from repro.core import FederatedPlan, FVNConfig
+    from repro.launch.sweeps import SweepPoint, SweepRunner, mark_pareto
+    from repro.models.rnnt import RNNTConfig
+
+    cfg = RNNTConfig(name="rnnt-micro", feat_dim=8, vocab=16,
+                     enc_layers=1, enc_hidden=16, pred_layers=1, pred_hidden=16,
+                     pred_embed=8, joint_dim=16, time_stride=1,
+                     specaug=SpecAugmentConfig(freq_masks=1, freq_mask_width=2,
+                                               time_masks=1, time_mask_frac=0.05),
+                     dtype="float32", param_dtype="float32")
+    corpus = make_speaker_corpus(num_speakers=8, vocab_size=16, feat_dim=8,
+                                 mean_utterances=6.0, seed=3)
+    runner = SweepRunner(cfg=cfg, corpus=corpus, eval_examples=8,
+                         pad_steps=True)
+    points = [
+        SweepPoint(id="a", rounds=2, meta={"limit": 1},
+                   plan=FederatedPlan(clients_per_round=4, local_batch_size=2,
+                                      data_limit=1, client_lr=0.3, server_lr=0.05)),
+        SweepPoint(id="b", rounds=2, meta={"limit": 4},
+                   plan=FederatedPlan(clients_per_round=4, local_batch_size=2,
+                                      data_limit=4, client_lr=0.1, server_lr=0.01,
+                                      fvn=FVNConfig(enabled=True, std=0.01))),
+    ]
+    rows = mark_pareto(runner.run(points, log=lambda *a, **k: None))
+    assert [r["id"] for r in rows] == ["a", "b"]
+    for r in rows:
+        for k in ("final_loss", "wer", "wer_hard", "cfmq_tb", "rounds",
+                  "loss_curve", "pareto", "limit"):
+            assert k in r
+        assert np.isfinite(r["final_loss"])
+    # the two points differ in every traced hyper but share one compile
+    assert len(runner._jit_cache) == 1
+    (fn,) = runner._jit_cache.values()
+    assert fn._cache_size() == 1

@@ -2,10 +2,17 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
 
 from repro import optim
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - deterministic fallback below
+    HAVE_HYPOTHESIS = False
 
 
 def quad_loss(p):
@@ -77,9 +84,7 @@ def test_schedules():
     np.testing.assert_allclose([float(pw(5)), float(pw(15)), float(pw(25))], [1.0, 0.5, 0.1], rtol=1e-5)
 
 
-@settings(max_examples=20, deadline=None)
-@given(lr=st.floats(1e-4, 0.5), seed=st.integers(0, 100))
-def test_sgd_step_is_linear_in_grad(lr, seed):
+def _check_sgd_step_is_linear_in_grad(lr, seed):
     opt = optim.sgd(lr)
     p = {"w": jnp.zeros((3,))}
     s = opt.init(p)
@@ -88,6 +93,19 @@ def test_sgd_step_is_linear_in_grad(lr, seed):
     u2, _ = opt.update({"w": 2 * g}, s, p)
     np.testing.assert_allclose(np.asarray(u2["w"]), 2 * np.asarray(u1["w"]), rtol=1e-5)
     np.testing.assert_allclose(np.asarray(u1["w"]), -lr * np.asarray(g), rtol=1e-5)
+
+
+@pytest.mark.parametrize("lr,seed", [(1e-4, 0), (0.5, 100), (0.01, 7), (0.1, 42)])
+def test_sgd_step_is_linear_in_grad_deterministic(lr, seed):
+    _check_sgd_step_is_linear_in_grad(lr, seed)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(lr=st.floats(1e-4, 0.5), seed=st.integers(0, 100))
+    def test_sgd_step_is_linear_in_grad(lr, seed):
+        _check_sgd_step_is_linear_in_grad(lr, seed)
 
 
 def test_checkpointer_roundtrip(tmp_path):
