@@ -62,30 +62,61 @@ def bench_rnnt_joint():
     return t_c, t_n
 
 
-def bench_fed_round():
-    """Wall time of one jitted federated round at bench scale."""
-    from repro.core import FederatedPlan, init_server_state, make_round_step
+def _fed_round_setup():
+    from repro.core import FederatedPlan, init_server_state
     from repro.launch.train import tiny_asr_setup
     from repro.data import FederatedSampler
     from repro.models import build_model
 
     cfg, corpus = tiny_asr_setup(0)
     bundle = build_model(cfg)
-    plan = FederatedPlan(clients_per_round=8, local_batch_size=4, client_lr=0.3)
-    state = init_server_state(plan, bundle.init(jax.random.PRNGKey(0)))
-    step = jax.jit(make_round_step(bundle.loss_fn, plan, jax.random.PRNGKey(1)))
+    params = bundle.init(jax.random.PRNGKey(0))
     s = FederatedSampler(corpus, 8, 4, seed=0)
     rb = s.next_round()
     batch = {"features": jnp.asarray(rb.features), "labels": jnp.asarray(rb.labels),
              "frame_len": jnp.asarray(rb.frame_len), "label_len": jnp.asarray(rb.label_len),
              "weight": jnp.asarray(rb.mask)}
+    return bundle, params, batch
+
+
+def _time_round(bundle, params, batch, plan, name, derived):
+    from repro.core import init_server_state, make_round_step
+
+    state = init_server_state(plan, params)
+    step = jax.jit(make_round_step(bundle.loss_fn, plan, jax.random.PRNGKey(1)))
     state, _ = step(state, batch)          # compile
     t0 = time.perf_counter()
     for _ in range(3):
         state, m = step(state, batch)
     jax.block_until_ready(m["loss"])
     us = (time.perf_counter() - t0) / 3 * 1e6
-    print(csv_row("fed_round_tiny_rnnt", us, f"clients=8"))
+    print(csv_row(name, us, derived))
+    return us
+
+
+def bench_fed_round():
+    """Wall time of one jitted federated round at bench scale, plus the
+    compressed/robust server-plane variants: the in-graph quantize->
+    dequantize overhead vs the wire bytes it saves (bytes/round from
+    the exact per-client accounting, clients=8)."""
+    from repro.core import CompressionConfig, FederatedPlan, client_wire_bytes
+
+    bundle, params, batch = _fed_round_setup()
+    base = dict(clients_per_round=8, local_batch_size=4, client_lr=0.3)
+    us = _time_round(bundle, params, batch, FederatedPlan(**base),
+                     "fed_round_tiny_rnnt", "clients=8")
+    for name, plan in [
+        ("fed_round_tiny_rnnt_int8",
+         FederatedPlan(**base, compression=CompressionConfig(kind="int8"))),
+        # compression-only variants (weighted_mean) so the timings are
+        # attributable to the quantize/sparsify plane alone
+        ("fed_round_tiny_rnnt_top5",
+         FederatedPlan(**base, compression=CompressionConfig(kind="topk",
+                                                             topk_frac=0.05))),
+    ]:
+        up = 8 * client_wire_bytes(plan.compression, params)
+        _time_round(bundle, params, batch, plan, name,
+                    f"baseline_us={us:.1f};uplink_B_round={up}")
     return us
 
 

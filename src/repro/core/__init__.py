@@ -1,40 +1,79 @@
 """The paper's contribution: federated training with a quality/cost dial.
 
-- ``fedavg``  — FedAvg round engines (Alg. 1) as pjit-able pure functions
+- ``fedavg``  — FedAvg round engines (Alg. 1) as pjit-able pure functions,
+  composed as client deltas -> cohort -> compression -> aggregation
+  -> server optimizer
+- ``cohort``  — partial participation / dropout / straggler masks
+- ``compression`` — uplink delta compression with exact wire bytes
+- ``aggregation`` — pluggable server aggregators (weighted/trimmed
+  mean, coordinate median, clipped mean + DP noise)
 - ``fvn``     — Federated Variational Noise (§4.2.2)
 - ``cfmq``    — Cost of Federated Model Quality (§2.3, Eqs. 1-2)
 - ``plan``    — FederatedPlan experiment configuration
 - ``experiments`` — the paper's E0-E10 ladder as plans
 """
-from repro.core.plan import FederatedPlan, FVNConfig, make_server_optimizer, server_lr_schedule
+from repro.core.plan import (
+    CohortConfig,
+    FederatedPlan,
+    FVNConfig,
+    make_server_optimizer,
+    server_lr_schedule,
+)
 from repro.core.fedavg import (
+    ServerPlane,
     ServerState,
     init_server_state,
     make_fedavg_round,
     make_fedsgd_round,
     make_hyper_round_step,
     make_round_step,
+    make_server_plane,
     plan_hypers,
+    plan_server_plane,
 )
-from repro.core.cfmq import CFMQTerms, cfmq, mu_local_steps, paper_payload, paper_peak_memory
+from repro.core.aggregation import available_aggregators, get_aggregator, register_aggregator
+from repro.core.compression import CompressionConfig, client_wire_bytes, tree_param_bytes
+from repro.core.cfmq import (
+    CFMQTerms,
+    cfmq,
+    measured_payload,
+    mu_local_steps,
+    paper_payload,
+    paper_peak_memory,
+    plan_wire_accounting,
+    wire_payload,
+)
 from repro.core import fvn
 
 __all__ = [
+    "CohortConfig",
     "FederatedPlan",
     "FVNConfig",
     "make_server_optimizer",
     "server_lr_schedule",
+    "ServerPlane",
     "ServerState",
     "init_server_state",
     "make_fedavg_round",
     "make_fedsgd_round",
     "make_hyper_round_step",
     "make_round_step",
+    "make_server_plane",
     "plan_hypers",
+    "plan_server_plane",
+    "available_aggregators",
+    "get_aggregator",
+    "register_aggregator",
+    "CompressionConfig",
+    "client_wire_bytes",
+    "tree_param_bytes",
     "CFMQTerms",
     "cfmq",
+    "measured_payload",
     "mu_local_steps",
     "paper_payload",
     "paper_peak_memory",
+    "plan_wire_accounting",
+    "wire_payload",
     "fvn",
 ]

@@ -1,0 +1,136 @@
+"""Server-side aggregation registry — where non-IID damage is won or lost.
+
+The paper aggregates client deltas with the example-weighted mean
+(Alg. 1); related work (Hard et al. 2005.10406, Cui et al. 2102.04429)
+shows the aggregation rule itself is a lever against non-IID drift and
+corrupted/outlier clients. This registry makes the rule pluggable
+inside the jitted round step:
+
+- ``weighted_mean``  — Σ_k (n_k/n) Δ_k, the paper's rule and the
+  parity default (bit-identical to the legacy engine).
+- ``trimmed_mean``   — per coordinate, drop the ``trim_frac`` lowest
+  and highest participating clients, mean the rest (Yin et al. 2018).
+- ``coordinate_median`` — per-coordinate median over participants.
+- ``clipped_mean``   — per-client L2 clip to ``dp_clip`` then uniform
+  mean over participants plus N(0, (dp_sigma * dp_clip / m)^2) noise:
+  the DP-FedAvg Gaussian mechanism (noise off at dp_sigma=0).
+
+Every aggregator takes (deltas, n_k, pmask, hypers, key): ``deltas``
+leaves are (K, ...), ``n_k``/``pmask`` are (K,) with dropped clients
+already at 0 (see ``repro.core.cohort``), ``hypers`` carries the
+*traced* knobs (trim_frac, dp_clip, dp_sigma) so one compilation
+serves a grid. The robust rules are unweighted over participants
+(their robustness guarantee is per-client, not per-example) and mask
+non-participants by rank: values are sorted with non-participants
+pushed to +inf, so participant ranks occupy [0, m) and rank tests
+against traced m work for any cohort size.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+Aggregator = Callable[..., PyTree]
+
+_AGGREGATORS: Dict[str, Aggregator] = {}
+
+# Traced aggregator knobs and their plan defaults (see plan.FederatedPlan).
+AGG_HYPER_DEFAULTS = {"trim_frac": 0.1, "dp_clip": 1.0, "dp_sigma": 0.0}
+
+
+def register_aggregator(name: str):
+    def deco(fn: Aggregator) -> Aggregator:
+        _AGGREGATORS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_aggregator(name: str) -> Aggregator:
+    try:
+        return _AGGREGATORS[name]
+    except KeyError:
+        raise KeyError(f"unknown aggregator {name!r}; "
+                       f"available: {sorted(_AGGREGATORS)}") from None
+
+
+def available_aggregators() -> list[str]:
+    return sorted(_AGGREGATORS)
+
+
+@register_aggregator("weighted_mean")
+def weighted_mean(deltas: PyTree, n_k, pmask, hypers, key) -> PyTree:
+    """The paper's Σ_k (n_k/n) Δ_k — the legacy-parity default."""
+    n = jnp.maximum(n_k.sum(), 1.0)
+    w = (n_k / n).astype(jnp.float32)
+    return jax.tree.map(lambda d: jnp.tensordot(w, d, axes=(0, 0)), deltas)
+
+
+def _participant_ranks(flat, pmask):
+    """Ranks of each client's value per coordinate, participants first.
+
+    flat: (K, M); non-participants sort to the end (+inf), so a
+    participant's rank is its order statistic among the m participants.
+    """
+    vals = jnp.where(pmask[:, None] > 0, flat, jnp.inf)
+    order = jnp.argsort(vals, axis=0)
+    return jnp.argsort(order, axis=0).astype(jnp.float32)
+
+
+@register_aggregator("trimmed_mean")
+def trimmed_mean(deltas: PyTree, n_k, pmask, hypers, key) -> PyTree:
+    m = jnp.maximum(pmask.sum(), 1.0)
+    # trimmed per side, clamped so at least one client always survives
+    # (trim_frac >= 0.5 would otherwise zero the update silently)
+    t = jnp.clip(jnp.floor(hypers["trim_frac"] * m),
+                 0.0, jnp.ceil(m / 2.0) - 1.0)
+
+    def agg(d):
+        flat = d.astype(jnp.float32).reshape(d.shape[0], -1)
+        ranks = _participant_ranks(flat, pmask)
+        keep = ((ranks >= t) & (ranks < m - t) & (pmask[:, None] > 0))
+        cnt = jnp.maximum(keep.sum(axis=0), 1.0)
+        return ((flat * keep).sum(axis=0) / cnt).reshape(d.shape[1:])
+
+    return jax.tree.map(agg, deltas)
+
+
+@register_aggregator("coordinate_median")
+def coordinate_median(deltas: PyTree, n_k, pmask, hypers, key) -> PyTree:
+    m = jnp.maximum(pmask.sum(), 1.0)
+    lo = jnp.floor((m - 1.0) / 2.0)
+    hi = jnp.ceil((m - 1.0) / 2.0)
+
+    def agg(d):
+        flat = d.astype(jnp.float32).reshape(d.shape[0], -1)
+        ranks = _participant_ranks(flat, pmask)
+        keep = ((ranks == lo) | (ranks == hi)) & (pmask[:, None] > 0)
+        cnt = jnp.maximum(keep.sum(axis=0), 1.0)
+        return ((flat * keep).sum(axis=0) / cnt).reshape(d.shape[1:])
+
+    return jax.tree.map(agg, deltas)
+
+
+@register_aggregator("clipped_mean")
+def clipped_mean(deltas: PyTree, n_k, pmask, hypers, key) -> PyTree:
+    """DP-FedAvg: per-client L2 clip, uniform participant mean, then
+    Gaussian noise scaled to the clip-bounded sensitivity clip/m."""
+    clip = hypers["dp_clip"]
+    sigma = hypers["dp_sigma"]
+    m = jnp.maximum(pmask.sum(), 1.0)
+    sq = sum(jnp.sum(jnp.square(d.astype(jnp.float32)),
+                     axis=tuple(range(1, d.ndim)))
+             for d in jax.tree.leaves(deltas))              # (K,)
+    scale = jnp.minimum(1.0, clip / jnp.sqrt(jnp.maximum(sq, 1e-24)))
+    w = scale * pmask / m
+
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    keys = jax.random.split(key, len(leaves))
+    out = [jnp.tensordot(w, d.astype(jnp.float32), axes=(0, 0))
+           + (sigma * clip / m) * jax.random.normal(k, d.shape[1:], jnp.float32)
+           for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -8,7 +8,11 @@ client memory per step, alpha the balance term. The paper approximates
 P = 2 * model_bytes and nu = 1.1 * model_bytes (10% intermediate
 storage) with alpha = 1; those are the defaults here but every term is
 overridable so the launcher can substitute *measured* values from the
-dry-run's memory analysis.
+dry-run's memory analysis — and, since the uplink-compression
+subsystem (repro.core.compression), measured wire bytes from the round
+metrics via ``wire_payload`` (the sweep runner does this whenever a
+plan compresses or drops clients; default plans keep the paper
+formula as the parity path).
 """
 from __future__ import annotations
 
@@ -47,8 +51,42 @@ def mu_local_steps(local_epochs: float, examples_per_round: float,
 
 
 def paper_payload(model_bytes: float) -> float:
-    """Paper approximation: round trip = 2x model size."""
+    """Paper approximation: round trip = 2x model size (the default /
+    parity path — exact for fp32 uplink and full participation)."""
     return 2.0 * model_bytes
+
+
+def wire_payload(downlink_bytes: float, uplink_bytes: float,
+                 clients_per_round: int) -> float:
+    """Measured per-client round-trip payload P from wire-accurate
+    round totals (the round metrics' ``downlink_bytes`` /
+    ``uplink_bytes``, summed or averaged over rounds). With no
+    compression and full participation this equals ``paper_payload``:
+    down = up = K * model_bytes, so P = 2 * model_bytes.
+    """
+    return (downlink_bytes + uplink_bytes) / max(clients_per_round, 1)
+
+
+def plan_wire_accounting(plan, params) -> tuple[int, int]:
+    """(uplink bytes per reporting client, downlink bytes per round) as
+    exact Python ints over the param-tree shapes."""
+    from repro.core.compression import client_wire_bytes, tree_param_bytes
+
+    return (client_wire_bytes(plan.compression, params),
+            plan.clients_per_round * tree_param_bytes(params))
+
+
+def measured_payload(plan, params, mean_participants: float) -> Optional[float]:
+    """The single measured-vs-paper payload policy shared by the train
+    driver and the sweep runner: ``None`` for the paper/parity default
+    (no compression, full participation — callers fall back to
+    ``paper_payload``), else the wire-accurate per-client P with uplink
+    scaled by the mean number of reporting clients."""
+    if plan.compression.kind == "none" and plan.cohort.full:
+        return None
+    up_per_client, down_per_round = plan_wire_accounting(plan, params)
+    return wire_payload(down_per_round, up_per_client * mean_participants,
+                        plan.clients_per_round)
 
 
 def paper_peak_memory(model_bytes: float) -> float:

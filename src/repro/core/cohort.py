@@ -1,0 +1,80 @@
+"""Cohort dynamics — partial participation, dropout, stragglers.
+
+The paper samples K clients and assumes all K report back. Production
+cross-device FL does not get that luxury: clients go offline mid-round
+(dropout), report late (stragglers cut off at the aggregation
+deadline), or never start. This module models those dynamics *inside*
+the jitted round step as weight-mask transforms, which composes
+exactly with the engine's n_k example-weighting:
+
+- a dropped client's weights go to 0 for every local step, so its
+  local optimization is a provable no-op (zero grads), its delta is 0
+  and its n_k is 0 — it contributes nothing to the aggregate and
+  uploads nothing (the round metrics count uplink bytes only for
+  participants);
+- a straggler keeps only the first ``ceil(straggler_keep * S)`` local
+  steps — the deadline cuts its local pass short, but its partial
+  delta still aggregates (weighted by the examples it actually saw).
+
+All rates are *traced* scalars (see ``fedavg.HYPER_KEYS``), so one
+compiled round function serves a whole participation/straggler grid.
+Draws are derived from fold_in(base_key, round) on a dedicated stream
+tag — deterministic per round, independent of the FVN stream.
+
+A round is guaranteed at least one participant: when every Bernoulli
+draw fails, the client with the smallest uniform draw (the "most
+available" one) is kept, keeping n > 0 without biasing full-
+participation parity (participation=1.0 never triggers the rescue).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def participation_mask(key, K: int, participation):
+    """(K,) float32 mask of reporting clients; never all-zero."""
+    u = jax.random.uniform(key, (K,))
+    survivors = u < participation
+    rescue = u == u.min()                    # exactly the most-available client
+    return jnp.where(survivors.any(), survivors, rescue).astype(jnp.float32)
+
+
+def straggler_step_mask(key, weight, straggler_frac, straggler_keep):
+    """(K, S) float32 mask: stragglers keep only the first
+    ``ceil(straggler_keep * real_steps)`` of their *real* local steps.
+
+    real_steps counts steps with any nonzero example weight per client,
+    so zero-weight padding appended for shape sharing (``pad_steps``)
+    never changes straggler semantics — a padded round gives the same
+    deadline cut as the unpadded one.
+    """
+    K, S = weight.shape[:2]
+    is_straggler = jax.random.uniform(key, (K,)) < straggler_frac
+    real_steps = (weight.max(axis=2) > 0).sum(axis=1).astype(jnp.float32)
+    keep_steps = jnp.ceil(straggler_keep * real_steps)                # (K,)
+    step_ok = jnp.arange(S, dtype=jnp.float32)[None, :] < keep_steps[:, None]
+    return jnp.where(is_straggler[:, None], step_ok, True).astype(jnp.float32)
+
+
+def make_cohort_fn(participation, straggler_frac, straggler_keep):
+    """Returns cohort(key, weight) -> (weight', pmask).
+
+    ``weight`` is the round batch's (K, S, b) example mask; rates may
+    be Python floats (plan path) or traced scalars (hyper path) — the
+    graph is identical either way.
+    """
+    def cohort(key, weight):
+        K = weight.shape[0]
+        pmask = participation_mask(jax.random.fold_in(key, 0), K, participation)
+        smask = straggler_step_mask(jax.random.fold_in(key, 1), weight,
+                                    straggler_frac, straggler_keep)
+        return weight * pmask[:, None, None] * smask[:, :, None], pmask
+
+    return cohort
+
+
+def identity_cohort(key, weight):
+    """Full participation (the paper/parity path): no RNG in the graph."""
+    K = weight.shape[0]
+    return weight, jnp.ones((K,), jnp.float32)

@@ -1,0 +1,138 @@
+"""Uplink delta compression — the wire side of the CFMQ cost axis.
+
+The paper approximates the round-trip payload as ``2 x model_bytes``
+(§4.3.1); production cross-device FL compresses the *uplink* (client
+-> server) aggressively because client bandwidth dominates. This
+module provides in-graph quantize->dequantize compressors for the
+per-client deltas so the round step both (a) trains through the real
+quantization error and (b) reports the *exact* bytes each client
+would put on the wire:
+
+- ``int8`` / ``int4``: per-tensor absmax stochastic quantization.
+  Stochastic rounding keeps the dequantized delta unbiased
+  (E[Q(x)] = x), which is what lets the example-weighted mean still
+  converge; a 4-byte fp32 scale per tensor rides along.
+- ``topk``: per-tensor magnitude sparsification; only ``k = ceil(frac
+  * size)`` (value, index) pairs travel (4 + 4 bytes each).
+- ``none``: identity, fp32 on the wire (the paper/parity path).
+
+Kind and fractions are *static* (compile-time structure — they change
+wire layout and graph shape); the RNG key is traced. Byte accounting
+is pure Python over leaf shapes (``client_wire_bytes``) so CFMQ and
+the round metrics agree to the byte by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+KINDS = ("none", "int8", "int4", "topk")
+
+# fp32 scalar (scale) / value / index — all 4 bytes on the wire.
+_WORD = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Static uplink compression spec (part of the jit cache key)."""
+    kind: str = "none"          # none | int8 | int4 | topk
+    topk_frac: float = 0.05     # fraction of coordinates kept per tensor
+    stochastic: bool = True     # stochastic (unbiased) vs nearest rounding
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown compression kind {self.kind!r}; available: {KINDS}")
+        # only validate the knob that is actually in use, so callers can
+        # pass an inert topk_frac (e.g. a CLI default) with other kinds
+        if self.kind == "topk" and not 0.0 < self.topk_frac <= 1.0:
+            raise ValueError(f"topk_frac must be in (0, 1], got {self.topk_frac}")
+
+
+def _topk_count(frac: float, size: int) -> int:
+    return max(1, min(size, int(math.ceil(frac * size))))
+
+
+def leaf_wire_bytes(cfg: CompressionConfig, size: int) -> int:
+    """Exact uplink bytes for one tensor of ``size`` elements."""
+    if cfg.kind == "none":
+        return _WORD * size
+    if cfg.kind == "int8":
+        return size + _WORD                      # 1 B/elt + fp32 scale
+    if cfg.kind == "int4":
+        return (size + 1) // 2 + _WORD           # two elts per byte + scale
+    if cfg.kind == "topk":
+        return 2 * _WORD * _topk_count(cfg.topk_frac, size)
+    raise ValueError(cfg.kind)
+
+
+def client_wire_bytes(cfg: CompressionConfig, tree: PyTree) -> int:
+    """Exact per-client uplink bytes for one delta pytree."""
+    return sum(leaf_wire_bytes(cfg, int(l.size)) for l in jax.tree.leaves(tree))
+
+
+def tree_param_bytes(tree: PyTree) -> int:
+    """Downlink bytes: the server broadcasts the full model."""
+    return sum(int(l.size) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))
+
+
+# ----------------------------------------------------------------------
+# In-graph compressors: delta -> dequantized delta (same shape/dtype).
+# ----------------------------------------------------------------------
+
+def _quantize_leaf(x, key, bits: int, stochastic: bool):
+    """Per-tensor absmax intN quantize->dequantize (symmetric grid)."""
+    levels = 2.0 ** (bits - 1) - 1.0             # 127 (int8) / 7 (int4)
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32)) / levels
+    scale = jnp.where(scale > 0, scale, 1.0)
+    y = x32 / scale                              # in [-levels, levels]
+    if stochastic:
+        lo = jnp.floor(y)
+        q = lo + jax.random.bernoulli(key, y - lo).astype(jnp.float32)
+    else:
+        q = jnp.round(y)
+    q = jnp.clip(q, -levels, levels)
+    return (q * scale).astype(x.dtype)
+
+
+def _topk_leaf(x, frac: float):
+    """Keep the k largest-|x| coordinates, zero the rest (exact k)."""
+    flat = x.reshape(-1)
+    k = _topk_count(frac, flat.size)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return out.reshape(x.shape)
+
+
+def make_compressor(cfg: CompressionConfig):
+    """Returns compress(delta_tree, key) -> delta_tree (dequantized).
+
+    One independent RNG key per leaf; the caller supplies a per-client
+    key (vmapped over the K axis), so every client quantizes its own
+    delta with its own noise — exactly the production wire protocol,
+    minus the byte packing (accounted by ``client_wire_bytes``).
+    """
+    if cfg.kind == "none":
+        return lambda tree, key: tree
+    if cfg.kind == "topk":
+        return lambda tree, key: jax.tree.map(
+            lambda x: _topk_leaf(x, cfg.topk_frac), tree)
+
+    bits = {"int8": 8, "int4": 4}[cfg.kind]
+
+    def compress(tree, key):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        out = [_quantize_leaf(x, k, bits, cfg.stochastic)
+               for x, k in zip(leaves, keys)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return compress

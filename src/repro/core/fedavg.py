@@ -17,10 +17,21 @@ Two engines (see DESIGN.md §3):
   round is one example-weighted forward/backward over all clients'
   data. FVN degrades to one shared draw per round (documented).
 
-The server update treats the example-weighted average delta
-``wbar = sum_k (n_k/n) (w^r - w_k)`` as a pseudo-gradient for the
-server optimizer (Adam in the paper), i.e. adaptive federated
-optimization (Reddi et al.).
+The server update treats the aggregated delta ``wbar`` as a
+pseudo-gradient for the server optimizer (Adam in the paper), i.e.
+adaptive federated optimization (Reddi et al.).
+
+The round step is a composed server-side pipeline (one jitted graph):
+
+    client deltas -> cohort mask -> uplink compression -> aggregator
+                  -> server optimizer
+
+Each stage is pluggable (see ``repro.core.cohort`` / ``compression`` /
+``aggregation``); the defaults — full participation, no compression,
+example-weighted mean — reproduce the paper's Alg. 1 exactly and are
+the parity baseline for tests. The round metrics report the *exact*
+wire bytes of the configured compression so CFMQ can account measured
+(not approximated) communication cost.
 """
 from __future__ import annotations
 
@@ -31,6 +42,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fvn as fvn_lib
+from repro.core.aggregation import AGG_HYPER_DEFAULTS, get_aggregator
+from repro.core.cohort import identity_cohort, make_cohort_fn
+from repro.core.compression import (
+    CompressionConfig,
+    client_wire_bytes,
+    make_compressor,
+    tree_param_bytes,
+)
 from repro.core.plan import FederatedPlan, make_server_optimizer
 from repro.optim import Optimizer, apply_updates, sgd
 
@@ -41,6 +60,105 @@ class ServerState(NamedTuple):
     params: PyTree
     opt_state: PyTree
     round_idx: jnp.ndarray
+
+
+class ServerPlane(NamedTuple):
+    """The composed server side of one round: cohort -> compression ->
+    aggregation. Built once per (static) configuration; every traced
+    knob rides in via the closures (plan constants or hyper inputs)."""
+    cohort: Callable          # (key, weight) -> (weight', pmask)
+    compress: Callable        # (delta_tree, key) -> delta_tree
+    compression: CompressionConfig   # static: wire-byte accounting
+    aggregate: Callable       # (deltas, n_k, pmask, key) -> wbar
+
+
+# Distinct fold_in tags keep the plane's RNG streams away from the FVN
+# stream (which folds small client/step indices).
+_COHORT_TAG, _COMPRESS_TAG, _AGG_TAG = 0x636F68, 0x636D70, 0x616767
+
+
+def _plane_keys(base_key, round_idx):
+    rk = jax.random.fold_in(base_key, round_idx)
+    return (jax.random.fold_in(rk, _COHORT_TAG),
+            jax.random.fold_in(rk, _COMPRESS_TAG),
+            jax.random.fold_in(rk, _AGG_TAG))
+
+
+def make_server_plane(
+    aggregator: str = "weighted_mean",
+    compression: Optional[CompressionConfig] = None,
+    cohort_knobs: Optional[tuple] = None,   # (participation, frac, keep) or None
+    agg_hypers: Optional[dict] = None,
+) -> ServerPlane:
+    """Compose a server plane. ``cohort_knobs=None`` means the paper's
+    full-participation assumption (no cohort RNG enters the graph);
+    knob values may be Python floats or traced scalars."""
+    compression = compression or CompressionConfig()
+    cohort = (identity_cohort if cohort_knobs is None
+              else make_cohort_fn(*cohort_knobs))
+    agg_fn = get_aggregator(aggregator)
+    hyp = dict(AGG_HYPER_DEFAULTS, **(agg_hypers or {}))
+    return ServerPlane(
+        cohort=cohort,
+        compress=make_compressor(compression),
+        compression=compression,
+        aggregate=lambda deltas, n_k, pmask, key: agg_fn(
+            deltas, n_k, pmask, hyp, key),
+    )
+
+
+def plan_server_plane(plan: FederatedPlan) -> ServerPlane:
+    """The plan's server plane with all knobs as Python constants."""
+    knobs = (None if plan.cohort.full else
+             (plan.cohort.participation, plan.cohort.straggler_frac,
+              plan.cohort.straggler_keep))
+    return make_server_plane(
+        plan.aggregator, plan.compression, knobs,
+        {"trim_frac": plan.agg_trim_frac, "dp_clip": plan.dp_clip,
+         "dp_sigma": plan.dp_sigma})
+
+
+_PARITY_PLANE = make_server_plane()
+
+
+def _apply_cohort(plane: ServerPlane, ckey, round_batch: PyTree):
+    """Mask the round batch's example weights by the drawn cohort."""
+    weight = round_batch.get("weight") if hasattr(round_batch, "get") else None
+    K = jax.tree.leaves(round_batch)[0].shape[0]
+    if weight is None:
+        # legacy weight-less layout: nothing to mask. Only the paper's
+        # full-participation plane may proceed — silently reporting
+        # participants=K for a plan that asked to drop clients would
+        # corrupt both training and the CFMQ accounting.
+        if plane.cohort is not identity_cohort:
+            raise ValueError(
+                "cohort dynamics (partial participation / stragglers) mask "
+                "the round batch's example weights, but this batch has no "
+                "'weight' leaf — pack rounds through the data plane (which "
+                "always emits one) or use a full-participation plan")
+        return round_batch, jnp.ones((K,), jnp.float32)
+    weight, pmask = plane.cohort(ckey, weight)
+    return dict(round_batch, weight=weight), pmask
+
+
+def _wire_metrics(plane: ServerPlane, params: PyTree, pmask, K: int) -> dict:
+    """Wire bytes for this round. Uplink counts only reporting clients
+    (compressed deltas); downlink counts every sampled client (the
+    server broadcasts the full model before it knows who reports).
+
+    ``participants`` is the exact reporting count (a small integer,
+    lossless in f32); the byte totals are f32 conveniences that round
+    above ~16 MB/round. Byte-exact accounting multiplies
+    ``participants`` by the Python-int per-client counts host-side —
+    ``cfmq.plan_wire_accounting`` — which is what train/sweeps feed
+    into CFMQ."""
+    up = client_wire_bytes(plane.compression, params)
+    down = tree_param_bytes(params)
+    return {
+        "participants": pmask.sum(),
+        "uplink_bytes": pmask.sum() * jnp.float32(up),
+        "downlink_bytes": jnp.float32(K * down),
+    }
 
 
 def init_server_state(plan: FederatedPlan, params: PyTree) -> ServerState:
@@ -96,9 +214,15 @@ def _client_update(
 
 
 def _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn, base_key,
-                       state: ServerState, round_batch: PyTree):
-    """One FedAvg round given already-materialized optimizers/schedules."""
+                       state: ServerState, round_batch: PyTree,
+                       plane: Optional[ServerPlane] = None):
+    """One FedAvg round: client deltas -> cohort -> compression ->
+    aggregator -> server optimizer (all one jitted graph)."""
+    plane = plane or _PARITY_PLANE
     K = jax.tree.leaves(round_batch)[0].shape[0]
+    ckey, qkey, akey = _plane_keys(base_key, state.round_idx)
+
+    round_batch, pmask = _apply_cohort(plane, ckey, round_batch)
 
     deltas, losses, n_k = jax.vmap(
         lambda cb, ci: _client_update(
@@ -106,18 +230,22 @@ def _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn, base_key,
             state.params, cb, ci, state.round_idx)
     )(round_batch, jnp.arange(K))
 
-    n = jnp.maximum(n_k.sum(), 1.0)
-    w = (n_k / n).astype(jnp.float32)                       # (K,)
-    wbar = jax.tree.map(
-        lambda d: jnp.tensordot(w, d, axes=(0, 0)), deltas)  # Σ_k n_k/n Δ_k
+    if plane.compression.kind != "none":
+        # each client quantizes its own delta with its own RNG stream
+        deltas = jax.vmap(plane.compress)(
+            deltas, jax.vmap(lambda i: jax.random.fold_in(qkey, i))(jnp.arange(K)))
+
+    wbar = plane.aggregate(deltas, n_k, pmask, akey)
 
     updates, opt_state = server_opt.update(wbar, state.opt_state, state.params)
     params = apply_updates(state.params, updates)
+    n = jnp.maximum(n_k.sum(), 1.0)
     metrics = {
         "loss": (losses * n_k).sum() / n,
         "examples": n_k.sum(),
         "delta_norm": jnp.sqrt(sum(jnp.sum(jnp.square(x))
                                    for x in jax.tree.leaves(wbar))),
+        **_wire_metrics(plane, state.params, pmask, K),
     }
     return ServerState(params, opt_state, state.round_idx + 1), metrics
 
@@ -135,10 +263,11 @@ def make_fedavg_round(
     client_opt = sgd(plan.client_lr)
     server_opt = make_server_optimizer(plan)
     sigma_fn = (lambda r: fvn_lib.fvn_sigma(plan.fvn, r)) if plan.fvn.enabled else None
+    plane = plan_server_plane(plan)
 
     def round_step(state: ServerState, round_batch: PyTree):
         return _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn,
-                                  base_key, state, round_batch)
+                                  base_key, state, round_batch, plane)
 
     return round_step
 
@@ -156,19 +285,33 @@ def make_fedsgd_round(
     collapses to one example-weighted forward/backward — weights stay
     FSDP-sharded, no per-client weight replicas exist.
     """
+    _check_fedsgd_aggregator(plan.aggregator)
     server_opt = make_server_optimizer(plan)
     sigma_fn = (lambda r: fvn_lib.fvn_sigma(plan.fvn, r)) if plan.fvn.enabled else None
+    plane = plan_server_plane(plan)
 
     def round_step(state: ServerState, round_batch: PyTree):
         return _fedsgd_round_body(loss_fn, server_opt, sigma_fn, plan.client_lr,
-                                  base_key, state, round_batch)
+                                  base_key, state, round_batch, plane)
 
     return round_step
 
 
+def _check_fedsgd_aggregator(aggregator: str) -> None:
+    if aggregator != "weighted_mean":
+        raise ValueError(
+            "fedsgd collapses clients into one weighted forward/backward — "
+            "per-client deltas never exist, so robust aggregators "
+            f"({aggregator!r}) need the fedavg engine")
+
+
 def _fedsgd_round_body(loss_fn, server_opt, sigma_fn, client_lr, base_key,
-                       state: ServerState, round_batch: PyTree):
+                       state: ServerState, round_batch: PyTree,
+                       plane: Optional[ServerPlane] = None):
+    plane = plane or _PARITY_PLANE
     K, S = jax.tree.leaves(round_batch)[0].shape[:2]
+    ckey, qkey, _ = _plane_keys(base_key, state.round_idx)
+    round_batch, pmask = _apply_cohort(plane, ckey, round_batch)
     flat = jax.tree.map(
         lambda x: x.reshape((K * S * x.shape[2],) + x.shape[3:]), round_batch)
     key = fvn_lib.fvn_key(base_key, state.round_idx, 0, 0)
@@ -179,6 +322,11 @@ def _fedsgd_round_body(loss_fn, server_opt, sigma_fn, client_lr, base_key,
         p_eval, flat, data_key)
     # delta of the 1-step client update = client_lr * grad
     wbar = jax.tree.map(lambda g: client_lr * g.astype(jnp.float32), grads)
+    if plane.compression.kind != "none":
+        # the collapsed engine has no per-client deltas; quantizing the
+        # aggregate is the server-side proxy (bytes still counted
+        # per reporting client in the wire metrics)
+        wbar = plane.compress(wbar, qkey)
     updates, opt_state = server_opt.update(wbar, state.opt_state, state.params)
     params = apply_updates(state.params, updates)
     w = flat.get("weight")
@@ -188,6 +336,7 @@ def _fedsgd_round_body(loss_fn, server_opt, sigma_fn, client_lr, base_key,
         "examples": n,
         "delta_norm": jnp.sqrt(sum(jnp.sum(jnp.square(x))
                                    for x in jax.tree.leaves(wbar))),
+        **_wire_metrics(plane, state.params, pmask, K),
     }
     return ServerState(params, opt_state, state.round_idx + 1), metrics
 
@@ -207,7 +356,10 @@ def make_round_step(loss_fn, plan: FederatedPlan, base_key):
 # ----------------------------------------------------------------------
 
 HYPER_KEYS = ("client_lr", "server_lr", "warmup_rounds", "decay_rounds",
-              "decay_rate", "fvn_std", "fvn_ramp")
+              "decay_rate", "fvn_std", "fvn_ramp",
+              # server-plane knobs (cohort + aggregator), all traced
+              "participation", "straggler_frac", "straggler_keep",
+              "trim_frac", "dp_clip", "dp_sigma")
 
 
 def plan_hypers(plan: FederatedPlan) -> dict:
@@ -220,6 +372,12 @@ def plan_hypers(plan: FederatedPlan) -> dict:
         "decay_rate": jnp.float32(plan.server_decay_rate),
         "fvn_std": jnp.float32(plan.fvn.std if plan.fvn.enabled else 0.0),
         "fvn_ramp": jnp.float32(plan.fvn.ramp_rounds if plan.fvn.enabled else 0),
+        "participation": jnp.float32(plan.cohort.participation),
+        "straggler_frac": jnp.float32(plan.cohort.straggler_frac),
+        "straggler_keep": jnp.float32(plan.cohort.straggler_keep),
+        "trim_frac": jnp.float32(plan.agg_trim_frac),
+        "dp_clip": jnp.float32(plan.dp_clip),
+        "dp_sigma": jnp.float32(plan.dp_sigma),
     }
 
 
@@ -250,31 +408,43 @@ def _hyper_fvn_sigma(hypers, round_idx):
 
 
 def make_hyper_round_step(loss_fn, engine: str = "fedavg",
-                          server_optimizer: str = "adam"):
+                          server_optimizer: str = "adam",
+                          aggregator: str = "weighted_mean",
+                          compression: Optional[CompressionConfig] = None):
     """Returns round_step(state, round_batch, hypers, base_key).
 
-    Only ``engine`` and ``server_optimizer`` are compile-time structure;
-    everything in ``hypers`` (see HYPER_KEYS / plan_hypers) is traced.
-    The FVN perturbation always stays in the graph with a traced sigma
-    (0.0 == off, bit-identical to the unperturbed path), so FVN on/off
-    points share the compilation too.
+    Only ``engine``, ``server_optimizer``, ``aggregator`` and
+    ``compression`` are compile-time structure (they change the graph /
+    the wire layout); everything in ``hypers`` (see HYPER_KEYS /
+    plan_hypers) is traced. The FVN perturbation and the cohort draw
+    always stay in the graph with traced knobs (sigma 0.0 /
+    participation 1.0 == off, bit-identical to the plain path), so
+    on/off points share the compilation too.
     """
     from repro import optim
 
     server_opt_fns = {"adam": optim.adam, "sgd": optim.sgd,
                       "momentum": optim.momentum, "yogi": optim.yogi}
     make_server = server_opt_fns[server_optimizer]
+    if engine == "fedsgd":
+        _check_fedsgd_aggregator(aggregator)
 
     def round_step(state: ServerState, round_batch: PyTree, hypers: dict, base_key):
         server_opt = make_server(lambda count: _hyper_server_lr(hypers, count))
         sigma_fn = lambda r: _hyper_fvn_sigma(hypers, r)
+        plane = make_server_plane(
+            aggregator, compression,
+            (hypers["participation"], hypers["straggler_frac"],
+             hypers["straggler_keep"]),
+            {"trim_frac": hypers["trim_frac"], "dp_clip": hypers["dp_clip"],
+             "dp_sigma": hypers["dp_sigma"]})
         if engine == "fedsgd":
             return _fedsgd_round_body(loss_fn, server_opt, sigma_fn,
                                       hypers["client_lr"], base_key,
-                                      state, round_batch)
+                                      state, round_batch, plane)
         client_opt = sgd(lambda count: hypers["client_lr"])
         return _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn,
-                                  base_key, state, round_batch)
+                                  base_key, state, round_batch, plane)
 
     return round_step
 

@@ -10,6 +10,24 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.core.compression import CompressionConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortConfig:
+    """Cohort dynamics (see repro.core.cohort): the fraction of sampled
+    clients that report back and the straggler deadline model. All
+    rates are traced in the hyper round step, so a participation grid
+    shares one compilation."""
+    participation: float = 1.0    # P(sampled client reports back)
+    straggler_frac: float = 0.0   # P(reporting client hits the deadline)
+    straggler_keep: float = 0.5   # fraction of local steps a straggler completes
+
+    @property
+    def full(self) -> bool:
+        """True iff the cohort is the paper's all-K-report assumption."""
+        return self.participation >= 1.0 and self.straggler_frac <= 0.0
+
 
 @dataclasses.dataclass(frozen=True)
 class FVNConfig:
@@ -36,6 +54,14 @@ class FederatedPlan:
     server_decay_rate: float = 0.9
     fvn: FVNConfig = dataclasses.field(default_factory=FVNConfig)
     engine: str = "fedavg"              # "fedavg" | "fedsgd" (FSDP large-model path)
+    # Server-side federated plane (cohort -> compression -> aggregation)
+    cohort: CohortConfig = dataclasses.field(default_factory=CohortConfig)
+    compression: CompressionConfig = dataclasses.field(
+        default_factory=CompressionConfig)
+    aggregator: str = "weighted_mean"   # see repro.core.aggregation registry
+    agg_trim_frac: float = 0.1          # trimmed_mean: fraction trimmed per side
+    dp_clip: float = 1.0                # clipped_mean: per-client L2 clip norm
+    dp_sigma: float = 0.0               # clipped_mean: DP noise multiplier
     # CFMQ constants (paper §4.3.1): payload/memory approximations
     alpha: float = 1.0
     param_bytes: int = 4                # bytes per parameter on the wire

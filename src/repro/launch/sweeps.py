@@ -18,15 +18,23 @@ Grids:
 - ``noniid_fvn``: data-limit x FVN cross — the Fig. 3 quality/cost
   frontier (engine behind ``examples/noniid_tradeoff.py``);
 - ``ladder``: the paper's E0-E10 experiment ladder at container scale
-  (engine behind ``benchmarks/tables.py``).
+  (engine behind ``benchmarks/tables.py``);
+- ``compression``: uplink compression (fp32/int8/int4/top-k) x cohort /
+  robust-aggregation variants — moves the CFMQ *cost* axis with
+  measured wire bytes instead of the paper's flat 4 B/param;
+- ``sampling``: the client-sampling strategy registry (uniform /
+  weighted-by-examples / stratified) x data limit.
 
 CLI::
 
     PYTHONPATH=src python -m repro.launch.sweeps --grid noniid_fvn --smoke
+    PYTHONPATH=src python -m repro.launch.sweeps --grid compression --smoke
     PYTHONPATH=src python -m repro.launch.sweeps --grid ladder --rounds 100
 
 emits one frontier JSON (WER + final loss vs ``cfmq_tb`` per point,
-pareto-marked) under ``results/``.
+pareto-marked) under ``results/``. CFMQ payload uses the measured
+per-round wire bytes whenever a plan compresses or drops clients; the
+paper's 2x-model-bytes formula remains the default/parity path.
 """
 from __future__ import annotations
 
@@ -41,12 +49,16 @@ import jax
 import numpy as np
 
 from repro.core import (
+    CohortConfig,
+    CompressionConfig,
     FederatedPlan,
     FVNConfig,
     cfmq,
     init_server_state,
     make_hyper_round_step,
+    measured_payload,
     plan_hypers,
+    plan_wire_accounting,
 )
 from repro.data import FederatedSampler, PrefetchIterator, pack_round
 from repro.models import build_model
@@ -107,11 +119,16 @@ class SweepRunner:
         return self._bundles[specaug_scale]
 
     def _round_fn(self, plan: FederatedPlan, specaug_scale: float):
-        key = (plan.engine, plan.server_optimizer, float(specaug_scale))
+        # aggregator + compression are compile-time structure; every
+        # cohort/trim/DP knob is traced, so e.g. a participation grid
+        # still shares one entry here
+        key = (plan.engine, plan.server_optimizer, float(specaug_scale),
+               plan.aggregator, plan.compression)
         if key not in self._jit_cache:
             _, bundle = self._bundle(specaug_scale)
             self._jit_cache[key] = jax.jit(make_hyper_round_step(
-                bundle.loss_fn, plan.engine, plan.server_optimizer))
+                bundle.loss_fn, plan.engine, plan.server_optimizer,
+                plan.aggregator, plan.compression))
         return self._jit_cache[key]
 
     def native_steps(self, plan: FederatedPlan) -> int:
@@ -166,6 +183,7 @@ class SweepRunner:
 
         t0 = time.time()
         losses = []
+        participants = []
         batches = (PrefetchIterator(host_batches(), depth=2) if self.prefetch
                    else map(lambda b: jax.tree.map(jax.numpy.asarray, b),
                             host_batches()))
@@ -173,6 +191,7 @@ class SweepRunner:
             for batch in batches:
                 state, metrics = round_fn(state, batch, hypers, base_key)
                 losses.append(float(metrics["loss"]))
+                participants.append(float(metrics["participants"]))
         finally:
             if self.prefetch:
                 batches.close()
@@ -181,16 +200,27 @@ class SweepRunner:
 
         wers = evaluate_wer(cfg, bundle, state.params, self.corpus,
                             self.eval_examples)
+        # wire-accurate payload: per-client byte counts are exact ints
+        # over the param shapes; participants come from the round
+        # metrics, so partial participation shrinks measured uplink
+        up_per_client, down_per_round = plan_wire_accounting(plan, params)
+        up_per_round = up_per_client * float(np.mean(participants))
+        payload = measured_payload(plan, params, float(np.mean(participants)))
         mu = plan.local_epochs * (plan.data_limit or native * plan.local_batch_size)
         terms = cfmq(rounds=point.rounds, clients_per_round=plan.clients_per_round,
                      model_bytes=n_params * plan.param_bytes,
-                     local_steps=mu / plan.local_batch_size, alpha=plan.alpha)
+                     local_steps=mu / plan.local_batch_size, alpha=plan.alpha,
+                     payload_bytes=payload)
         row = {
             "id": point.id,
             "rounds": point.rounds,
             "final_loss": float(np.mean(losses[-5:])),
             "wer": wers["wer"], "wer_hard": wers["wer_hard"],
             "cfmq_tb": terms.total_terabytes, "cfmq_bytes": terms.total_bytes,
+            "payload_bytes": terms.payload_bytes,
+            "uplink_bytes_round": up_per_round,
+            "downlink_bytes_round": down_per_round,
+            "participants_mean": float(np.mean(participants)),
             "n_params": n_params,
             "wall_s": time.time() - t0,
             "loss_curve": losses[:: max(1, point.rounds // 50)],
@@ -233,6 +263,81 @@ def noniid_fvn_points(rounds: int = 60, smoke: bool = False, seed: int = 0,
                 id=f"L{limit if limit is not None else 'inf'}_fvn{int(fvn_on)}",
                 plan=plan, rounds=rounds, seed=seed,
                 meta={"limit": limit, "fvn": fvn_on}))
+    return points
+
+
+def compression_points(rounds: int = 40, smoke: bool = False,
+                       seed: int = 0) -> list[SweepPoint]:
+    """Uplink-compression frontier — the new CFMQ cost axis.
+
+    fp32 (the paper's wire model) vs int8/int4 stochastic quantization
+    and top-k sparsification, plus partial-participation and
+    straggler+trimmed-mean variants at the cheapest quantized point.
+    Every point's ``cfmq_tb`` uses *measured* wire bytes (fp32 keeps
+    the paper formula, which the measured path reproduces exactly).
+    """
+    base = dict(clients_per_round=8, local_batch_size=4, data_limit=4,
+                local_steps=12, client_lr=0.3, server_lr=0.05,
+                server_warmup_rounds=4)
+    if smoke:
+        rounds = min(rounds, 6)
+    schemes = [
+        ("fp32", CompressionConfig()),
+        ("int8", CompressionConfig(kind="int8")),
+        ("int4", CompressionConfig(kind="int4")),
+        ("top5", CompressionConfig(kind="topk", topk_frac=0.05)),
+    ]
+    points = [
+        SweepPoint(id=name, rounds=rounds, seed=seed,
+                   plan=FederatedPlan(**base, compression=comp),
+                   meta={"compression": name, "aggregator": "weighted_mean"})
+        for name, comp in schemes
+    ]
+    if not smoke:
+        int8 = CompressionConfig(kind="int8")
+        points += [
+            SweepPoint(id="int8_p75", rounds=rounds, seed=seed,
+                       plan=FederatedPlan(**base, compression=int8,
+                                          cohort=CohortConfig(participation=0.75)),
+                       meta={"compression": "int8", "aggregator": "weighted_mean",
+                             "participation": 0.75}),
+            # trim_frac 0.2 so floor(0.2 * 8) trims one client per side
+            # (the plan default 0.1 would trim nobody at K=8)
+            SweepPoint(id="int8_trim", rounds=rounds, seed=seed,
+                       plan=FederatedPlan(**base, compression=int8,
+                                          aggregator="trimmed_mean",
+                                          agg_trim_frac=0.2,
+                                          cohort=CohortConfig(straggler_frac=0.25)),
+                       meta={"compression": "int8", "aggregator": "trimmed_mean",
+                             "straggler_frac": 0.25}),
+        ]
+    return points
+
+
+def sampling_points(rounds: int = 40, smoke: bool = False, seed: int = 0,
+                    limits=(2, None)) -> list[SweepPoint]:
+    """Client-sampling-strategy x data-limit grid (registry sweep).
+
+    Sampling is host-side, so the whole grid shares one compiled round
+    fn; the strategies open a second non-IID axis beyond the data
+    limit (round example-mass variance vs per-speaker coverage).
+    """
+    from repro.data import available_strategies
+
+    if smoke:
+        rounds = min(rounds, 6)
+        limits = (2,)
+    points = []
+    for strat in available_strategies():
+        for limit in limits:
+            plan = FederatedPlan(
+                clients_per_round=8, local_batch_size=4, data_limit=limit,
+                local_steps=12, client_lr=0.3, server_lr=0.05,
+                server_warmup_rounds=4, client_sampling=strat)
+            points.append(SweepPoint(
+                id=f"{strat}_L{limit if limit is not None else 'inf'}",
+                plan=plan, rounds=rounds, seed=seed,
+                meta={"strategy": strat, "limit": limit}))
     return points
 
 
@@ -311,6 +416,8 @@ def ladder_points(rounds: int = 100, smoke: bool = False, seed: int = 0,
 GRIDS: Dict[str, Callable[..., list]] = {
     "noniid_fvn": noniid_fvn_points,
     "ladder": ladder_points,
+    "compression": compression_points,
+    "sampling": sampling_points,
 }
 
 

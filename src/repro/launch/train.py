@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import json
 import time
 
@@ -24,7 +25,19 @@ import numpy as np
 from repro.asr.wer import wer
 from repro.checkpoint import Checkpointer
 from repro.configs import get_arch
-from repro.core import FederatedPlan, FVNConfig, cfmq, init_server_state, make_round_step
+from repro.core import (
+    CohortConfig,
+    CompressionConfig,
+    FederatedPlan,
+    FVNConfig,
+    available_aggregators,
+    cfmq,
+    init_server_state,
+    make_round_step,
+    measured_payload,
+    plan_wire_accounting,
+)
+from repro.core.compression import KINDS
 from repro.data import (
     FederatedSampler,
     PrefetchIterator,
@@ -105,20 +118,29 @@ def run_federated_asr(
                 rb = sampler.next_round()
             yield rb.engine_batch()
 
+    # wire accounting: exact per-client byte counts over the param shapes
+    up_per_client, down_per_round = plan_wire_accounting(plan, params)
+
     history = {"loss": [], "rounds": rounds}
     t0 = time.time()
+    wire_total = 0.0
+    participants = []
     batches = (PrefetchIterator(host_batches(), depth=2) if prefetch
                else map(lambda b: jax.tree.map(jnp.asarray, b), host_batches()))
     try:
         for r, batch in enumerate(batches):
             state, metrics = round_step(state, batch)
             history["loss"].append(float(metrics["loss"]))
+            participants.append(float(metrics["participants"]))
+            wire_total += down_per_round + up_per_client * participants[-1]
             if eval_every and (r + 1) % eval_every == 0:
                 w = evaluate_wer(cfg, bundle, state.params, corpus, eval_examples)
                 log(f"round {r+1}: loss={history['loss'][-1]:.4f} "
                     f"wer={w['wer']:.3f} wer_hard={w['wer_hard']:.3f}")
             if ckpt and (r + 1) % max(1, rounds // 3) == 0:
-                ckpt.save(r + 1, state.params)
+                ckpt.save(r + 1, state.params,
+                          extra={"wire_bytes": wire_total,
+                                 "participants_mean": float(np.mean(participants))})
     finally:
         if prefetch:
             batches.close()
@@ -126,23 +148,37 @@ def run_federated_asr(
     history["train_time_s"] = time.time() - t0
     history.update(evaluate_wer(cfg, bundle, state.params, corpus, eval_examples))
     mu = plan.local_epochs * (plan.data_limit or sampler.steps * plan.local_batch_size)
+    payload = measured_payload(plan, params, float(np.mean(participants)))
     terms = cfmq(
         rounds=rounds, clients_per_round=plan.clients_per_round,
         model_bytes=n_params * plan.param_bytes,
-        local_steps=mu / plan.local_batch_size, alpha=plan.alpha)
+        local_steps=mu / plan.local_batch_size, alpha=plan.alpha,
+        payload_bytes=payload)
     history["cfmq_bytes"] = terms.total_bytes
     history["cfmq_tb"] = terms.total_terabytes
+    history["wire_bytes"] = wire_total
+    history["participants_mean"] = float(np.mean(participants))
     history["n_params"] = n_params
     history["final_loss"] = float(np.mean(history["loss"][-5:]))
     return state, history
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_decode(cfg):
+    """One jitted greedy_decode per config; jit's own cache then keys
+    on the eval-batch shapes, so repeated sweep-point evals at the
+    same (cfg, shape) reuse one compilation instead of re-tracing the
+    whole decode scan every call."""
+    return jax.jit(functools.partial(greedy_decode, cfg))
+
+
 def evaluate_wer(cfg, bundle, params, corpus, n: int = 64):
+    decode = _jitted_decode(cfg)
     out = {}
     for name, hard in (("wer", False), ("wer_hard", True)):
         ev = corpus.eval_split(n, hard=hard)
-        hyp = greedy_decode(cfg, params, jnp.asarray(ev["features"]),
-                            jnp.asarray(ev["frame_len"]))
+        hyp = decode(params, jnp.asarray(ev["features"]),
+                     jnp.asarray(ev["frame_len"]))
         refs = [ev["labels"][i, : ev["label_len"][i]].tolist() for i in range(n)]
         hyps = [h[h != 0].tolist() for h in np.asarray(hyp)]
         out[name] = wer(refs, hyps)
@@ -164,6 +200,23 @@ def main():
     ap.add_argument("--client-lr", type=float, default=0.05)
     ap.add_argument("--client-sampling", default="uniform",
                     choices=available_strategies())
+    # server-plane: aggregation / compression / cohort dynamics
+    ap.add_argument("--aggregator", default="weighted_mean",
+                    choices=available_aggregators())
+    ap.add_argument("--compression", default="none", choices=list(KINDS),
+                    help="uplink delta compression (exact wire bytes in CFMQ)")
+    ap.add_argument("--topk-frac", type=float, default=0.05)
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="P(sampled client reports back)")
+    ap.add_argument("--straggler-frac", type=float, default=0.0)
+    ap.add_argument("--straggler-keep", type=float, default=0.5,
+                    help="fraction of local steps a straggler completes")
+    ap.add_argument("--trim-frac", type=float, default=0.1,
+                    help="trimmed_mean: fraction trimmed per side")
+    ap.add_argument("--dp-clip", type=float, default=1.0,
+                    help="clipped_mean: per-client L2 clip norm")
+    ap.add_argument("--dp-sigma", type=float, default=0.0,
+                    help="clipped_mean: DP Gaussian noise multiplier")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the async host->device prefetch")
     ap.add_argument("--eval-every", type=int, default=10)
@@ -183,6 +236,13 @@ def main():
         server_lr=args.server_lr, server_warmup_rounds=max(2, args.rounds // 8),
         fvn=FVNConfig(enabled=args.fvn_std > 0, std=args.fvn_std,
                       ramp_rounds=args.fvn_ramp),
+        cohort=CohortConfig(participation=args.participation,
+                            straggler_frac=args.straggler_frac,
+                            straggler_keep=args.straggler_keep),
+        compression=CompressionConfig(kind=args.compression,
+                                      topk_frac=args.topk_frac),
+        aggregator=args.aggregator, agg_trim_frac=args.trim_frac,
+        dp_clip=args.dp_clip, dp_sigma=args.dp_sigma,
     )
     _, hist = run_federated_asr(cfg, corpus, plan, args.rounds, iid=args.iid,
                                 eval_every=args.eval_every,

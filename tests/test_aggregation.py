@@ -1,0 +1,342 @@
+"""Server plane: aggregation registry, cohort dynamics, and the
+legacy-parity guarantee of the composed round pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CohortConfig,
+    CompressionConfig,
+    FederatedPlan,
+    available_aggregators,
+    get_aggregator,
+    init_server_state,
+    make_hyper_round_step,
+    make_round_step,
+    plan_hypers,
+)
+from repro.core.aggregation import AGG_HYPER_DEFAULTS
+from repro.core.cohort import make_cohort_fn, participation_mask, straggler_step_mask
+
+W_TRUE = np.random.default_rng(42).normal(size=(4, 2)).astype(np.float32)
+
+
+def loss_fn(params, batch, rng):
+    pred = batch["x"] @ params["w"]
+    w = batch["weight"]
+    l = jnp.sum((pred - batch["y"]) ** 2 * w[:, None]) / jnp.maximum(w.sum(), 1)
+    return l, {}
+
+
+def make_batch(K, S, b, seed=0, weights=None):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(K, S, b, 4)).astype(np.float32)
+    y = x @ W_TRUE
+    w = np.ones((K, S, b), np.float32) if weights is None else weights
+    return {"x": jnp.array(x), "y": jnp.array(y), "weight": jnp.array(w)}
+
+
+def params0():
+    return {"w": jnp.zeros((4, 2))}
+
+
+# ------------------------------------------------------------ registry
+
+def test_registry_contents():
+    assert {"weighted_mean", "trimmed_mean", "coordinate_median",
+            "clipped_mean"} <= set(available_aggregators())
+    with pytest.raises(KeyError, match="unknown aggregator"):
+        get_aggregator("krum")
+
+
+def _deltas(vals):
+    """(K,) per-client scalar deltas as a 1-leaf tree of shape (K, 1)."""
+    return {"w": jnp.asarray(np.asarray(vals, np.float32)[:, None])}
+
+
+def _run(name, vals, pmask=None, n_k=None, hypers=None, key=0):
+    vals = np.asarray(vals, np.float32)
+    K = len(vals)
+    pmask = jnp.ones((K,)) if pmask is None else jnp.asarray(pmask, jnp.float32)
+    n_k = pmask if n_k is None else jnp.asarray(n_k, jnp.float32)
+    h = dict(AGG_HYPER_DEFAULTS, **(hypers or {}))
+    out = get_aggregator(name)(_deltas(vals), n_k, pmask, h, jax.random.PRNGKey(key))
+    return float(out["w"][0])
+
+
+def test_weighted_mean_is_example_weighted():
+    v = _run("weighted_mean", [1.0, 4.0], n_k=[3.0, 1.0])
+    np.testing.assert_allclose(v, (3 * 1.0 + 1 * 4.0) / 4.0, rtol=1e-6)
+
+
+def test_trimmed_mean_rejects_outlier():
+    # 5 participants, one wild outlier; trim 20% per side drops it
+    v = _run("trimmed_mean", [1.0, 1.1, 0.9, 1.0, 100.0],
+             hypers={"trim_frac": 0.2})
+    np.testing.assert_allclose(v, np.mean([1.0, 1.1, 1.0]), rtol=1e-5)
+
+
+def test_trimmed_mean_never_trims_everyone():
+    """Degenerate trim_frac must not silently zero the update: the trim
+    is clamped so at least one client survives."""
+    for frac in (0.5, 0.9):
+        v = _run("trimmed_mean", [1.0, 2.0, 3.0, 4.0], hypers={"trim_frac": frac})
+        np.testing.assert_allclose(v, 2.5, rtol=1e-5)    # middle two survive
+    v = _run("trimmed_mean", [7.0], hypers={"trim_frac": 0.9})
+    np.testing.assert_allclose(v, 7.0, rtol=1e-6)
+
+
+def test_trimmed_mean_ignores_non_participants():
+    # dropped clients carry delta 0 — they must not drag the trim window
+    v = _run("trimmed_mean", [1.0, 1.2, 0.8, 0.0, 0.0],
+             pmask=[1, 1, 1, 0, 0], hypers={"trim_frac": 0.0})
+    np.testing.assert_allclose(v, 1.0, rtol=1e-5)
+
+
+def test_coordinate_median_odd_and_even():
+    v = _run("coordinate_median", [1.0, 5.0, 2.0])
+    np.testing.assert_allclose(v, 2.0, rtol=1e-6)
+    v = _run("coordinate_median", [1.0, 5.0, 2.0, 4.0])
+    np.testing.assert_allclose(v, 3.0, rtol=1e-6)     # mean of middle two
+    v = _run("coordinate_median", [1.0, 5.0, 2.0, 999.0], pmask=[1, 1, 1, 0])
+    np.testing.assert_allclose(v, 2.0, rtol=1e-6)     # masked client excluded
+
+
+def test_clipped_mean_clips_and_noise():
+    # norms 1 and 10; clip 1 -> second contributes its direction only
+    v = _run("clipped_mean", [1.0, 10.0], hypers={"dp_clip": 1.0, "dp_sigma": 0.0})
+    np.testing.assert_allclose(v, (1.0 + 1.0) / 2.0, rtol=1e-5)
+    # DP noise: deterministic per key, different across keys, zero-mean scale
+    a = _run("clipped_mean", [1.0, 10.0], hypers={"dp_sigma": 0.5}, key=7)
+    b = _run("clipped_mean", [1.0, 10.0], hypers={"dp_sigma": 0.5}, key=7)
+    c = _run("clipped_mean", [1.0, 10.0], hypers={"dp_sigma": 0.5}, key=8)
+    assert a == b and a != c
+
+
+# ------------------------------------------------------------ cohort
+
+def test_participation_mask_full_and_never_empty():
+    key = jax.random.PRNGKey(0)
+    full = participation_mask(key, 8, 1.0)
+    np.testing.assert_array_equal(np.asarray(full), np.ones(8))
+    # p ~ 0: the rescue keeps exactly the most-available client
+    none = participation_mask(key, 8, 1e-9)
+    assert float(none.sum()) == 1.0
+
+
+def test_straggler_step_mask_truncates():
+    key = jax.random.PRNGKey(1)
+    w = jnp.ones((6, 4, 2))
+    m = straggler_step_mask(key, w, 1.0, 0.5)         # everyone straggles
+    np.testing.assert_array_equal(np.asarray(m),
+                                  np.tile([1, 1, 0, 0], (6, 1)))
+    m = straggler_step_mask(key, w, 0.0, 0.5)         # nobody does
+    np.testing.assert_array_equal(np.asarray(m), np.ones((6, 4)))
+
+
+def test_straggler_mask_ignores_padded_steps():
+    """The deadline cut counts *real* steps, so zero-weight padding
+    (the sweep runner's pad_steps) never shifts straggler semantics."""
+    key = jax.random.PRNGKey(1)
+    w = np.ones((6, 8, 2), np.float32)
+    w[:, 4:] = 0.0                                    # 4 real + 4 padded steps
+    m = straggler_step_mask(key, jnp.asarray(w), 1.0, 0.5)
+    # keep ceil(0.5 * 4) = 2 steps — same cut as the unpadded round
+    np.testing.assert_array_equal(np.asarray(m)[:, :4],
+                                  np.tile([1, 1, 0, 0], (6, 1)))
+
+
+def test_padded_round_equals_unpadded_with_stragglers():
+    """End-to-end pad_steps no-op invariant survives cohort dynamics."""
+    plan = FederatedPlan(clients_per_round=3, client_lr=0.1,
+                         server_optimizer="sgd", server_lr=1.0,
+                         cohort=CohortConfig(straggler_frac=1.0,
+                                             straggler_keep=0.5))
+    key = jax.random.PRNGKey(6)
+    step = jax.jit(make_round_step(loss_fn, plan, key))
+    state = init_server_state(plan, params0())
+    native = make_batch(3, 4, 2, seed=9)
+    pad = np.zeros((3, 4, 2), np.float32)
+    padded = {
+        "x": jnp.concatenate([native["x"], jnp.zeros((3, 4, 2, 4))], axis=1),
+        "y": jnp.concatenate([native["y"], jnp.zeros((3, 4, 2, 2))], axis=1),
+        "weight": jnp.concatenate([native["weight"], jnp.asarray(pad)], axis=1),
+    }
+    s1, m1 = step(state, native)
+    s2, m2 = jax.jit(make_round_step(loss_fn, plan, key))(state, padded)
+    np.testing.assert_allclose(np.asarray(s1.params["w"]),
+                               np.asarray(s2.params["w"]), atol=1e-6)
+    assert float(m1["examples"]) == float(m2["examples"])
+
+
+def test_dropped_clients_contribute_nothing():
+    """A round where cohort masks client k equals a round where client
+    k's weights are zeroed by hand (the engine's padding semantics)."""
+    plan = FederatedPlan(clients_per_round=3, client_lr=0.1,
+                         server_optimizer="sgd", server_lr=1.0,
+                         cohort=CohortConfig(participation=0.5))
+    key = jax.random.PRNGKey(4)
+    step = jax.jit(make_round_step(loss_fn, plan, key))
+    state = init_server_state(plan, params0())
+    batch = make_batch(3, 2, 4, seed=3)
+    s1, m1 = step(state, batch)
+    assert 1.0 <= float(m1["participants"]) < 3.0     # this key drops someone
+
+    # replicate the realized mask by hand on the parity engine
+    from repro.core.fedavg import _plane_keys
+    ckey, _, _ = _plane_keys(key, state.round_idx)
+    pmask = participation_mask(jax.random.fold_in(ckey, 0), 3,
+                               plan.cohort.participation)
+    w = np.ones((3, 2, 4), np.float32) * np.asarray(pmask)[:, None, None]
+    plan_full = FederatedPlan(clients_per_round=3, client_lr=0.1,
+                              server_optimizer="sgd", server_lr=1.0)
+    s2, _ = jax.jit(make_round_step(loss_fn, plan_full, key))(
+        init_server_state(plan_full, params0()),
+        make_batch(3, 2, 4, seed=3, weights=w))
+    np.testing.assert_allclose(np.asarray(s1.params["w"]),
+                               np.asarray(s2.params["w"]), atol=1e-6)
+
+
+def test_cohort_fn_weight_shapes():
+    cohort = make_cohort_fn(0.5, 0.5, 0.5)
+    w, pmask = cohort(jax.random.PRNGKey(2), jnp.ones((4, 6, 2)))
+    assert w.shape == (4, 6, 2) and pmask.shape == (4,)
+    # masked weights only ever shrink
+    assert float(w.max()) <= 1.0 and float(w.min()) >= 0.0
+
+
+# ------------------------------------------------- pipeline + parity
+
+def test_parity_default_pipeline_matches_manual_fedavg():
+    """Acceptance: weighted_mean + no compression + full participation
+    reproduces the legacy example-weighted FedAvg round exactly."""
+    plan = FederatedPlan(clients_per_round=2, client_lr=0.1,
+                         server_optimizer="sgd", server_lr=1.0)
+    step = jax.jit(make_round_step(loss_fn, plan, jax.random.PRNGKey(0)))
+    state = init_server_state(plan, params0())
+    w = np.ones((2, 1, 8), np.float32)
+    w[1, :, 2:] = 0.0
+    batch = make_batch(2, 1, 8, seed=5, weights=w)
+    s, m = step(state, batch)
+
+    deltas = []
+    for k in range(2):
+        cb = jax.tree.map(lambda a: a[k, 0], batch)
+        g = jax.grad(lambda p: loss_fn(p, cb, None)[0])(params0())
+        deltas.append(0.1 * g["w"])
+    n = np.array([8.0, 2.0])
+    wbar = (n[0] * deltas[0] + n[1] * deltas[1]) / n.sum()
+    np.testing.assert_allclose(np.asarray(s.params["w"]),
+                               np.asarray(params0()["w"] - wbar), atol=1e-6)
+    assert float(m["participants"]) == 2.0
+
+
+def test_parity_fedsgd_default_pipeline():
+    """fedsgd with the default plane still equals fedavg at one local
+    step (the §2.2 IID-limit equivalence)."""
+    kw = dict(clients_per_round=4, client_lr=0.1, server_optimizer="sgd",
+              server_lr=1.0)
+    batch = make_batch(4, 1, 8, seed=1)
+    outs = []
+    for engine in ("fedavg", "fedsgd"):
+        plan = FederatedPlan(engine=engine, **kw)
+        st = init_server_state(plan, params0())
+        s2, _ = jax.jit(make_round_step(loss_fn, plan, jax.random.PRNGKey(0)))(st, batch)
+        outs.append(np.asarray(s2.params["w"]))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-6)
+
+
+def test_hyper_matches_plan_with_all_knobs_on():
+    """Plan path (Python-constant knobs) == hyper path (traced knobs)
+    for cohort + compression + robust aggregation together."""
+    plan = FederatedPlan(clients_per_round=4, client_lr=0.1,
+                         server_optimizer="adam", server_lr=0.05,
+                         cohort=CohortConfig(participation=0.6,
+                                             straggler_frac=0.5,
+                                             straggler_keep=0.5),
+                         compression=CompressionConfig(kind="int8"),
+                         aggregator="trimmed_mean", agg_trim_frac=0.2)
+    key = jax.random.PRNGKey(11)
+    plain = jax.jit(make_round_step(loss_fn, plan, key))
+    hyper = jax.jit(make_hyper_round_step(loss_fn, "fedavg", "adam",
+                                          "trimmed_mean", plan.compression))
+    hypers = plan_hypers(plan)
+    s1 = s2 = init_server_state(plan, params0())
+    for r in range(3):
+        batch = make_batch(4, 2, 4, seed=20 + r)
+        s1, _ = plain(s1, batch)
+        s2, _ = hyper(s2, batch, hypers, key)
+    np.testing.assert_allclose(np.asarray(s1.params["w"]),
+                               np.asarray(s2.params["w"]), atol=1e-6)
+
+
+def test_hyper_shares_compile_across_cohort_grid():
+    """participation/straggler/trim knobs are traced: a whole cohort
+    grid hits one compilation of the round fn."""
+    hyper = jax.jit(make_hyper_round_step(loss_fn, "fedavg", "adam"))
+    key = jax.random.PRNGKey(0)
+    batch = make_batch(4, 2, 4)
+    for p, s in [(1.0, 0.0), (0.5, 0.5), (0.25, 0.9)]:
+        plan = FederatedPlan(clients_per_round=4,
+                             cohort=CohortConfig(participation=p,
+                                                 straggler_frac=s))
+        state = init_server_state(plan, params0())
+        hyper(state, batch, plan_hypers(plan), key)
+    assert hyper._cache_size() == 1
+
+
+def test_wire_metrics_exact_bytes():
+    from repro.core import client_wire_bytes, tree_param_bytes
+
+    plan = FederatedPlan(clients_per_round=3, client_lr=0.1,
+                         server_optimizer="sgd", server_lr=1.0,
+                         compression=CompressionConfig(kind="int8"))
+    step = jax.jit(make_round_step(loss_fn, plan, jax.random.PRNGKey(0)))
+    state = init_server_state(plan, params0())
+    _, m = step(state, make_batch(3, 1, 4))
+    up = client_wire_bytes(plan.compression, params0())      # 8 + 4
+    down = tree_param_bytes(params0())                       # 32
+    assert float(m["uplink_bytes"]) == 3 * up
+    assert float(m["downlink_bytes"]) == 3 * down
+    assert up < down                                         # compressed uplink
+
+
+def test_compressed_round_still_converges():
+    plan = FederatedPlan(clients_per_round=4, client_lr=0.05,
+                         server_optimizer="adam", server_lr=0.05,
+                         compression=CompressionConfig(kind="int8"))
+    step = jax.jit(make_round_step(loss_fn, plan, jax.random.PRNGKey(1)))
+    state = init_server_state(plan, params0())
+    losses = []
+    for r in range(40):
+        state, m = step(state, make_batch(4, 3, 8, seed=200 + r))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < 0.2 * losses[0]
+
+
+def test_cohort_plan_rejects_weightless_batches():
+    """Silently skipping cohort masking would corrupt training AND the
+    CFMQ accounting — weight-less batches must raise instead."""
+    plan = FederatedPlan(clients_per_round=2, client_lr=0.1,
+                         server_optimizer="sgd", server_lr=1.0,
+                         cohort=CohortConfig(participation=0.5))
+    step = make_round_step(loss_fn, plan, jax.random.PRNGKey(0))
+    state = init_server_state(plan, params0())
+    batch = {k: v for k, v in make_batch(2, 1, 4).items() if k != "weight"}
+
+    def weightless_loss(params, b, rng):
+        pred = b["x"] @ params["w"]
+        return jnp.mean((pred - b["y"]) ** 2), {}
+
+    step = make_round_step(weightless_loss, plan, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="weight"):
+        step(state, batch)
+
+
+def test_fedsgd_rejects_robust_aggregators():
+    plan = FederatedPlan(engine="fedsgd", aggregator="coordinate_median")
+    with pytest.raises(ValueError, match="fedsgd"):
+        make_round_step(loss_fn, plan, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="fedsgd"):
+        make_hyper_round_step(loss_fn, "fedsgd", "adam", "trimmed_mean")

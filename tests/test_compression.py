@@ -1,0 +1,107 @@
+"""Uplink compression: quantization correctness + exact wire bytes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import (
+    CompressionConfig,
+    client_wire_bytes,
+    leaf_wire_bytes,
+    make_compressor,
+    tree_param_bytes,
+)
+
+TREE = {
+    "a": jnp.asarray(np.random.default_rng(0).normal(size=(16, 8)), jnp.float32),
+    "b": {"c": jnp.asarray(np.random.default_rng(1).normal(size=(33,)), jnp.float32)},
+}
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="unknown compression kind"):
+        CompressionConfig(kind="fp8")
+    with pytest.raises(ValueError, match="topk_frac"):
+        CompressionConfig(kind="topk", topk_frac=0.0)
+    with pytest.raises(ValueError, match="topk_frac"):
+        CompressionConfig(kind="topk", topk_frac=1.5)
+    # an inert topk_frac (e.g. a CLI default of 0) must not block other
+    # kinds — only the knob actually in use is validated
+    CompressionConfig(kind="int8", topk_frac=0.0)
+    CompressionConfig(kind="none", topk_frac=-1.0)
+
+
+def test_none_is_identity():
+    out = make_compressor(CompressionConfig())(TREE, jax.random.PRNGKey(0))
+    for a, b in zip(jax.tree.leaves(TREE), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("kind,levels", [("int8", 127.0), ("int4", 7.0)])
+def test_quantization_error_bounded_by_scale(kind, levels):
+    cfg = CompressionConfig(kind=kind)
+    out = make_compressor(cfg)(TREE, jax.random.PRNGKey(1))
+    for a, b in zip(jax.tree.leaves(TREE), jax.tree.leaves(out)):
+        scale = float(jnp.max(jnp.abs(a))) / levels
+        err = float(jnp.max(jnp.abs(a - b)))
+        assert err <= scale + 1e-6           # stochastic rounding: one grid cell
+        # dequantized values sit on the quantization grid
+        q = np.asarray(b) / scale
+        np.testing.assert_allclose(q, np.round(q), atol=1e-3)
+
+
+def test_stochastic_rounding_is_unbiased():
+    # absmax 0.7 -> int4 grid step 0.1; the 0.33 coordinates sit
+    # between grid points, so rounding must split 0.3/0.4 at 70/30
+    vals = np.full(256, 0.33, np.float32)
+    vals[0] = 0.7
+    x = {"w": jnp.asarray(vals)}
+    cfg = CompressionConfig(kind="int4")
+    compress = jax.jit(make_compressor(cfg))
+    outs = np.stack([np.asarray(compress(x, jax.random.PRNGKey(i))["w"][1:])
+                     for i in range(200)])
+    np.testing.assert_allclose(outs.mean(), 0.33, rtol=0.05)
+    assert len(np.unique(outs)) > 1          # actually stochastic
+
+
+def test_nearest_rounding_is_deterministic():
+    cfg = CompressionConfig(kind="int8", stochastic=False)
+    compress = make_compressor(cfg)
+    a = compress(TREE, jax.random.PRNGKey(0))
+    b = compress(TREE, jax.random.PRNGKey(99))
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_topk_keeps_exactly_k_largest():
+    cfg = CompressionConfig(kind="topk", topk_frac=0.25)
+    x = {"w": jnp.asarray(np.random.default_rng(3).normal(size=(40,)), jnp.float32)}
+    out = np.asarray(make_compressor(cfg)(x, jax.random.PRNGKey(0))["w"])
+    k = 10                                   # ceil(0.25 * 40)
+    nz = np.flatnonzero(out)
+    assert len(nz) == k
+    # survivors are the k largest magnitudes, passed through unchanged
+    xs = np.asarray(x["w"])
+    expect = set(np.argsort(-np.abs(xs))[:k])
+    assert set(nz) == expect
+    np.testing.assert_array_equal(out[nz], xs[nz])
+
+
+def test_wire_byte_formulas():
+    assert leaf_wire_bytes(CompressionConfig(), 100) == 400
+    assert leaf_wire_bytes(CompressionConfig(kind="int8"), 100) == 104
+    assert leaf_wire_bytes(CompressionConfig(kind="int4"), 101) == 55   # 51 + 4
+    assert leaf_wire_bytes(CompressionConfig(kind="topk", topk_frac=0.1), 100) == 80
+
+    n = 16 * 8 + 33
+    assert client_wire_bytes(CompressionConfig(), TREE) == 4 * n
+    assert client_wire_bytes(CompressionConfig(kind="int8"), TREE) == n + 8
+    assert tree_param_bytes(TREE) == 4 * n
+
+
+def test_compression_strictly_shrinks_uplink():
+    sizes = [client_wire_bytes(CompressionConfig(kind=k), TREE)
+             for k in ("none", "int8", "int4")]
+    assert sizes[0] > sizes[1] > sizes[2]
+    topk = client_wire_bytes(CompressionConfig(kind="topk", topk_frac=0.05), TREE)
+    assert topk < sizes[0]

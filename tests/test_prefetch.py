@@ -1,0 +1,105 @@
+"""PrefetchIterator failure paths: worker-exception propagation and
+clean shutdown mid-iteration (satellite of the server-plane PR; the
+happy paths live in tests/test_data_plane.py)."""
+import time
+
+import pytest
+
+from repro.data.prefetch import PrefetchIterator
+
+
+class Boom(RuntimeError):
+    pass
+
+
+def test_worker_exception_delivered_after_good_items():
+    """Items produced before the failure arrive in order; then the
+    original exception (same type, same message) surfaces."""
+    def source():
+        yield 1
+        yield 2
+        raise Boom("worker died")
+
+    it = PrefetchIterator(source(), device_put=False)
+    assert next(it) == 1
+    assert next(it) == 2
+    with pytest.raises(Boom, match="worker died"):
+        next(it)
+    # exhausted after the error: iteration stays terminated
+    with pytest.raises(StopIteration):
+        next(it)
+    it.close()
+
+
+def test_transform_exception_propagates():
+    it = PrefetchIterator(iter([1, 2]), device_put=False,
+                          transform=lambda x: 1 // (x - 1))
+    with pytest.raises(ZeroDivisionError):
+        list(it)
+    it.close()
+
+
+def test_immediate_exception_no_items():
+    def source():
+        raise Boom("instant")
+        yield  # pragma: no cover
+
+    with pytest.raises(Boom, match="instant"):
+        next(PrefetchIterator(source(), device_put=False))
+
+
+def test_close_mid_iteration_stops_worker_and_is_idempotent():
+    produced = []
+
+    def source():
+        for i in range(1000):
+            produced.append(i)
+            yield i
+
+    it = PrefetchIterator(source(), depth=2, device_put=False)
+    assert next(it) == 0
+    it.close()
+    assert not it._thread.is_alive()
+    n = len(produced)
+    time.sleep(0.05)
+    assert len(produced) == n          # generator no longer advancing
+    it.close()                         # idempotent
+    with pytest.raises(StopIteration):
+        next(it)
+
+
+def test_context_manager_exit_joins_worker_on_consumer_error():
+    """A consumer crash inside the with-block must still tear the
+    worker down (the round loop's finally-close contract)."""
+    def source():
+        while True:
+            yield 0
+
+    with pytest.raises(Boom):
+        with PrefetchIterator(source(), depth=2, device_put=False) as it:
+            next(it)
+            worker = it._thread
+            raise Boom("consumer crashed")
+    assert not worker.is_alive()
+
+
+def test_close_unblocks_worker_stuck_on_full_queue():
+    """Worker blocked in put() (consumer never drains) must observe the
+    stop event and exit promptly on close()."""
+    def source():
+        i = 0
+        while True:
+            yield i
+            i += 1
+
+    it = PrefetchIterator(source(), depth=1, device_put=False)
+    time.sleep(0.1)                    # let the worker fill the queue
+    t0 = time.time()
+    it.close()
+    assert time.time() - t0 < 2.0
+    assert not it._thread.is_alive()
+
+
+def test_depth_validation():
+    with pytest.raises(ValueError, match="depth"):
+        PrefetchIterator(iter([]), depth=0)
