@@ -113,6 +113,18 @@ def bench_fed_round():
         ("fed_round_tiny_rnnt_top5",
          FederatedPlan(**base, compression=CompressionConfig(kind="topk",
                                                              topk_frac=0.05))),
+        # packed-wire variants: materialize + round-trip the real
+        # payload buffers (wire_pack kernels; bit-identical numerics)
+        ("fed_round_tiny_rnnt_int8_packed",
+         FederatedPlan(**base, compression=CompressionConfig(kind="int8",
+                                                             packed=True))),
+        ("fed_round_tiny_rnnt_int4_packed",
+         FederatedPlan(**base, compression=CompressionConfig(kind="int4",
+                                                             packed=True))),
+        # EF21 error feedback: same wire bytes, per-client residual state
+        ("fed_round_tiny_rnnt_top5_ef",
+         FederatedPlan(**base, compression=CompressionConfig(
+             kind="topk", topk_frac=0.05, error_feedback=True))),
     ]:
         up = 8 * client_wire_bytes(plan.compression, params)
         _time_round(bundle, params, batch, plan, name,

@@ -35,12 +35,14 @@ from repro.core.aggregation import available_aggregators, get_aggregator, regist
 from repro.core.compression import CompressionConfig, client_wire_bytes, tree_param_bytes
 from repro.core.cfmq import (
     CFMQTerms,
+    accumulate_wire_bytes,
     cfmq,
     measured_payload,
     mu_local_steps,
     paper_payload,
     paper_peak_memory,
     plan_wire_accounting,
+    round_wire_bytes,
     wire_payload,
 )
 from repro.core import fvn
@@ -68,12 +70,14 @@ __all__ = [
     "client_wire_bytes",
     "tree_param_bytes",
     "CFMQTerms",
+    "accumulate_wire_bytes",
     "cfmq",
     "measured_payload",
     "mu_local_steps",
     "paper_payload",
     "paper_peak_memory",
     "plan_wire_accounting",
+    "round_wire_bytes",
     "wire_payload",
     "fvn",
 ]

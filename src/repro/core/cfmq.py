@@ -76,6 +76,24 @@ def plan_wire_accounting(plan, params) -> tuple[int, int]:
             plan.clients_per_round * tree_param_bytes(params))
 
 
+def round_wire_bytes(up_per_client: int, down_per_round: int,
+                     participants: float) -> int:
+    """Exact bytes one round puts on the wire, as a host-side Python
+    int. ``participants`` is the round metric's f32 count — a small
+    integer, exact in f32 — so the product stays byte-exact, where an
+    f32 accumulation of the byte *totals* silently drops bytes once a
+    round exceeds ~16 MB (2^24: f32's integer-exact range)."""
+    return int(down_per_round) + int(up_per_client) * int(round(float(participants)))
+
+
+def accumulate_wire_bytes(up_per_client: int, down_per_round: int,
+                          participants) -> int:
+    """Exact multi-round wire-byte total (Python int) from the per-round
+    participant counts — the accounting train/sweep histories persist."""
+    return sum(round_wire_bytes(up_per_client, down_per_round, p)
+               for p in participants)
+
+
 def measured_payload(plan, params, mean_participants: float) -> Optional[float]:
     """The single measured-vs-paper payload policy shared by the train
     driver and the sweep runner: ``None`` for the paper/parity default

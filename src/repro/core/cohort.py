@@ -32,12 +32,19 @@ import jax
 import jax.numpy as jnp
 
 
+def rescue_mask(u):
+    """One-hot over argmin: exactly ONE most-available client. A value
+    comparison (``u == u.min()``) would mark every tied client — ties
+    are real at large K in f32 — and an all-draws-fail round would then
+    rescue a whole sub-cohort instead of a single straggler."""
+    return jnp.arange(u.shape[0]) == jnp.argmin(u)
+
+
 def participation_mask(key, K: int, participation):
     """(K,) float32 mask of reporting clients; never all-zero."""
     u = jax.random.uniform(key, (K,))
     survivors = u < participation
-    rescue = u == u.min()                    # exactly the most-available client
-    return jnp.where(survivors.any(), survivors, rescue).astype(jnp.float32)
+    return jnp.where(survivors.any(), survivors, rescue_mask(u)).astype(jnp.float32)
 
 
 def straggler_step_mask(key, weight, straggler_frac, straggler_keep):

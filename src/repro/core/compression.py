@@ -3,10 +3,9 @@
 The paper approximates the round-trip payload as ``2 x model_bytes``
 (§4.3.1); production cross-device FL compresses the *uplink* (client
 -> server) aggressively because client bandwidth dominates. This
-module provides in-graph quantize->dequantize compressors for the
-per-client deltas so the round step both (a) trains through the real
-quantization error and (b) reports the *exact* bytes each client
-would put on the wire:
+module provides the compressors for the per-client deltas so the round
+step both (a) trains through the real quantization error and (b)
+reports the *exact* bytes each client would put on the wire:
 
 - ``int8`` / ``int4``: per-tensor absmax stochastic quantization.
   Stochastic rounding keeps the dequantized delta unbiased
@@ -15,6 +14,30 @@ would put on the wire:
 - ``topk``: per-tensor magnitude sparsification; only ``k = ceil(frac
   * size)`` (value, index) pairs travel (4 + 4 bytes each).
 - ``none``: identity, fp32 on the wire (the paper/parity path).
+
+The implementation is layered so the byte formulas are backed by real
+buffers, not just arithmetic:
+
+1. a *codes* layer (``quantize_codes`` / ``dequantize_codes`` /
+   ``topk_select``) that maps tensors to the integer codes and
+   (value, index) pairs a client would actually transmit;
+2. an in-graph quantize->dequantize path (``make_compressor`` with
+   ``packed=False``) that composes the codes layer without ever
+   leaving fp32 — the cheap simulation path;
+3. a *packed-wire* path (``packed=True``) that materializes the int8
+   buffer / int4 nibble-packed buffer / top-k (value, index) payload
+   via the ``repro.kernels.wire_pack`` kernels and round-trips it.
+   Pack->unpack is bit-exact against path 2 by construction: both
+   consume the same codes, so the dequantized deltas are identical
+   while the payload's materialized byte size equals
+   ``leaf_wire_bytes`` for every kind (property-tested).
+
+``error_feedback`` turns on EF21-style residual accumulation in the
+round engine (see ``repro.core.fedavg``): each client compresses
+``delta + residual`` and keeps the compression error as next round's
+residual, which recovers the quality that plain top-k loses at
+aggressive sparsity. It changes no wire bytes — only what travels in
+them.
 
 Kind and fractions are *static* (compile-time structure — they change
 wire layout and graph shape); the RNG key is traced. Byte accounting
@@ -37,6 +60,8 @@ KINDS = ("none", "int8", "int4", "topk")
 # fp32 scalar (scale) / value / index — all 4 bytes on the wire.
 _WORD = 4
 
+_BITS = {"int8": 8, "int4": 4}
+
 
 @dataclasses.dataclass(frozen=True)
 class CompressionConfig:
@@ -44,6 +69,8 @@ class CompressionConfig:
     kind: str = "none"          # none | int8 | int4 | topk
     topk_frac: float = 0.05     # fraction of coordinates kept per tensor
     stochastic: bool = True     # stochastic (unbiased) vs nearest rounding
+    packed: bool = False        # materialize + round-trip the wire payload
+    error_feedback: bool = False  # EF21 per-client residual accumulation
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -53,6 +80,14 @@ class CompressionConfig:
         # pass an inert topk_frac (e.g. a CLI default) with other kinds
         if self.kind == "topk" and not 0.0 < self.topk_frac <= 1.0:
             raise ValueError(f"topk_frac must be in (0, 1], got {self.topk_frac}")
+        if self.kind == "none" and self.packed:
+            raise ValueError(
+                "packed=True materializes a quantized wire payload; "
+                "kind='none' ships raw fp32 and has nothing to pack")
+        if self.kind == "none" and self.error_feedback:
+            raise ValueError(
+                "error_feedback compensates compression error; with "
+                "kind='none' there is no error to feed back")
 
 
 def _topk_count(frac: float, size: int) -> int:
@@ -84,55 +119,165 @@ def tree_param_bytes(tree: PyTree) -> int:
 
 
 # ----------------------------------------------------------------------
-# In-graph compressors: delta -> dequantized delta (same shape/dtype).
+# Codes layer: tensors <-> the integers / (value, index) pairs that a
+# client actually transmits. Both the in-graph and the packed path are
+# built on these, which is what makes them bit-exact to each other.
 # ----------------------------------------------------------------------
 
-def _quantize_leaf(x, key, bits: int, stochastic: bool):
-    """Per-tensor absmax intN quantize->dequantize (symmetric grid)."""
+def quantize_codes(x, key, bits: int, stochastic: bool = True):
+    """Per-tensor absmax intN codes: -> (int8 codes shaped like x, fp32
+    scale scalar), with codes in [-levels, levels].
+
+    ``y`` is clamped into the grid *before* the Bernoulli draw: f32
+    division can land the absmax coordinate one ulp outside the grid
+    (|x|/ (|x|/levels) > levels), and a boundary draw would round up to
+    levels+1 and get clipped back — biasing E[Q(x)] *below* x exactly
+    at the max-magnitude coordinate. Clamped, the boundary is
+    deterministic and the documented unbiasedness holds on the whole
+    grid.
+    """
     levels = 2.0 ** (bits - 1) - 1.0             # 127 (int8) / 7 (int4)
     x32 = x.astype(jnp.float32)
     scale = jnp.max(jnp.abs(x32)) / levels
     scale = jnp.where(scale > 0, scale, 1.0)
-    y = x32 / scale                              # in [-levels, levels]
+    y = jnp.clip(x32 / scale, -levels, levels)
     if stochastic:
         lo = jnp.floor(y)
         q = lo + jax.random.bernoulli(key, y - lo).astype(jnp.float32)
     else:
         q = jnp.round(y)
-    q = jnp.clip(q, -levels, levels)
-    return (q * scale).astype(x.dtype)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_codes(codes, scale, dtype=jnp.float32):
+    """codes * scale; int8 codes are exact in f32, so this reproduces
+    the in-graph quantize->dequantize value bit-for-bit."""
+    return (codes.astype(jnp.float32) * scale).astype(dtype)
+
+
+def topk_select(x, frac: float):
+    """The top-k wire payload of one tensor: -> (fp32 values (k,),
+    int32 flat indices (k,)), k = ceil(frac * size)."""
+    flat = x.reshape(-1)
+    k = _topk_count(frac, flat.size)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx].astype(jnp.float32), idx.astype(jnp.int32)
+
+
+def _quantize_leaf(x, key, bits: int, stochastic: bool):
+    """Per-tensor absmax intN quantize->dequantize (symmetric grid)."""
+    codes, scale = quantize_codes(x, key, bits, stochastic)
+    return dequantize_codes(codes, scale, x.dtype)
 
 
 def _topk_leaf(x, frac: float):
     """Keep the k largest-|x| coordinates, zero the rest (exact k)."""
-    flat = x.reshape(-1)
-    k = _topk_count(frac, flat.size)
-    _, idx = jax.lax.top_k(jnp.abs(flat), k)
-    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    vals, idx = topk_select(x, frac)
+    out = jnp.zeros((x.size,), x.dtype).at[idx].set(vals.astype(x.dtype))
     return out.reshape(x.shape)
 
+
+# ----------------------------------------------------------------------
+# Packed-wire payloads: the materialized buffers behind the formulas.
+# ----------------------------------------------------------------------
+
+def pack_leaf(cfg: CompressionConfig, x, key):
+    """Materialize one tensor's uplink payload as a tuple of arrays
+    whose total byte size equals ``leaf_wire_bytes`` exactly:
+
+    - int8: (int8 codes (n,), fp32 scale ())          -> n + 4 bytes
+    - int4: (int8 nibble bytes ((n+1)//2,), scale ()) -> (n+1)//2 + 4
+    - topk: (fp32 values (k,), int32 indices (k,))    -> 8k bytes
+    """
+    from repro.kernels import wire_pack
+
+    if cfg.kind == "topk":
+        return topk_select(x, cfg.topk_frac)
+    codes, scale = quantize_codes(x, key, _BITS[cfg.kind], cfg.stochastic)
+    flat = codes.reshape(-1)
+    if cfg.kind == "int4":
+        return wire_pack.nibble_pack(flat), scale
+    return flat, scale
+
+
+def unpack_leaf(cfg: CompressionConfig, payload, shape, dtype=jnp.float32):
+    """Reverse of ``pack_leaf``: payload -> dequantized tensor. Equals
+    the in-graph quantize->dequantize of the same tensor bit-exactly
+    (same codes, same dequant arithmetic)."""
+    from repro.kernels import wire_pack
+
+    size = int(math.prod(shape)) if shape else 1
+    if cfg.kind == "topk":
+        vals, idx = payload
+        return wire_pack.topk_unpack(vals, idx, size).reshape(shape).astype(dtype)
+    data, scale = payload
+    codes = wire_pack.nibble_unpack(data, size) if cfg.kind == "int4" else data
+    return wire_pack.dequantize(codes.reshape(-1), scale).reshape(shape).astype(dtype)
+
+
+def packed_leaf_bytes(payload) -> int:
+    """Byte size of a materialized payload (host-side Python int) —
+    property-tested equal to ``leaf_wire_bytes`` for every kind."""
+    return sum(int(a.size) * jnp.dtype(a.dtype).itemsize for a in payload)
+
+
+def sum_packed_codes(cfg: CompressionConfig, data, size: int):
+    """All-reduce a stack of packed intN payload buffers *in the code
+    domain*: (K, nbytes) packed bytes -> (size,) int32 code sums.
+
+    This is the packed-form all-reduce of the uplink: int8/int4 codes
+    widen to int32 (K * levels stays far below 2^31), so the server can
+    ``psum`` the widened codes across the client mesh axis and
+    dequantize once — valid whenever the cohort shares one scale (the
+    per-tensor scales are 4-byte scalars, cheap to max-reduce first).
+    """
+    from repro.kernels import wire_pack
+
+    if cfg.kind not in _BITS:
+        raise ValueError(
+            f"sum_packed_codes is the intN code-domain reduction; a "
+            f"{cfg.kind!r} payload carries fp32 values, not codes")
+    if cfg.kind == "int4":
+        codes = jax.vmap(lambda b: wire_pack.nibble_unpack(b, size))(data)
+    else:
+        codes = data
+    return codes.astype(jnp.int32).sum(axis=0)
+
+
+# ----------------------------------------------------------------------
+# In-graph compressors: delta -> dequantized delta (same shape/dtype).
+# ----------------------------------------------------------------------
 
 def make_compressor(cfg: CompressionConfig):
     """Returns compress(delta_tree, key) -> delta_tree (dequantized).
 
     One independent RNG key per leaf; the caller supplies a per-client
     key (vmapped over the K axis), so every client quantizes its own
-    delta with its own noise — exactly the production wire protocol,
-    minus the byte packing (accounted by ``client_wire_bytes``).
+    delta with its own noise — exactly the production wire protocol.
+    With ``cfg.packed`` the payload is additionally materialized and
+    round-tripped through the wire_pack kernels (bit-identical output,
+    but the packed buffer the byte formulas price actually exists in
+    the graph and is what a deployment would all-reduce).
     """
     if cfg.kind == "none":
         return lambda tree, key: tree
-    if cfg.kind == "topk":
+    if cfg.kind == "topk" and not cfg.packed:
         return lambda tree, key: jax.tree.map(
             lambda x: _topk_leaf(x, cfg.topk_frac), tree)
 
-    bits = {"int8": 8, "int4": 4}[cfg.kind]
+    if cfg.packed:
+        def leaf_fn(x, k):
+            return unpack_leaf(cfg, pack_leaf(cfg, x, k), x.shape, x.dtype)
+    else:
+        bits = _BITS[cfg.kind]
+
+        def leaf_fn(x, k):
+            return _quantize_leaf(x, k, bits, cfg.stochastic)
 
     def compress(tree, key):
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         keys = jax.random.split(key, len(leaves))
-        out = [_quantize_leaf(x, k, bits, cfg.stochastic)
-               for x, k in zip(leaves, keys)]
+        out = [leaf_fn(x, k) for x, k in zip(leaves, keys)]
         return jax.tree_util.tree_unflatten(treedef, out)
 
     return compress

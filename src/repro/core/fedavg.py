@@ -32,6 +32,15 @@ example-weighted mean — reproduce the paper's Alg. 1 exactly and are
 the parity baseline for tests. The round metrics report the *exact*
 wire bytes of the configured compression so CFMQ can account measured
 (not approximated) communication cost.
+
+With ``compression.error_feedback`` the pipeline carries EF21-style
+per-client residuals in ``ServerState.ef``: client k uploads
+C(delta_k + ef_k) and keeps ef_k' = (delta_k + ef_k) - C(...), so the
+error of aggressive compression (top-k at small fractions, int4) is
+compensated over rounds instead of lost. Wire bytes are unchanged.
+With ``compression.packed`` the uplink payloads are materialized
+(int8 / int4-nibble / top-k (value, index) buffers via
+``repro.kernels.wire_pack``) and round-tripped bit-exactly.
 """
 from __future__ import annotations
 
@@ -60,6 +69,12 @@ class ServerState(NamedTuple):
     params: PyTree
     opt_state: PyTree
     round_idx: jnp.ndarray
+    # EF21 per-client compression residuals: a params-shaped tree with a
+    # leading K axis when plan.compression.error_feedback, else None.
+    # Client k compresses (delta_k + ef_k) and keeps the compression
+    # error as next round's residual, so top-k/int4 error is
+    # compensated across rounds instead of lost.
+    ef: Optional[PyTree] = None
 
 
 class ServerPlane(NamedTuple):
@@ -135,7 +150,11 @@ def _apply_cohort(plane: ServerPlane, ckey, round_batch: PyTree):
                 "cohort dynamics (partial participation / stragglers) mask "
                 "the round batch's example weights, but this batch has no "
                 "'weight' leaf — pack rounds through the data plane (which "
-                "always emits one) or use a full-participation plan")
+                "always emits one). Plan-path alternative: a full-"
+                "participation plan. The hyper round step always draws a "
+                "cohort (its knobs are traced, so participation=1.0 cannot "
+                "be detected at trace time) and therefore requires the "
+                "weight leaf unconditionally")
         return round_batch, jnp.ones((K,), jnp.float32)
     weight, pmask = plane.cohort(ckey, weight)
     return dict(round_batch, weight=weight), pmask
@@ -163,8 +182,13 @@ def _wire_metrics(plane: ServerPlane, params: PyTree, pmask, K: int) -> dict:
 
 def init_server_state(plan: FederatedPlan, params: PyTree) -> ServerState:
     opt = make_server_optimizer(plan)
+    ef = None
+    if plan.compression.error_feedback:
+        K = plan.clients_per_round
+        ef = jax.tree.map(
+            lambda p: jnp.zeros((K,) + jnp.shape(p), jnp.float32), params)
     return ServerState(params=params, opt_state=opt.init(params),
-                       round_idx=jnp.zeros((), jnp.int32))
+                       round_idx=jnp.zeros((), jnp.int32), ef=ef)
 
 
 def _client_update(
@@ -230,7 +254,21 @@ def _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn, base_key,
             state.params, cb, ci, state.round_idx)
     )(round_batch, jnp.arange(K))
 
-    if plane.compression.kind != "none":
+    ef = state.ef
+    if plane.compression.error_feedback:
+        # EF21: each client compresses delta + residual and keeps the
+        # compression error. Non-participants send nothing and keep
+        # their residual untouched — the pmask select matters because,
+        # unlike the plain path (where a dropped client's delta is
+        # exactly 0), C(0 + e_k) is generally nonzero.
+        ckeys = jax.vmap(lambda i: jax.random.fold_in(qkey, i))(jnp.arange(K))
+        target = jax.tree.map(lambda d, e: d + e, deltas, ef)
+        sent = jax.vmap(plane.compress)(target, ckeys)
+        sel = lambda a, b: jnp.where(
+            pmask.reshape((-1,) + (1,) * (a.ndim - 1)) > 0, a, b)
+        deltas = jax.tree.map(lambda s: sel(s, jnp.zeros_like(s)), sent)
+        ef = jax.tree.map(lambda t, s, e: sel(t - s, e), target, sent, ef)
+    elif plane.compression.kind != "none":
         # each client quantizes its own delta with its own RNG stream
         deltas = jax.vmap(plane.compress)(
             deltas, jax.vmap(lambda i: jax.random.fold_in(qkey, i))(jnp.arange(K)))
@@ -247,7 +285,7 @@ def _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn, base_key,
                                    for x in jax.tree.leaves(wbar))),
         **_wire_metrics(plane, state.params, pmask, K),
     }
-    return ServerState(params, opt_state, state.round_idx + 1), metrics
+    return ServerState(params, opt_state, state.round_idx + 1, ef), metrics
 
 
 def make_fedavg_round(
@@ -286,6 +324,7 @@ def make_fedsgd_round(
     FSDP-sharded, no per-client weight replicas exist.
     """
     _check_fedsgd_aggregator(plan.aggregator)
+    _check_fedsgd_compression(plan.compression)
     server_opt = make_server_optimizer(plan)
     sigma_fn = (lambda r: fvn_lib.fvn_sigma(plan.fvn, r)) if plan.fvn.enabled else None
     plane = plan_server_plane(plan)
@@ -303,6 +342,14 @@ def _check_fedsgd_aggregator(aggregator: str) -> None:
             "fedsgd collapses clients into one weighted forward/backward — "
             "per-client deltas never exist, so robust aggregators "
             f"({aggregator!r}) need the fedavg engine")
+
+
+def _check_fedsgd_compression(compression: Optional[CompressionConfig]) -> None:
+    if compression is not None and compression.error_feedback:
+        raise ValueError(
+            "error feedback keeps a per-client compression residual, but "
+            "fedsgd collapses clients into one weighted forward/backward — "
+            "per-client deltas never exist; use the fedavg engine")
 
 
 def _fedsgd_round_body(loss_fn, server_opt, sigma_fn, client_lr, base_key,
@@ -338,7 +385,7 @@ def _fedsgd_round_body(loss_fn, server_opt, sigma_fn, client_lr, base_key,
                                    for x in jax.tree.leaves(wbar))),
         **_wire_metrics(plane, state.params, pmask, K),
     }
-    return ServerState(params, opt_state, state.round_idx + 1), metrics
+    return ServerState(params, opt_state, state.round_idx + 1, state.ef), metrics
 
 
 def make_round_step(loss_fn, plan: FederatedPlan, base_key):
@@ -419,7 +466,9 @@ def make_hyper_round_step(loss_fn, engine: str = "fedavg",
     plan_hypers) is traced. The FVN perturbation and the cohort draw
     always stay in the graph with traced knobs (sigma 0.0 /
     participation 1.0 == off, bit-identical to the plain path), so
-    on/off points share the compilation too.
+    on/off points share the compilation too. Because the cohort draw is
+    unconditional, round batches must carry the data plane's "weight"
+    leaf — the legacy weight-less layout is plan-path only.
     """
     from repro import optim
 
@@ -428,6 +477,7 @@ def make_hyper_round_step(loss_fn, engine: str = "fedavg",
     make_server = server_opt_fns[server_optimizer]
     if engine == "fedsgd":
         _check_fedsgd_aggregator(aggregator)
+        _check_fedsgd_compression(compression)
 
     def round_step(state: ServerState, round_batch: PyTree, hypers: dict, base_key):
         server_opt = make_server(lambda count: _hyper_server_lr(hypers, count))
@@ -449,11 +499,15 @@ def make_hyper_round_step(loss_fn, engine: str = "fedavg",
     return round_step
 
 
-def server_state_specs(plan: FederatedPlan, param_specs, moment_specs=None):
+def server_state_specs(plan: FederatedPlan, param_specs, moment_specs=None,
+                       ef_specs=None):
     """PartitionSpec tree matching init_server_state's output.
 
     ``moment_specs`` lets the launcher FSDP-shard optimizer moments
-    independently of the live params (they only touch aggregation)."""
+    independently of the live params (they only touch aggregation).
+    ``ef_specs`` shards the per-client EF residuals; the default keeps
+    each residual with its client's replica (leading K axis unsharded,
+    trailing axes like the params)."""
     from jax.sharding import PartitionSpec as P
 
     from repro.optim.optimizers import AdamState, MomentumState, ScaleState
@@ -466,5 +520,10 @@ def server_state_specs(plan: FederatedPlan, param_specs, moment_specs=None):
         os_ = MomentumState(count=P(), trace=moment_specs)
     else:  # adam | yogi
         os_ = AdamState(count=P(), mu=moment_specs, nu=moment_specs)
+    ef = None
+    if plan.compression.error_feedback:
+        ef = (ef_specs if ef_specs is not None else
+              jax.tree.map(lambda s: P(*((None,) + tuple(s))), param_specs,
+                           is_leaf=lambda x: isinstance(x, P)))
     return ServerState(params=param_specs, opt_state=os_,
-                       round_idx=P())
+                       round_idx=P(), ef=ef)

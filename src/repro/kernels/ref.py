@@ -71,6 +71,37 @@ def rnnt_joint_ref(enc_proj, pred_proj, w_out, bias, labels):
     return blank_lp, label_lp
 
 
+def nibble_pack_ref(codes):
+    """int4 wire packing oracle: (n,) int8 codes in [-8, 7] -> the
+    ((n+1)//2,) int8 nibble-packed payload (element 2i in the low
+    nibble, 2i+1 in the high; odd n pads the last high nibble with 0)."""
+    n = codes.shape[0]
+    c = codes.astype(jnp.int32) & 0xF
+    c = jnp.pad(c, (0, n % 2))
+    pairs = c.reshape(-1, 2)
+    b = pairs[:, 0] | (pairs[:, 1] << 4)
+    return (((b & 0xFF) ^ 0x80) - 0x80).astype(jnp.int8)   # two's-complement byte
+
+
+def nibble_unpack_ref(packed, n: int):
+    """Inverse of ``nibble_pack_ref``: sign-extend both nibbles of each
+    byte and drop the odd-n pad -> (n,) int8 codes."""
+    b = packed.astype(jnp.int32) & 0xFF
+    lo = ((b & 0xF) ^ 8) - 8
+    hi = (((b >> 4) & 0xF) ^ 8) - 8
+    return jnp.stack([lo, hi], axis=-1).reshape(-1)[:n].astype(jnp.int8)
+
+
+def dequantize_ref(codes, scale):
+    """intN codes + fp32 scale -> f32 (the uplink dequantization)."""
+    return codes.astype(jnp.float32) * scale
+
+
+def topk_unpack_ref(values, idx, n: int):
+    """Scatter a top-k (value, index) payload into a dense (n,) f32."""
+    return jnp.zeros((n,), jnp.float32).at[idx].set(values.astype(jnp.float32))
+
+
 def lstm_gates_ref(gates, c):
     """gates: (B, 4H) preactivation [i|f|g|o]; c: (B, H)."""
     h4 = gates.shape[-1]

@@ -1,0 +1,166 @@
+"""Packed-wire kernels for the uplink compression plane (Pallas TPU).
+
+The byte formulas in ``repro.core.compression`` price three wire
+layouts; these kernels materialize them so the per-client uplink is a
+real packed buffer, not an accounting fiction:
+
+- ``nibble_pack`` / ``nibble_unpack``: int4 codes two-per-byte (low
+  nibble = even element, high nibble = odd; odd sizes pad one nibble),
+  sign-extended back on unpack — a pure VPU bit-twiddle pass.
+- ``dequantize``: intN codes x fp32 scale -> f32, fused in one
+  VMEM-resident pass (the server-side unpack of every intN payload).
+- ``topk_unpack``: scatter a (value, index) payload into the dense
+  tensor. Serial over k inside one VMEM block — k is a few percent of
+  the tensor, and the sorted-by-magnitude payload makes the stores
+  conflict-free; a production variant would segment the index space
+  across the grid.
+
+Each kernel has a jnp oracle in ``ref.py`` (the parity target,
+interpret=True on CPU) and a public auto-dispatch wrapper (Pallas on
+TPU, the oracle as the CPU production path — same convention as the
+model kernels). Pack->unpack is the identity on codes by construction,
+which is what makes the packed compression path bit-exact against the
+in-graph quantize->dequantize (tested in tests/test_wire_pack.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+_TILE = 512                     # lane-aligned (4 x 128) payload tile
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x, m: int):
+    return jnp.pad(x, (0, (-x.shape[0]) % m))
+
+
+# ------------------------------------------------------------ nibble pack
+
+def _nibble_pack_kernel(ev_ref, od_ref, out_ref):
+    ev = ev_ref[...].astype(jnp.int32) & 0xF
+    od = od_ref[...].astype(jnp.int32) & 0xF
+    b = ev | (od << 4)
+    out_ref[...] = (((b & 0xFF) ^ 0x80) - 0x80).astype(jnp.int8)
+
+
+def nibble_pack_pallas(codes, *, tile: int = _TILE, interpret: bool = False):
+    """codes: (n,) int8 in [-8, 7] -> ((n+1)//2,) int8 nibble-packed."""
+    n = codes.shape[0]
+    nb = (n + 1) // 2
+    c = _pad_to(codes, 2 * tile).reshape(-1, 2)       # (nbp, 2) pairs
+    ev, od = c[:, 0][None, :], c[:, 1][None, :]        # (1, nbp)
+    nbp = ev.shape[1]
+    out = pl.pallas_call(
+        _nibble_pack_kernel,
+        grid=(nbp // tile,),
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i))] * 2,
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, nbp), jnp.int8),
+        interpret=interpret,
+    )(ev, od)
+    return out[0, :nb]
+
+
+def _nibble_unpack_kernel(b_ref, lo_ref, hi_ref):
+    b = b_ref[...].astype(jnp.int32) & 0xFF
+    lo_ref[...] = (((b & 0xF) ^ 8) - 8).astype(jnp.int8)
+    hi_ref[...] = ((((b >> 4) & 0xF) ^ 8) - 8).astype(jnp.int8)
+
+
+def nibble_unpack_pallas(packed, n: int, *, tile: int = _TILE,
+                         interpret: bool = False):
+    """packed: ((n+1)//2,) int8 -> (n,) int8 sign-extended codes."""
+    b = _pad_to(packed, tile)[None, :]
+    nbp = b.shape[1]
+    lo, hi = pl.pallas_call(
+        _nibble_unpack_kernel,
+        grid=(nbp // tile,),
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((1, tile), lambda i: (0, i))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((1, nbp), jnp.int8)] * 2,
+        interpret=interpret,
+    )(b)
+    return jnp.stack([lo[0], hi[0]], axis=-1).reshape(-1)[:n]
+
+
+# -------------------------------------------------------------- dequantize
+
+def _dequantize_kernel(c_ref, s_ref, out_ref):
+    out_ref[...] = c_ref[...].astype(jnp.float32) * s_ref[0, 0]
+
+
+def dequantize_pallas(codes, scale, *, tile: int = _TILE,
+                      interpret: bool = False):
+    """codes: (n,) int8 + fp32 scale () -> (n,) f32, one fused pass."""
+    n = codes.shape[0]
+    c = _pad_to(codes, tile)[None, :]
+    npad = c.shape[1]
+    out = pl.pallas_call(
+        _dequantize_kernel,
+        grid=(npad // tile,),
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, npad), jnp.float32),
+        interpret=interpret,
+    )(c, scale.reshape(1, 1))
+    return out[0, :n]
+
+
+# ------------------------------------------------------------- topk unpack
+
+def _topk_unpack_kernel(v_ref, i_ref, out_ref):
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+    def body(j, carry):
+        idx = pl.load(i_ref, (slice(0, 1), pl.ds(j, 1)))[0, 0]
+        val = pl.load(v_ref, (slice(0, 1), pl.ds(j, 1)))
+        pl.store(out_ref, (slice(0, 1), pl.ds(idx, 1)), val)
+        return carry
+
+    jax.lax.fori_loop(0, i_ref.shape[1], body, 0)
+
+
+def topk_unpack_pallas(values, idx, n: int, *, interpret: bool = False):
+    """(k,) f32 values + (k,) int32 flat indices -> dense (n,) f32."""
+    out = pl.pallas_call(
+        _topk_unpack_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(values[None, :], idx[None, :])
+    return out[0]
+
+
+# ---------------------------------------------------- public auto-dispatch
+# Pallas on TPU; the jnp oracle is the CPU production path (interpret
+# mode is for tests only — same convention as repro.kernels.ops).
+
+def nibble_pack(codes):
+    if _on_cpu():
+        return ref.nibble_pack_ref(codes)
+    return nibble_pack_pallas(codes)
+
+
+def nibble_unpack(packed, n: int):
+    if _on_cpu():
+        return ref.nibble_unpack_ref(packed, n)
+    return nibble_unpack_pallas(packed, n)
+
+
+def dequantize(codes, scale):
+    if _on_cpu():
+        return ref.dequantize_ref(codes, scale)
+    return dequantize_pallas(codes, jnp.asarray(scale, jnp.float32))
+
+
+def topk_unpack(values, idx, n: int):
+    if _on_cpu():
+        return ref.topk_unpack_ref(values, idx, n)
+    return topk_unpack_pallas(values, idx, n)

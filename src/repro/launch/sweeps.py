@@ -22,6 +22,9 @@ Grids:
 - ``compression``: uplink compression (fp32/int8/int4/top-k) x cohort /
   robust-aggregation variants — moves the CFMQ *cost* axis with
   measured wire bytes instead of the paper's flat 4 B/param;
+- ``ef_compression``: plain vs EF21 error-feedback at identical wire
+  bytes (top-k 5%/1%, int4, + the materialized packed-wire path) —
+  the quality EF recovers at aggressive sparsity;
 - ``sampling``: the client-sampling strategy registry (uniform /
   weighted-by-examples / stratified) x data limit.
 
@@ -53,6 +56,7 @@ from repro.core import (
     CompressionConfig,
     FederatedPlan,
     FVNConfig,
+    accumulate_wire_bytes,
     cfmq,
     init_server_state,
     make_hyper_round_step,
@@ -202,9 +206,12 @@ class SweepRunner:
                             self.eval_examples)
         # wire-accurate payload: per-client byte counts are exact ints
         # over the param shapes; participants come from the round
-        # metrics, so partial participation shrinks measured uplink
+        # metrics, so partial participation shrinks measured uplink.
+        # Totals stay host-side Python ints — byte-exact at any scale.
         up_per_client, down_per_round = plan_wire_accounting(plan, params)
-        up_per_round = up_per_client * float(np.mean(participants))
+        wire_total = accumulate_wire_bytes(up_per_client, down_per_round,
+                                           participants)
+        uplink_total = wire_total - down_per_round * point.rounds
         payload = measured_payload(plan, params, float(np.mean(participants)))
         mu = plan.local_epochs * (plan.data_limit or native * plan.local_batch_size)
         terms = cfmq(rounds=point.rounds, clients_per_round=plan.clients_per_round,
@@ -218,7 +225,9 @@ class SweepRunner:
             "wer": wers["wer"], "wer_hard": wers["wer_hard"],
             "cfmq_tb": terms.total_terabytes, "cfmq_bytes": terms.total_bytes,
             "payload_bytes": terms.payload_bytes,
-            "uplink_bytes_round": up_per_round,
+            "uplink_bytes_client": up_per_client,
+            "uplink_bytes_total": uplink_total,
+            "wire_bytes_total": wire_total,
             "downlink_bytes_round": down_per_round,
             "participants_mean": float(np.mean(participants)),
             "n_params": n_params,
@@ -312,6 +321,54 @@ def compression_points(rounds: int = 40, smoke: bool = False,
                              "straggler_frac": 0.25}),
         ]
     return points
+
+
+def ef_compression_points(rounds: int = 40, smoke: bool = False,
+                          seed: int = 0) -> list[SweepPoint]:
+    """Error-feedback frontier: plain vs EF21 at *identical* wire bytes.
+
+    EF changes what travels in the payload, not its size, so each
+    plain/EF pair sits at the same cfmq_tb — the grid isolates the
+    quality EF recovers at aggressive sparsity (top-k 5%/1%) and int4.
+    ``int4_packed_ef`` additionally routes through the materialized
+    packed-wire path (bit-identical numerics, exercises the wire_pack
+    kernels in the sweep harness).
+
+    The server is plain SGD at lr 1.0 (the canonical FedAvg server,
+    w += wbar): EF21's convergence story assumes the aggregated
+    update is applied as-is, and an adaptive server (Adam) renormalizes
+    the delayed residual bursts into oscillation — measured here too,
+    which is exactly the kind of interaction the grid exists to show.
+    """
+    base = dict(clients_per_round=8, local_batch_size=4, data_limit=4,
+                local_steps=12, client_lr=0.3, server_lr=1.0,
+                server_optimizer="sgd", server_warmup_rounds=4)
+    if smoke:
+        rounds = min(rounds, 8)
+    topk = lambda **kw: CompressionConfig(kind="topk", topk_frac=0.05, **kw)
+    schemes = [
+        ("top5", topk()),
+        ("top5_ef", topk(error_feedback=True)),
+        ("int4", CompressionConfig(kind="int4")),
+        ("int4_ef", CompressionConfig(kind="int4", error_feedback=True)),
+        ("int4_packed_ef", CompressionConfig(kind="int4", packed=True,
+                                             error_feedback=True)),
+    ]
+    if not smoke:
+        schemes += [
+            ("top1", CompressionConfig(kind="topk", topk_frac=0.01)),
+            ("top1_ef", CompressionConfig(kind="topk", topk_frac=0.01,
+                                          error_feedback=True)),
+        ]
+    return [
+        SweepPoint(id=name, rounds=rounds, seed=seed,
+                   plan=FederatedPlan(**base, compression=comp),
+                   meta={"compression": comp.kind,
+                         "topk_frac": comp.topk_frac,
+                         "error_feedback": comp.error_feedback,
+                         "packed": comp.packed})
+        for name, comp in schemes
+    ]
 
 
 def sampling_points(rounds: int = 40, smoke: bool = False, seed: int = 0,
@@ -417,6 +474,7 @@ GRIDS: Dict[str, Callable[..., list]] = {
     "noniid_fvn": noniid_fvn_points,
     "ladder": ladder_points,
     "compression": compression_points,
+    "ef_compression": ef_compression_points,
     "sampling": sampling_points,
 }
 

@@ -36,6 +36,7 @@ from repro.core import (
     make_round_step,
     measured_payload,
     plan_wire_accounting,
+    round_wire_bytes,
 )
 from repro.core.compression import KINDS
 from repro.data import (
@@ -118,12 +119,14 @@ def run_federated_asr(
                 rb = sampler.next_round()
             yield rb.engine_batch()
 
-    # wire accounting: exact per-client byte counts over the param shapes
+    # wire accounting: exact per-client byte counts over the param
+    # shapes, accumulated as host-side Python ints — the in-graph f32
+    # byte metrics round above ~16 MB/round, exact ints never do
     up_per_client, down_per_round = plan_wire_accounting(plan, params)
 
     history = {"loss": [], "rounds": rounds}
     t0 = time.time()
-    wire_total = 0.0
+    wire_total = 0
     participants = []
     batches = (PrefetchIterator(host_batches(), depth=2) if prefetch
                else map(lambda b: jax.tree.map(jnp.asarray, b), host_batches()))
@@ -132,7 +135,8 @@ def run_federated_asr(
             state, metrics = round_step(state, batch)
             history["loss"].append(float(metrics["loss"]))
             participants.append(float(metrics["participants"]))
-            wire_total += down_per_round + up_per_client * participants[-1]
+            wire_total += round_wire_bytes(up_per_client, down_per_round,
+                                           participants[-1])
             if eval_every and (r + 1) % eval_every == 0:
                 w = evaluate_wer(cfg, bundle, state.params, corpus, eval_examples)
                 log(f"round {r+1}: loss={history['loss'][-1]:.4f} "
@@ -206,6 +210,12 @@ def main():
     ap.add_argument("--compression", default="none", choices=list(KINDS),
                     help="uplink delta compression (exact wire bytes in CFMQ)")
     ap.add_argument("--topk-frac", type=float, default=0.05)
+    ap.add_argument("--packed-wire", action="store_true",
+                    help="materialize + round-trip the packed uplink payload "
+                         "(wire_pack kernels; bit-identical numerics)")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="EF21 per-client residual accumulation (compensates "
+                         "top-k/int4 error across rounds; same wire bytes)")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="P(sampled client reports back)")
     ap.add_argument("--straggler-frac", type=float, default=0.0)
@@ -240,7 +250,9 @@ def main():
                             straggler_frac=args.straggler_frac,
                             straggler_keep=args.straggler_keep),
         compression=CompressionConfig(kind=args.compression,
-                                      topk_frac=args.topk_frac),
+                                      topk_frac=args.topk_frac,
+                                      packed=args.packed_wire,
+                                      error_feedback=args.error_feedback),
         aggregator=args.aggregator, agg_trim_frac=args.trim_frac,
         dp_clip=args.dp_clip, dp_sigma=args.dp_sigma,
     )

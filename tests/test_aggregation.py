@@ -125,6 +125,25 @@ def test_participation_mask_full_and_never_empty():
     assert float(none.sum()) == 1.0
 
 
+def test_rescue_selects_exactly_one_on_ties():
+    """Float ties in the uniform draw (real at large K in f32) must not
+    rescue a whole sub-cohort: the one-hot-over-argmin rescue keeps
+    exactly one client, where a ``u == u.min()`` comparison marks all
+    tied minima."""
+    from repro.core.cohort import rescue_mask
+
+    u = jnp.asarray([0.7, 0.25, 0.25, 0.25, 0.9], jnp.float32)   # 3-way tie
+    m = np.asarray(rescue_mask(u))
+    assert m.sum() == 1 and m[1]                      # first tied minimum
+    # all-tied draw (the worst case): still exactly one
+    assert np.asarray(rescue_mask(jnp.zeros(64, jnp.float32))).sum() == 1
+    # rescue never fires when any Bernoulli draw survives, so the mask
+    # stays one-hot end-to-end at tiny participation too
+    for i in range(20):
+        mask = participation_mask(jax.random.PRNGKey(i), 256, 1e-9)
+        assert float(mask.sum()) == 1.0
+
+
 def test_straggler_step_mask_truncates():
     key = jax.random.PRNGKey(1)
     w = jnp.ones((6, 4, 2))

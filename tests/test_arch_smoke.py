@@ -45,7 +45,15 @@ def smoke_batch(arch, cfg, K=2, S=1, b=2, seq=32):
     }
 
 
-@pytest.mark.parametrize("arch_id", ARCHS)
+# the two heaviest archs dominate the suite (~50s combined): their
+# round-step smoke runs under the slow mark, CI-only by default
+_SLOW_ARCHS = {"zamba2-7b", "deepseek-v2-lite-16b"}
+
+
+@pytest.mark.parametrize(
+    "arch_id",
+    [pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS
+     else a for a in ARCHS])
 def test_smoke_forward_and_fed_round(arch_id):
     arch = get_arch(arch_id)
     cfg = arch.make_smoke_config()

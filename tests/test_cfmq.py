@@ -7,7 +7,14 @@ and passes without the dev extra.
 import numpy as np
 import pytest
 
-from repro.core.cfmq import cfmq, mu_local_steps, paper_payload, paper_peak_memory
+from repro.core.cfmq import (
+    accumulate_wire_bytes,
+    cfmq,
+    mu_local_steps,
+    paper_payload,
+    paper_peak_memory,
+    round_wire_bytes,
+)
 
 try:
     from hypothesis import given, settings
@@ -104,3 +111,26 @@ def test_data_limit_reduces_cfmq_e7_vs_e8():
     e8 = cfmq(rounds=3000, clients_per_round=128, model_bytes=mb,
               local_epochs=1, examples_per_round=80 * 128, batch_size=1)
     assert e7.total_bytes < e8.total_bytes
+
+
+def test_wire_byte_totals_are_exact_ints():
+    """Byte totals must accumulate as host-side Python ints: one round
+    of a big model exceeds f32's integer-exact range (2^24), where an
+    f32 running total silently drops bytes."""
+    up = 40 * 1024 * 1024 + 3          # 40 MiB + 3 B per reporting client
+    down = 8 * (160 * 1024 * 1024 + 1)
+    participants = [7.0, 8.0, 6.0] * 40                       # 120 rounds
+
+    total = accumulate_wire_bytes(up, down, participants)
+    assert isinstance(total, int)
+    expect = sum(down + up * int(p) for p in participants)
+    assert total == expect
+
+    one = round_wire_bytes(up, down, np.float32(7.0))
+    assert isinstance(one, int) and one == down + 7 * up
+
+    # the f32 path this replaces really does lose bytes
+    f32_total = np.float32(0.0)
+    for p in participants:
+        f32_total += np.float32(down) + np.float32(up) * np.float32(p)
+    assert int(f32_total) != expect

@@ -64,6 +64,37 @@ def test_stochastic_rounding_is_unbiased():
     assert len(np.unique(outs)) > 1          # actually stochastic
 
 
+def test_stochastic_rounding_unbiased_at_grid_boundary():
+    """The absmax coordinate must quantize deterministically to the top
+    grid level: f32 division can land it one ulp *outside* the grid,
+    and an unclamped Bernoulli draw there rounds up to levels+1 and
+    gets clipped back — biasing E[Q(x)] below x exactly at the
+    boundary (and, in the packed path, wrapping the int8 cast).
+    2.770888566970825 is such a value: |x| / (|x|/127) > 127 in f32."""
+    a = 2.770888566970825
+    vals = np.full(64, 0.5, np.float32)
+    vals[0] = a
+    x = {"w": jnp.asarray(vals)}
+    compress = jax.jit(make_compressor(CompressionConfig(kind="int8")))
+    outs = np.stack([np.asarray(compress(x, jax.random.PRNGKey(i))["w"][0])
+                     for i in range(300)])
+    scale = np.float32(a) / np.float32(127.0)
+    # deterministic (no boundary randomness) and exactly on the top level
+    assert len(np.unique(outs)) == 1
+    np.testing.assert_array_equal(outs, np.float32(127.0) * scale)
+    # E[Q] == Q == x up to the scale-quantization ulp, never below-biased
+    np.testing.assert_allclose(outs.mean(), a, rtol=1e-6)
+
+    # adversarial key: base key 178975's leaf-0 draw fires at
+    # p = 7.6e-6, so an unclamped implementation rounds the absmax
+    # coordinate to 128 — which the int8 codes path wraps to -128
+    from repro.core.compression import quantize_codes
+
+    key = jax.random.split(jax.random.PRNGKey(178975), 1)[0]
+    codes, _ = quantize_codes(jnp.asarray(vals), key, 8)
+    assert int(codes[0]) == 127
+
+
 def test_nearest_rounding_is_deterministic():
     cfg = CompressionConfig(kind="int8", stochastic=False)
     compress = make_compressor(cfg)

@@ -348,6 +348,7 @@ def test_ladder_points_budgets():
     assert pts["E10"].specaug_scale == 2.0
 
 
+@pytest.mark.slow
 def test_sweep_runner_end_to_end(tmp_path):
     """Two-point micro-sweep on a micro RNN-T: one shared jitted round
     fn, frontier JSON written, rows carry quality/cost fields."""
@@ -386,3 +387,23 @@ def test_sweep_runner_end_to_end(tmp_path):
     assert len(runner._jit_cache) == 1
     (fn,) = runner._jit_cache.values()
     assert fn._cache_size() == 1
+
+
+def test_ef_compression_grid_spec():
+    """Plain/EF pairs sit at identical wire bytes; the packed point
+    exercises the materialized wire path."""
+    from repro.core import client_wire_bytes
+    from repro.launch.sweeps import ef_compression_points
+
+    pts = {p.id: p for p in ef_compression_points(smoke=True)}
+    assert {"top5", "top5_ef", "int4", "int4_ef", "int4_packed_ef"} <= set(pts)
+    tree = {"w": np.zeros((33, 7), np.float32)}
+    for a, b in [("top5", "top5_ef"), ("int4", "int4_ef"),
+                 ("int4", "int4_packed_ef")]:
+        assert (client_wire_bytes(pts[a].plan.compression, tree)
+                == client_wire_bytes(pts[b].plan.compression, tree))
+    assert pts["top5_ef"].plan.compression.error_feedback
+    assert not pts["top5"].plan.compression.error_feedback
+    assert pts["int4_packed_ef"].plan.compression.packed
+    full = {p.id for p in ef_compression_points(smoke=False)}
+    assert {"top1", "top1_ef"} <= full

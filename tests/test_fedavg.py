@@ -166,3 +166,103 @@ def test_convergence_on_regression():
         state, m = step(state, make_batch(4, 3, 8, seed=100 + r))
         losses.append(float(m["loss"]))
     assert losses[-1] < 0.15 * losses[0]
+
+
+# ------------------------------------------------------ error feedback
+
+def test_error_feedback_recovers_topk_quality_at_same_bytes():
+    """The acceptance criterion in miniature: EF21 top-k at 5% reaches
+    strictly better final loss than plain top-k at *identical* wire
+    bytes (EF changes what travels in the payload, not its size).
+
+    Plain-SGD server (w += wbar), matching the ef_compression grid:
+    EF21's guarantee is for the update applied as-is — an adaptive
+    server renormalizes the delayed residual bursts and can diverge
+    (documented in the grid's docstring and ROADMAP)."""
+    from repro.core import CompressionConfig, client_wire_bytes
+
+    def run(comp):
+        plan = FederatedPlan(clients_per_round=4, client_lr=0.05,
+                             server_optimizer="sgd", server_lr=1.0,
+                             compression=comp)
+        step = jax.jit(make_round_step(loss_fn, plan, jax.random.PRNGKey(1)))
+        state = init_server_state(plan, params0())
+        losses = []
+        for r in range(40):
+            state, m = step(state, make_batch(4, 3, 8, seed=100 + r))
+            losses.append(float(m["loss"]))
+        return float(np.mean(losses[-5:])), plan
+
+    plain_loss, plain_plan = run(CompressionConfig(kind="topk", topk_frac=0.05))
+    ef_loss, ef_plan = run(CompressionConfig(kind="topk", topk_frac=0.05,
+                                             error_feedback=True))
+    assert (client_wire_bytes(ef_plan.compression, params0())
+            == client_wire_bytes(plain_plan.compression, params0()))
+    assert ef_loss < plain_loss
+
+
+def test_error_feedback_state_threads_through_rounds():
+    from repro.core import CompressionConfig
+
+    plan = FederatedPlan(clients_per_round=3, client_lr=0.1,
+                         server_optimizer="sgd", server_lr=1.0,
+                         compression=CompressionConfig(kind="topk",
+                                                       topk_frac=0.2,
+                                                       error_feedback=True))
+    state = init_server_state(plan, params0())
+    assert state.ef is not None
+    np.testing.assert_array_equal(np.asarray(state.ef["w"]),
+                                  np.zeros((3, 4, 2)))
+    step = jax.jit(make_round_step(loss_fn, plan, jax.random.PRNGKey(0)))
+    state2, _ = step(state, make_batch(3, 2, 4))
+    # top-k drops coordinates, so some residual must be nonzero
+    assert float(jnp.abs(state2.ef["w"]).max()) > 0
+    # without EF no residual state exists
+    plan_off = FederatedPlan(clients_per_round=3)
+    assert init_server_state(plan_off, params0()).ef is None
+
+
+def test_error_feedback_keeps_dropped_client_residuals():
+    """A non-participant uploads nothing: its residual must survive the
+    round untouched (C(0 + e_k) is nonzero, so this needs the explicit
+    participant select, unlike the plain path where delta is 0)."""
+    from repro.core import CompressionConfig, CohortConfig
+    from repro.core.cohort import participation_mask
+    from repro.core.fedavg import _plane_keys
+
+    base_key = jax.random.PRNGKey(3)
+    plan = FederatedPlan(clients_per_round=4, client_lr=0.1,
+                         server_optimizer="sgd", server_lr=1.0,
+                         cohort=CohortConfig(participation=0.5),
+                         compression=CompressionConfig(kind="topk",
+                                                       topk_frac=0.2,
+                                                       error_feedback=True))
+    state = init_server_state(plan, params0())
+    marker = jax.tree.map(lambda e: jnp.full_like(e, 0.125), state.ef)
+    state = state._replace(ef=marker)
+    step = jax.jit(make_round_step(loss_fn, plan, base_key))
+    state2, m = step(state, make_batch(4, 2, 4, seed=7))
+
+    ckey, _, _ = _plane_keys(base_key, jnp.zeros((), jnp.int32))
+    pmask = np.asarray(participation_mask(jax.random.fold_in(ckey, 0), 4,
+                                          plan.cohort.participation))
+    assert 0 < pmask.sum() < 4                       # the draw actually split
+    ef = np.asarray(state2.ef["w"])
+    for k in range(4):
+        if pmask[k]:
+            assert np.abs(ef[k] - 0.125).max() > 1e-9
+        else:
+            np.testing.assert_array_equal(ef[k], np.full((4, 2), 0.125))
+
+
+def test_error_feedback_rejects_fedsgd():
+    from repro.core import CompressionConfig, make_hyper_round_step
+
+    plan = FederatedPlan(engine="fedsgd",
+                         compression=CompressionConfig(kind="int8",
+                                                       error_feedback=True))
+    with pytest.raises(ValueError, match="per-client"):
+        make_round_step(loss_fn, plan, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="per-client"):
+        make_hyper_round_step(loss_fn, engine="fedsgd",
+                              compression=plan.compression)

@@ -11,6 +11,10 @@ import pytest
 from repro.core import FederatedPlan, FVNConfig
 from repro.launch.train import run_federated_asr, tiny_asr_setup
 
+# multi-round end-to-end parity: the slowest tests in the suite (CI
+# always runs them via -m "slow or not slow"; local default skips)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def setup():

@@ -1,0 +1,213 @@
+"""Packed-wire plane: Pallas kernels vs jnp oracles, byte-exact payload
+sizes vs the Python formulas, and bit-exact round-trips against the
+in-graph quantize->dequantize path."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import (
+    CompressionConfig,
+    leaf_wire_bytes,
+    make_compressor,
+    pack_leaf,
+    packed_leaf_bytes,
+    quantize_codes,
+    sum_packed_codes,
+    unpack_leaf,
+)
+from repro.kernels import ref, wire_pack
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - deterministic fallback below
+    HAVE_HYPOTHESIS = False
+
+
+def _codes(n, lo=-7, hi=7, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).integers(lo, hi + 1, n),
+                       jnp.int8)
+
+
+# ------------------------------------------------------- kernel parity
+
+@pytest.mark.parametrize("n", [1, 2, 3, 101, 512, 1025, 2048])
+def test_nibble_pack_kernel_matches_ref(n):
+    codes = _codes(n, seed=n)
+    out = wire_pack.nibble_pack_pallas(codes, interpret=True)
+    expect = ref.nibble_pack_ref(codes)
+    assert out.shape == ((n + 1) // 2,)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 101, 512, 1025, 2048])
+def test_nibble_unpack_kernel_matches_ref_and_roundtrips(n):
+    codes = _codes(n, seed=1000 + n)
+    packed = ref.nibble_pack_ref(codes)
+    out = wire_pack.nibble_unpack_pallas(packed, n, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.nibble_unpack_ref(packed, n)))
+    # pack -> unpack is the identity on int4 codes
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+@pytest.mark.parametrize("n", [1, 7, 300, 1024])
+def test_dequantize_kernel_matches_ref(n):
+    codes = _codes(n, lo=-127, hi=127, seed=n)
+    scale = jnp.float32(0.0173)
+    out = wire_pack.dequantize_pallas(codes, scale, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.dequantize_ref(codes, scale)))
+
+
+@pytest.mark.parametrize("n,k", [(8, 1), (64, 5), (256, 32), (1, 1)])
+def test_topk_unpack_kernel_matches_ref(n, k):
+    rng = np.random.default_rng(k * 100 + n)
+    vals = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    idx = jnp.asarray(rng.choice(n, size=k, replace=False), jnp.int32)
+    out = wire_pack.topk_unpack_pallas(vals, idx, n, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.topk_unpack_ref(vals, idx, n)))
+
+
+# --------------------------------------- payload size == byte formula
+
+_KIND_CFGS = [
+    CompressionConfig(kind="int8", packed=True),
+    CompressionConfig(kind="int4", packed=True),
+    CompressionConfig(kind="topk", topk_frac=0.05, packed=True),
+    CompressionConfig(kind="topk", topk_frac=1e-9, packed=True),  # k -> 1
+    CompressionConfig(kind="topk", topk_frac=1.0, packed=True),
+]
+
+
+def _assert_payload_bytes(cfg, n, seed=0):
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(n,)), jnp.float32)
+    payload = pack_leaf(cfg, x, jax.random.PRNGKey(seed))
+    assert packed_leaf_bytes(payload) == leaf_wire_bytes(cfg, n), (cfg.kind, n)
+
+
+@pytest.mark.parametrize("cfg", _KIND_CFGS, ids=lambda c: f"{c.kind}-{c.topk_frac}")
+@pytest.mark.parametrize("n", [1, 2, 3, 33, 101, 4096])
+def test_packed_payload_size_equals_formula(cfg, n):
+    """The Python byte formula equals the materialized buffer size for
+    every kind — including odd-size int4 nibble padding, topk_frac -> 0
+    (k floors at 1) and size-1 tensors."""
+    _assert_payload_bytes(cfg, n)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(n=st.integers(1, 5000),
+           kind=st.sampled_from(["int8", "int4", "topk"]),
+           frac=st.floats(1e-9, 1.0))
+    def test_packed_payload_size_property(n, kind, frac):
+        cfg = CompressionConfig(kind=kind, topk_frac=frac, packed=True)
+        _assert_payload_bytes(cfg, n, seed=n % 17)
+
+else:  # deterministic fallback sweep
+
+    @pytest.mark.parametrize("n", [1, 5, 17, 999, 5000])
+    @pytest.mark.parametrize("kind,frac", [("int8", 0.05), ("int4", 0.05),
+                                           ("topk", 1e-9), ("topk", 0.37),
+                                           ("topk", 1.0)])
+    def test_packed_payload_size_property(n, kind, frac):
+        cfg = CompressionConfig(kind=kind, topk_frac=frac, packed=True)
+        _assert_payload_bytes(cfg, n, seed=n % 17)
+
+
+# ------------------------------------------------- bit-exact roundtrip
+
+TREE = {
+    "a": jnp.asarray(np.random.default_rng(0).normal(size=(16, 8)), jnp.float32),
+    "b": {"c": jnp.asarray(np.random.default_rng(1).normal(size=(33,)), jnp.float32)},
+    "s": jnp.asarray(np.random.default_rng(2).normal(size=(1,)), jnp.float32),
+}
+
+
+@pytest.mark.parametrize("kind,frac", [("int8", 0.05), ("int4", 0.05),
+                                       ("topk", 0.05), ("topk", 0.25)])
+def test_packed_roundtrip_bit_exact_vs_in_graph(kind, frac):
+    """pack -> unpack == in-graph quantize -> dequantize, bit for bit:
+    both consume the same codes, so the wire format is a pure re-layout."""
+    key = jax.random.PRNGKey(42)
+    plain = make_compressor(CompressionConfig(kind=kind, topk_frac=frac))(TREE, key)
+    packed = make_compressor(
+        CompressionConfig(kind=kind, topk_frac=frac, packed=True))(TREE, key)
+    for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(packed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_packed_roundtrip_under_jit_and_vmap():
+    """The round engine vmaps the compressor over clients; the packed
+    path must survive jit+vmap unchanged."""
+    X = jnp.asarray(np.random.default_rng(3).normal(size=(4, 16, 8)), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    compress = make_compressor(CompressionConfig(kind="int4", packed=True))
+    plain = make_compressor(CompressionConfig(kind="int4"))
+    # both sides jit+vmap so the comparison isolates the wire re-layout
+    # (jit-vs-eager would differ by fusion/FMA ulps unrelated to packing)
+    out_p = jax.jit(jax.vmap(lambda x, k: compress({"w": x}, k)))(X, keys)
+    out_q = jax.jit(jax.vmap(lambda x, k: plain({"w": x}, k)))(X, keys)
+    np.testing.assert_array_equal(np.asarray(out_p["w"]), np.asarray(out_q["w"]))
+
+
+def test_unpack_leaf_restores_shape_and_dtype():
+    cfg = CompressionConfig(kind="int4", packed=True)
+    x = jnp.asarray(np.random.default_rng(5).normal(size=(7, 3)), jnp.float32)
+    payload = pack_leaf(cfg, x, jax.random.PRNGKey(1))
+    out = unpack_leaf(cfg, payload, x.shape, x.dtype)
+    assert out.shape == x.shape and out.dtype == x.dtype
+
+
+# ------------------------------------------------ packed-form allreduce
+
+def test_sum_packed_codes_matches_dequantized_sum():
+    """With a shared scale, summing the *packed* codes (widened to
+    int32) then dequantizing once equals summing the dequantized
+    tensors — the packed-form all-reduce of the uplink."""
+    rng = np.random.default_rng(9)
+    K, n = 6, 64
+    # same absmax for every client => identical scales
+    X = rng.normal(size=(K, n)).astype(np.float32)
+    X[:, 0] = 10.0
+    X = jnp.asarray(X)
+    keys = jax.random.split(jax.random.PRNGKey(11), K)
+    for kind in ("int8", "int4"):
+        cfg = CompressionConfig(kind=kind, packed=True)
+        payloads = [pack_leaf(cfg, X[i], keys[i]) for i in range(K)]
+        scales = np.asarray([p[1] for p in payloads])
+        np.testing.assert_allclose(scales, scales[0])
+        code_sum = sum_packed_codes(cfg, jnp.stack([p[0] for p in payloads]), n)
+        packed_reduce = np.asarray(code_sum, np.float32) * scales[0]
+        dense_reduce = sum(
+            np.asarray(unpack_leaf(cfg, p, (n,))) for p in payloads)
+        np.testing.assert_allclose(packed_reduce, dense_reduce, atol=1e-5)
+
+
+def test_quantize_codes_range_never_wraps():
+    """Codes live in [-levels, levels]: the pre-draw clamp keeps the
+    int8 cast from wrapping (an unclamped boundary draw could yield
+    levels+1, which int8-wraps to a sign flip in the packed buffer)."""
+    rng = np.random.default_rng(13)
+    # absmax values chosen so f32 division overshoots the grid boundary
+    for a, bits in [(2.770888566970825, 8), (0.26362359523773193, 8),
+                    (7.646292686462402, 4), (3.625833749771118, 4)]:
+        x = jnp.asarray(np.concatenate([[a], rng.normal(size=63)]), jnp.float32)
+        levels = 2 ** (bits - 1) - 1
+        for i in range(20):
+            codes, _ = quantize_codes(x, jax.random.PRNGKey(i), bits)
+            c = np.asarray(codes)
+            assert c.min() >= -levels and c.max() <= levels
+
+
+def test_sum_packed_codes_rejects_topk():
+    cfg = CompressionConfig(kind="topk", topk_frac=0.05, packed=True)
+    with pytest.raises(ValueError, match="code-domain"):
+        sum_packed_codes(cfg, jnp.zeros((2, 3), jnp.float32), 3)
