@@ -1,0 +1,177 @@
+"""Bench-regression gate: diff a fresh ``results/bench_summary.json``
+against the committed ``results/bench_baseline.json``.
+
+``PYTHONPATH=src python -m benchmarks.check_regression [--update-baseline]``
+
+CI runs this right after ``benchmarks.run --smoke``, so the bench
+trajectory is *gated*, not just uploaded: a silent perf regression in
+the jitted round step (or a qualitative-claim flip) fails the push.
+
+Metric classes and their failure rules (relative, per metric):
+
+- ``pass`` booleans: a claim that held at the baseline may never flip
+  to False (exact).
+- ``us_per_call`` timings: fail when fresh > ``--time-ratio`` x
+  baseline (default 3.0 -- generous because CI runners are noisy, but
+  a compile blowup or an accidentally-retraced round fn is way past
+  3x).
+- ``*_speedup`` ratios: fail when fresh < baseline / ``--ratio-slack``
+  (default 2.0).
+- ``final_loss`` per experiment: fail when fresh > (1 +
+  ``--loss-rtol``) x baseline (default 0.5: catches divergence, not
+  jitter).
+
+Metrics present in the baseline but missing from the fresh run FAIL (a
+silently dropped bench is a coverage regression); new metrics PASS
+with a note suggesting ``--update-baseline``. The smoke flag must
+match -- comparing a smoke run against a full-budget baseline would be
+noise, not signal.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+UPDATE_HINT = (
+    "[bench-gate] intentional change? refresh with `python -m "
+    "benchmarks.check_regression --update-baseline` and commit "
+    "results/bench_baseline.json"
+)
+
+
+def flatten(tree: dict, prefix: str = "") -> dict:
+    out = {}
+    for k, v in tree.items():
+        path = f"{prefix}.{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(flatten(v, path))
+        else:
+            out[path] = v
+    return out
+
+
+def classify(path: str):
+    """Metric class by path: how (and whether) to compare it."""
+    leaf = path.rsplit(".", 1)[-1]
+    if leaf == "pass":
+        return "bool"
+    if ".us_per_call." in path or leaf.endswith("_us"):
+        return "time"
+    if leaf.endswith("_speedup"):
+        return "speedup"
+    if ".final_loss." in path:
+        return "loss"
+    return None
+
+
+def compare(path: str, base, fresh, args):
+    """-> (status, limit_text). status is "ok" or "FAIL"."""
+    kind = classify(path)
+    if kind == "bool":
+        ok = bool(fresh) or not bool(base)
+        return ("ok" if ok else "FAIL", "no true->false")
+    if kind == "time":
+        limit = float(base) * args.time_ratio
+        return ("ok" if float(fresh) <= limit else "FAIL", f"<= {limit:.1f}")
+    if kind == "speedup":
+        limit = float(base) / args.ratio_slack
+        return ("ok" if float(fresh) >= limit else "FAIL", f">= {limit:.2f}")
+    if kind == "loss":
+        limit = float(base) * (1.0 + args.loss_rtol)
+        return ("ok" if float(fresh) <= limit else "FAIL", f"<= {limit:.4f}")
+    return ("ok", "info")
+
+
+def run_gate(baseline: dict, summary: dict, args):
+    """-> (table rows, failed). Pure so tests can drive it directly."""
+    rows = []
+    failed = False
+    base_flat = flatten(baseline)
+    fresh_flat = flatten(summary)
+    if base_flat.get("smoke") != fresh_flat.get("smoke"):
+        smoke = (base_flat.get("smoke"), fresh_flat.get("smoke"))
+        rows.append(("smoke", smoke[0], smoke[1], "must match", "FAIL"))
+        failed = True
+    for path in sorted(set(base_flat) | set(fresh_flat)):
+        if path == "smoke" or classify(path) is None:
+            continue
+        base = base_flat.get(path)
+        fresh = fresh_flat.get(path)
+        if base is None:
+            note = "new metric: --update-baseline"
+            rows.append((path, "-", fresh, note, "NOTE"))
+            continue
+        if fresh is None:
+            rows.append((path, base, "-", "bench disappeared", "FAIL"))
+            failed = True
+            continue
+        status, limit = compare(path, base, fresh, args)
+        rows.append((path, base, fresh, limit, status))
+        failed = failed or status == "FAIL"
+    return rows, failed
+
+
+def fmt_cell(v) -> str:
+    return f"{v:>10.3f}" if isinstance(v, float) else f"{v!s:>10}"
+
+
+def print_table(rows) -> None:
+    w = max([len(r[0]) for r in rows] + [6])
+    print(f"{'metric':<{w}}  {'baseline':>10}  {'fresh':>10}  limit  status")
+    for path, base, fresh, limit, status in rows:
+        cells = f"{fmt_cell(base)}  {fmt_cell(fresh)}  {limit:<28}"
+        print(f"{path:<{w}}  {cells}  {status}")
+
+
+def make_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--fresh", default="results/bench_summary.json")
+    ap.add_argument("--baseline", default="results/bench_baseline.json")
+    ap.add_argument("--time-ratio", type=float, default=3.0)
+    ap.add_argument("--ratio-slack", type=float, default=2.0)
+    ap.add_argument("--loss-rtol", type=float, default=0.5)
+    ap.add_argument("--update-baseline", action="store_true")
+    return ap
+
+
+def main() -> int:
+    args = make_parser().parse_args()
+    if args.update_baseline:
+        try:
+            shutil.copyfile(args.fresh, args.baseline)
+        except FileNotFoundError:
+            print(f"[bench-gate] no fresh summary at {args.fresh}")
+            print("[bench-gate] run `python -m benchmarks.run --smoke` first")
+            return 1
+        print(f"[bench-gate] baseline refreshed from {args.fresh}")
+        return 0
+    try:
+        with open(args.fresh) as f:
+            summary = json.load(f)
+    except FileNotFoundError:
+        print(f"[bench-gate] no fresh summary at {args.fresh}")
+        print("[bench-gate] run `python -m benchmarks.run --smoke` first")
+        return 1
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"[bench-gate] no baseline at {args.baseline}")
+        print("[bench-gate] seed one with --update-baseline and commit it")
+        return 1
+    rows, failed = run_gate(baseline, summary, args)
+    print_table(rows)
+    n_fail = sum(r[4] == "FAIL" for r in rows)
+    verdict = "FAIL" if failed else "PASS"
+    knobs = f"time-ratio={args.time_ratio}, loss-rtol={args.loss_rtol}"
+    print(f"[bench-gate] {verdict}: {n_fail}/{len(rows)} failing ({knobs})")
+    if failed:
+        print(UPDATE_HINT)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -105,6 +105,7 @@ def bench_fed_round():
     base = dict(clients_per_round=8, local_batch_size=4, client_lr=0.3)
     us = _time_round(bundle, params, batch, FederatedPlan(**base),
                      "fed_round_tiny_rnnt", "clients=8")
+    times = {"fed_round_tiny_rnnt": us}
     for name, plan in [
         ("fed_round_tiny_rnnt_int8",
          FederatedPlan(**base, compression=CompressionConfig(kind="int8"))),
@@ -127,15 +128,19 @@ def bench_fed_round():
              kind="topk", topk_frac=0.05, error_feedback=True))),
     ]:
         up = 8 * client_wire_bytes(plan.compression, params)
-        _time_round(bundle, params, batch, plan, name,
-                    f"baseline_us={us:.1f};uplink_B_round={up}")
-    return us
+        times[name] = _time_round(bundle, params, batch, plan, name,
+                                  f"baseline_us={us:.1f};uplink_B_round={up}")
+    return times
 
 
-def main():
-    bench_attention()
-    bench_rnnt_joint()
-    bench_fed_round()
+def main() -> dict:
+    """Runs every micro-bench; returns {bench_name: us_per_call} so the
+    harness can persist the timings for the CI regression gate."""
+    times = {}
+    times["attention_blockwise_1k"], _ = bench_attention()
+    times["rnnt_joint_chunked"], _ = bench_rnnt_joint()
+    times.update(bench_fed_round())
+    return times
 
 
 if __name__ == "__main__":

@@ -15,7 +15,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import sys
 import time
 
 SMOKE_ROUNDS = "6"
@@ -48,15 +47,23 @@ def main() -> None:
     if want == ["all"]:
         want = ["kernels", "data", "t1", "t2", "t3", "t4", "t5", "fig3"]
     t0 = time.time()
+    # the summary persists numbers, not just verdicts: us_per_call /
+    # speedups / per-experiment losses feed benchmarks/check_regression
+    # (the CI bench-regression gate against results/bench_baseline.json)
     summary = {"smoke": args.smoke}
     if "kernels" in want:
         print("== kernel micro-benches (name,us_per_call,derived) ==")
-        kernels_bench.main()
+        times = kernels_bench.main()
+        summary["kernels"] = {
+            "us_per_call": {k: round(v, 1) for k, v in times.items()}}
     if "data" in want:
         print("== data-plane micro-benches (name,us_per_call,derived) ==")
-        _, _, speedup = data_bench.bench_packing()
-        data_bench.bench_prefetch()
-        summary["data"] = {"pack_speedup": speedup, "pass": speedup >= 5.0}
+        t_vec, _, speedup = data_bench.bench_packing()
+        t_pref, _ = data_bench.bench_prefetch()
+        summary["data"] = {"pack_speedup": round(speedup, 2),
+                           "pack_us": round(t_vec, 1),
+                           "prefetch_us": round(t_pref, 1),
+                           "pass": speedup >= 5.0}
     fns = {"t1": tables.table1_noniid_gap, "t2": tables.table2_data_limiting,
            "t3": tables.table3_fvn, "t4": tables.table4_fvn_no_limit,
            "t5": tables.table5_cost, "fig3": tables.fig3_quality_cost}
@@ -64,7 +71,13 @@ def main() -> None:
     for k, fn in fns.items():
         if k in want:
             res = fn()
-            summary[k] = {kk: vv for kk, vv in res.items() if kk == "pass"}
+            entry = {"pass": res["pass"]}
+            losses = {eid: round(vv["final_loss"], 4)
+                      for eid, vv in res.items()
+                      if isinstance(vv, dict) and "final_loss" in vv}
+            if losses:
+                entry["final_loss"] = losses
+            summary[k] = entry
             passes.append(res["pass"])
     print(f"\n== summary: {sum(bool(p) for p in passes)}/{len(passes)} "
           f"qualitative claims reproduced; wall={time.time()-t0:.0f}s ==")

@@ -5,7 +5,6 @@ claim, plus a PASS/FAIL on the qualitative direction.
 """
 from __future__ import annotations
 
-import time
 
 from benchmarks.common import run_experiment
 
@@ -20,7 +19,8 @@ def table1_noniid_gap():
     Paper: +42% rel. WER."""
     e0, e1 = run_experiment("E0"), run_experiment("E1")
     print("\n== Table 1: quality degradation with non-IID training ==")
-    print(_row(e0)); print(_row(e1))
+    print(_row(e0))
+    print(_row(e1))
     rel = (e1["wer_hard"] - e0["wer_hard"]) / max(e0["wer_hard"], 1e-9)
     ok = e1["final_loss"] >= e0["final_loss"] * 0.98
     print(f"paper: E1 worse than E0 (+42% rel WER). here: rel dWER_hard={rel:+.1%} "

@@ -6,8 +6,6 @@ implemented). [hf:llava-hf/llava-v1.6-mistral-7b-hf]
 Mistral's native sliding window (4096) makes long_500k legitimate
 without a variant config. Engine: fedavg.
 """
-import dataclasses
-
 from repro.configs import base
 from repro.models.transformer import TransformerConfig
 from repro.models.vlm import VLMConfig

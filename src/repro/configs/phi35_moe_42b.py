@@ -8,10 +8,6 @@ fedsgd + FSDP (42B > one model-parallel group's HBM for the fedavg
 per-client-replica layout). long_500k via the sliding-window variant
 (W=4096), noted in DESIGN.md.
 """
-import dataclasses
-
-from jax.sharding import PartitionSpec as P
-
 from repro.configs import base
 from repro.models.moe import MoEConfig
 from repro.models.transformer import TransformerConfig

@@ -2,12 +2,11 @@
 from __future__ import annotations
 
 import importlib
-from typing import Optional
 
 import jax
 
 from repro.configs import base
-from repro.configs.base import SHAPES, ArchSpec, InputShape
+from repro.configs.base import ArchSpec, InputShape
 
 _MODULES = {
     "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe_42b",

@@ -7,6 +7,8 @@
 - ``compression`` — uplink delta compression with exact wire bytes
 - ``aggregation`` — pluggable server aggregators (weighted/trimmed
   mean, coordinate median, clipped mean + DP noise)
+- ``corruption`` — adversarial client corruptions (sign_flip /
+  gaussian / zero / stale replay / data-plane label_shuffle)
 - ``fvn``     — Federated Variational Noise (§4.2.2)
 - ``cfmq``    — Cost of Federated Model Quality (§2.3, Eqs. 1-2)
 - ``plan``    — FederatedPlan experiment configuration
@@ -33,6 +35,12 @@ from repro.core.fedavg import (
 )
 from repro.core.aggregation import available_aggregators, get_aggregator, register_aggregator
 from repro.core.compression import CompressionConfig, client_wire_bytes, tree_param_bytes
+from repro.core.corruption import (
+    CorruptionConfig,
+    available_corruptions,
+    get_corruption,
+    register_corruption,
+)
 from repro.core.cfmq import (
     CFMQTerms,
     accumulate_wire_bytes,
@@ -69,6 +77,10 @@ __all__ = [
     "CompressionConfig",
     "client_wire_bytes",
     "tree_param_bytes",
+    "CorruptionConfig",
+    "available_corruptions",
+    "get_corruption",
+    "register_corruption",
     "CFMQTerms",
     "accumulate_wire_bytes",
     "cfmq",

@@ -24,6 +24,15 @@ serves a grid. The robust rules are unweighted over participants
 non-participants by rank: values are sorted with non-participants
 pushed to +inf, so participant ranks occupy [0, m) and rank tests
 against traced m work for any cohort size.
+
+Hostile inputs: a Byzantine client (see ``repro.core.corruption``) can
+ship NaN/Inf coordinates, and ``NaN * 0 == NaN`` means a masked sum is
+NOT protection. The robust rules therefore treat non-finite
+coordinates exactly like non-participants (excluded per coordinate,
+with per-coordinate effective cohort sizes), so no hostile update can
+poison the server state. ``weighted_mean`` stays the paper's exact
+rule — it is the *measurement* of what a plain mean does under attack,
+not a defense.
 """
 from __future__ import annotations
 
@@ -70,47 +79,65 @@ def weighted_mean(deltas: PyTree, n_k, pmask, hypers, key) -> PyTree:
     return jax.tree.map(lambda d: jnp.tensordot(w, d, axes=(0, 0)), deltas)
 
 
-def _participant_ranks(flat, pmask):
-    """Ranks of each client's value per coordinate, participants first.
+def _contributors(flat, pmask):
+    """(K, M) bool: participating AND finite per coordinate — the
+    robust rules' effective cohort. Hostile clients ship NaN/Inf
+    deltas; excluding them per coordinate (instead of relying on a
+    mask-multiply, which NaN survives) keeps the server state finite
+    under any attack."""
+    return (pmask[:, None] > 0) & jnp.isfinite(flat)
 
-    flat: (K, M); non-participants sort to the end (+inf), so a
-    participant's rank is its order statistic among the m participants.
+
+def _contributor_ranks(flat, ok):
+    """Ranks of each client's value per coordinate, contributors first.
+
+    flat: (K, M); non-contributors sort to the end (+inf, with any NaN
+    after that), so a contributor's rank is its order statistic among
+    the per-coordinate m contributors. Ties (equal values, real after
+    quantization) get distinct ranks via sort stability, so a tied pair
+    at a trim boundary drops exactly one of the two, never both.
     """
-    vals = jnp.where(pmask[:, None] > 0, flat, jnp.inf)
+    vals = jnp.where(ok, flat, jnp.inf)
     order = jnp.argsort(vals, axis=0)
     return jnp.argsort(order, axis=0).astype(jnp.float32)
 
 
+def _masked_mean(flat, keep):
+    """Mean of flat over the keep mask; where() (not multiply) so a
+    dropped NaN/Inf coordinate cannot re-enter as NaN * 0."""
+    cnt = jnp.maximum(keep.sum(axis=0), 1.0)
+    return jnp.where(keep, flat, 0.0).sum(axis=0) / cnt
+
+
 @register_aggregator("trimmed_mean")
 def trimmed_mean(deltas: PyTree, n_k, pmask, hypers, key) -> PyTree:
-    m = jnp.maximum(pmask.sum(), 1.0)
-    # trimmed per side, clamped so at least one client always survives
-    # (trim_frac >= 0.5 would otherwise zero the update silently)
-    t = jnp.clip(jnp.floor(hypers["trim_frac"] * m),
-                 0.0, jnp.ceil(m / 2.0) - 1.0)
-
     def agg(d):
         flat = d.astype(jnp.float32).reshape(d.shape[0], -1)
-        ranks = _participant_ranks(flat, pmask)
-        keep = ((ranks >= t) & (ranks < m - t) & (pmask[:, None] > 0))
-        cnt = jnp.maximum(keep.sum(axis=0), 1.0)
-        return ((flat * keep).sum(axis=0) / cnt).reshape(d.shape[1:])
+        ok = _contributors(flat, pmask)
+        m = jnp.maximum(ok.sum(axis=0).astype(jnp.float32), 1.0)   # (M,)
+        # trimmed per side, clamped so at least one client always
+        # survives (trim_frac >= 0.5 would otherwise zero the update
+        # silently)
+        t = jnp.clip(jnp.floor(hypers["trim_frac"] * m),
+                     0.0, jnp.ceil(m / 2.0) - 1.0)
+        ranks = _contributor_ranks(flat, ok)
+        keep = (ranks >= t) & (ranks < m - t) & ok
+        return _masked_mean(flat, keep).reshape(d.shape[1:])
 
     return jax.tree.map(agg, deltas)
 
 
 @register_aggregator("coordinate_median")
 def coordinate_median(deltas: PyTree, n_k, pmask, hypers, key) -> PyTree:
-    m = jnp.maximum(pmask.sum(), 1.0)
-    lo = jnp.floor((m - 1.0) / 2.0)
-    hi = jnp.ceil((m - 1.0) / 2.0)
-
     def agg(d):
         flat = d.astype(jnp.float32).reshape(d.shape[0], -1)
-        ranks = _participant_ranks(flat, pmask)
-        keep = ((ranks == lo) | (ranks == hi)) & (pmask[:, None] > 0)
-        cnt = jnp.maximum(keep.sum(axis=0), 1.0)
-        return ((flat * keep).sum(axis=0) / cnt).reshape(d.shape[1:])
+        ok = _contributors(flat, pmask)
+        m = jnp.maximum(ok.sum(axis=0).astype(jnp.float32), 1.0)   # (M,)
+        lo = jnp.floor((m - 1.0) / 2.0)
+        hi = jnp.ceil((m - 1.0) / 2.0)
+        ranks = _contributor_ranks(flat, ok)
+        keep = ((ranks == lo) | (ranks == hi)) & ok
+        return _masked_mean(flat, keep).reshape(d.shape[1:])
 
     return jax.tree.map(agg, deltas)
 
@@ -118,19 +145,28 @@ def coordinate_median(deltas: PyTree, n_k, pmask, hypers, key) -> PyTree:
 @register_aggregator("clipped_mean")
 def clipped_mean(deltas: PyTree, n_k, pmask, hypers, key) -> PyTree:
     """DP-FedAvg: per-client L2 clip, uniform participant mean, then
-    Gaussian noise scaled to the clip-bounded sensitivity clip/m."""
+    Gaussian noise scaled to the clip-bounded sensitivity clip/m.
+
+    A client with any non-finite coordinate gets weight 0 (a NaN norm
+    cannot be clipped into the sensitivity bound, so the only sound
+    move is to drop the whole update), and its coordinates are zeroed
+    before the weighted sum so ``0 * inf`` cannot produce NaN. A
+    zero-norm update is fine as-is: scale clamps to 1 and the update
+    contributes nothing."""
     clip = hypers["dp_clip"]
     sigma = hypers["dp_sigma"]
     m = jnp.maximum(pmask.sum(), 1.0)
     sq = sum(jnp.sum(jnp.square(d.astype(jnp.float32)),
                      axis=tuple(range(1, d.ndim)))
              for d in jax.tree.leaves(deltas))              # (K,)
+    finite = jnp.isfinite(sq)
     scale = jnp.minimum(1.0, clip / jnp.sqrt(jnp.maximum(sq, 1e-24)))
-    w = scale * pmask / m
+    w = jnp.where(finite, scale, 0.0) * pmask / m
 
     leaves, treedef = jax.tree_util.tree_flatten(deltas)
     keys = jax.random.split(key, len(leaves))
-    out = [jnp.tensordot(w, d.astype(jnp.float32), axes=(0, 0))
+    out = [jnp.tensordot(w, jnp.where(jnp.isfinite(d), d, 0.0).astype(jnp.float32),
+                         axes=(0, 0))
            + (sigma * clip / m) * jax.random.normal(k, d.shape[1:], jnp.float32)
            for d, k in zip(leaves, keys)]
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -99,7 +99,14 @@ def measured_payload(plan, params, mean_participants: float) -> Optional[float]:
     driver and the sweep runner: ``None`` for the paper/parity default
     (no compression, full participation — callers fall back to
     ``paper_payload``), else the wire-accurate per-client P with uplink
-    scaled by the mean number of reporting clients."""
+    scaled by the mean number of reporting clients.
+
+    Client corruption (``plan.corruption``) deliberately does NOT enter
+    this policy: a corrupted participant still transmits a full payload
+    (a sign-flipped or zero delta costs the same bytes), so the
+    adversary moves the *quality* axis of the frontier at byte-exact
+    identical CFMQ cost — asserted per grid in
+    ``sweeps.check_robustness``."""
     if plan.compression.kind == "none" and plan.cohort.full:
         return None
     up_per_client, down_per_round = plan_wire_accounting(plan, params)

@@ -1,0 +1,222 @@
+"""Adversarial client-corruption plane — the Byzantine side of the
+quality/cost frontier.
+
+The paper's Alg. 1 assumes every client update is honest; production
+cross-device FL does not (Hard et al. 2005.10406, Cui et al.
+2102.04429): updates arrive corrupted, stale, or adversarial. This
+module models those adversaries *inside* the jitted round step, as a
+per-client transform of the post-compression deltas — i.e. it corrupts
+what the server *receives*, which is the threat model the robust
+aggregators (``repro.core.aggregation``) exist to survive:
+
+- ``sign_flip``  — corrupted clients report ``-scale * delta`` (the
+  classic Byzantine gradient-ascent attack);
+- ``gaussian``   — corrupted clients add ``scale * rms(delta)`` white
+  noise (a faulty sensor / garbage update);
+- ``zero``       — corrupted clients report an all-zero delta (a
+  dropped payload that still claims its examples: with the paper's
+  example-weighted mean, its ``n_k`` drags the aggregate toward 0);
+- ``stale``      — corrupted clients replay ``scale x`` their last
+  *honestly-computed* (post-compression) delta from a
+  ``ServerState``-threaded cache (``ServerState.stale``; see
+  ``init_server_state``) — the stale-worker failure mode of
+  asynchronous deployments. The cache always tracks the honest
+  stream (never the replayed one), so staleness stays bounded at one
+  round instead of collapsing to a replay-of-replay fixed point;
+- ``label_shuffle`` — a *data-plane* adversary: the client trains
+  honestly on features whose transcripts were permuted host-side (see
+  ``repro.data.synthetic.label_shuffle`` and the
+  ``FederatedSampler(label_shuffle_rate=...)`` knob). In-graph it is
+  the identity — the poison enters through the gradients.
+
+Corruption composes with the rest of the server plane exactly like the
+cohort stage: the *kind* is compile-time structure (it changes the
+graph), while ``rate`` and ``scale`` are traced ``HYPER_KEYS`` scalars
+(see ``fedavg.plan_hypers``), so an entire adversary grid — every rate
+x magnitude point — shares ONE compilation per (aggregator, kind).
+Which clients are corrupted is a per-round Bernoulli(rate) draw on a
+dedicated RNG stream tag.
+
+Two invariants the round engine relies on:
+
+- a corrupted client that is also a non-participant contributes
+  neither delta nor EF residual update: the corruption mask is
+  ``Bernoulli(rate) * pmask``, so cohort dropout always wins (the
+  cohort x corruption regression in tests/test_corruption.py);
+- corruption never changes wire accounting: a corrupted participant
+  still uploads a full payload (a zero or sign-flipped delta costs the
+  same bytes), so CFMQ stays byte-exact under attack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+# In-graph delta corruptions + the data-plane kind. "none"/"label_shuffle"
+# keep the identity plane in the graph (no corruption RNG is traced).
+DELTA_KINDS = ("sign_flip", "gaussian", "zero", "stale")
+KINDS = ("none",) + DELTA_KINDS + ("label_shuffle",)
+
+Corruption = Callable[..., PyTree]
+
+_CORRUPTIONS: Dict[str, Corruption] = {}
+
+
+def register_corruption(name: str):
+    def deco(fn: Corruption) -> Corruption:
+        _CORRUPTIONS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_corruption(name: str) -> Corruption:
+    try:
+        return _CORRUPTIONS[name]
+    except KeyError:
+        raise KeyError(f"unknown corruption {name!r}; "
+                       f"available: {sorted(_CORRUPTIONS)}") from None
+
+
+def available_corruptions() -> list[str]:
+    return sorted(_CORRUPTIONS)
+
+
+@dataclasses.dataclass(frozen=True)
+class CorruptionConfig:
+    """Static adversary spec. ``kind`` is compile-time structure (part
+    of the jit cache key); ``rate`` and ``scale`` are traced scalars so
+    a whole adversary grid shares one compilation per kind."""
+    kind: str = "none"      # see KINDS
+    rate: float = 0.0       # P(participating client is corrupted), per round
+    scale: float = 1.0      # magnitude knob (sign_flip/gaussian/stale)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown corruption kind {self.kind!r}; available: {KINDS}")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"corruption rate must be in [0, 1], got {self.rate}")
+
+    @property
+    def in_graph(self) -> bool:
+        """True iff the corruption transforms deltas inside the jitted
+        round step (label_shuffle poisons host-side, in the data plane)."""
+        return self.kind in DELTA_KINDS
+
+    @property
+    def active(self) -> bool:
+        return self.kind != "none" and self.rate > 0.0
+
+
+# ----------------------------------------------------------------------
+# Registry entries: fn(deltas, key, scale, stale) -> corrupted deltas
+# for the FULL (K, ...) batch; the wrapper below selects per client.
+# ----------------------------------------------------------------------
+
+@register_corruption("sign_flip")
+def sign_flip(deltas: PyTree, key, scale, stale) -> PyTree:
+    """Report -scale * delta (gradient ascent at scale >= 1)."""
+    return jax.tree.map(lambda d: -scale * d.astype(jnp.float32), deltas)
+
+
+@register_corruption("gaussian")
+def gaussian(deltas: PyTree, key, scale, stale) -> PyTree:
+    """Add white noise at ``scale x`` each leaf's per-client RMS, so
+    the attack magnitude tracks the honest update magnitude (a fixed
+    absolute sigma would be invisible early and fatal late)."""
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    keys = jax.random.split(key, len(leaves))
+
+    def leaf(d, k):
+        d32 = d.astype(jnp.float32)
+        axes = tuple(range(1, d32.ndim))
+        rms = jnp.sqrt(jnp.mean(jnp.square(d32), axis=axes, keepdims=True) + 1e-12)
+        return d32 + scale * rms * jax.random.normal(k, d32.shape, jnp.float32)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf(d, k) for d, k in zip(leaves, keys)])
+
+
+@register_corruption("zero")
+def zero(deltas: PyTree, key, scale, stale) -> PyTree:
+    """An all-zero update that still claims its n_k examples and still
+    pays its uplink bytes — the free-rider / dropped-payload client."""
+    return jax.tree.map(jnp.zeros_like, deltas)
+
+
+@register_corruption("stale")
+def stale_replay(deltas: PyTree, key, scale, stale) -> PyTree:
+    """Replay scale x the client's last honestly-computed delta from
+    the ServerState-threaded cache (zeros on round 0: a stale worker
+    that has not reported yet sends nothing useful). The cache update
+    (see ``make_corruption_fn``) stores the honest stream even for
+    corrupted clients, keeping staleness one round deep."""
+    if stale is None:
+        raise ValueError(
+            "stale corruption replays from the ServerState-threaded delta "
+            "cache (ServerState.stale), which init_server_state only "
+            "allocates when plan.corruption.kind == 'stale'")
+    return jax.tree.map(lambda s: scale * s, stale)
+
+
+# ----------------------------------------------------------------------
+# The composed stage: (key, deltas, pmask, stale) ->
+#                     (deltas', cmask, stale')
+# ----------------------------------------------------------------------
+
+def identity_corruption(key, deltas: PyTree, pmask, stale: Optional[PyTree]):
+    """The honest plane ("none" / data-plane label_shuffle): no
+    corruption RNG enters the graph, the cache passes through."""
+    K = jax.tree.leaves(deltas)[0].shape[0]
+    return deltas, jnp.zeros((K,), jnp.float32), stale
+
+
+def _bcast(mask, leaf):
+    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+def make_corruption_fn(kind: str, rate, scale):
+    """Returns corrupt(key, deltas, pmask, stale) -> (deltas', cmask,
+    stale'). ``kind`` is static; ``rate``/``scale`` may be Python
+    floats (plan path) or traced scalars (hyper path) — the graph is
+    identical either way, so rate=0.0 rides the same compilation as
+    any other rate of the same kind.
+
+    ``cmask`` is the realized corrupted-client mask, already multiplied
+    by ``pmask``: a non-participant can never be a corrupted
+    *contributor* (its delta stays the cohort's zero and its EF
+    residual stays untouched). ``stale'`` caches this round's *honest*
+    post-compression deltas for participants — corrupted ones included,
+    so a replay is always of last round's honest upload, never a
+    replay-of-replay — while non-participants keep their cache entry.
+    """
+    if kind in ("none", "label_shuffle"):
+        return identity_corruption
+    fn = get_corruption(kind)
+
+    def corrupt(key, deltas: PyTree, pmask, stale: Optional[PyTree]):
+        K = jax.tree.leaves(deltas)[0].shape[0]
+        mkey, nkey = jax.random.split(key)
+        drawn = (jax.random.uniform(mkey, (K,)) < rate).astype(jnp.float32)
+        cmask = drawn * pmask
+        bad = fn(deltas, nkey, scale, stale)
+        out = jax.tree.map(
+            lambda b, d: jnp.where(_bcast(cmask, d) > 0,
+                                   b.astype(jnp.float32),
+                                   d.astype(jnp.float32)),
+            bad, deltas)
+        new_stale = stale
+        if stale is not None:
+            new_stale = jax.tree.map(
+                lambda d, s: jnp.where(_bcast(pmask, d) > 0,
+                                       d.astype(jnp.float32), s),
+                deltas, stale)
+        return out, cmask, new_stale
+
+    return corrupt

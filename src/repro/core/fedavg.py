@@ -23,13 +23,13 @@ adaptive federated optimization (Reddi et al.).
 
 The round step is a composed server-side pipeline (one jitted graph):
 
-    client deltas -> cohort mask -> uplink compression -> aggregator
-                  -> server optimizer
+    client deltas -> cohort mask -> uplink compression -> corruption
+                  -> aggregator -> server optimizer
 
 Each stage is pluggable (see ``repro.core.cohort`` / ``compression`` /
-``aggregation``); the defaults — full participation, no compression,
-example-weighted mean — reproduce the paper's Alg. 1 exactly and are
-the parity baseline for tests. The round metrics report the *exact*
+``aggregation`` / ``corruption``); the defaults — full participation,
+no compression, no adversary, example-weighted mean — reproduce the
+paper's Alg. 1 exactly and are the parity baseline for tests. The round metrics report the *exact*
 wire bytes of the configured compression so CFMQ can account measured
 (not approximated) communication cost.
 
@@ -41,10 +41,16 @@ compensated over rounds instead of lost. Wire bytes are unchanged.
 With ``compression.packed`` the uplink payloads are materialized
 (int8 / int4-nibble / top-k (value, index) buffers via
 ``repro.kernels.wire_pack``) and round-tripped bit-exactly.
+
+The corruption stage (``repro.core.corruption``) models Byzantine /
+faulty clients on what the server *receives* (the post-compression
+deltas): its rate and magnitude are traced ``HYPER_KEYS`` scalars, so
+an adversary grid shares one compilation per (aggregator, kind), and a
+corrupted client still pays its full uplink bytes — the wire metrics
+count participants, not honesty.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -59,6 +65,7 @@ from repro.core.compression import (
     make_compressor,
     tree_param_bytes,
 )
+from repro.core.corruption import identity_corruption, make_corruption_fn
 from repro.core.plan import FederatedPlan, make_server_optimizer
 from repro.optim import Optimizer, apply_updates, sgd
 
@@ -75,28 +82,39 @@ class ServerState(NamedTuple):
     # error as next round's residual, so top-k/int4 error is
     # compensated across rounds instead of lost.
     ef: Optional[PyTree] = None
+    # Stale-replay cache (plan.corruption.kind == "stale", else None):
+    # each participant's last honestly-computed (post-compression)
+    # delta, leading K axis — what a stale adversary re-sends next
+    # round (honest even for corrupted clients: staleness stays one
+    # round deep, never a replay-of-replay).
+    stale: Optional[PyTree] = None
 
 
 class ServerPlane(NamedTuple):
     """The composed server side of one round: cohort -> compression ->
-    aggregation. Built once per (static) configuration; every traced
-    knob rides in via the closures (plan constants or hyper inputs)."""
+    corruption -> aggregation. Built once per (static) configuration;
+    every traced knob rides in via the closures (plan constants or
+    hyper inputs)."""
     cohort: Callable          # (key, weight) -> (weight', pmask)
     compress: Callable        # (delta_tree, key) -> delta_tree
     compression: CompressionConfig   # static: wire-byte accounting
     aggregate: Callable       # (deltas, n_k, pmask, key) -> wbar
+    corrupt: Callable = identity_corruption
+    # (key, deltas, pmask, stale) -> (deltas', cmask, stale')
 
 
 # Distinct fold_in tags keep the plane's RNG streams away from the FVN
 # stream (which folds small client/step indices).
-_COHORT_TAG, _COMPRESS_TAG, _AGG_TAG = 0x636F68, 0x636D70, 0x616767
+_COHORT_TAG, _COMPRESS_TAG, _AGG_TAG, _CORRUPT_TAG = (
+    0x636F68, 0x636D70, 0x616767, 0x626164)
 
 
 def _plane_keys(base_key, round_idx):
     rk = jax.random.fold_in(base_key, round_idx)
     return (jax.random.fold_in(rk, _COHORT_TAG),
             jax.random.fold_in(rk, _COMPRESS_TAG),
-            jax.random.fold_in(rk, _AGG_TAG))
+            jax.random.fold_in(rk, _AGG_TAG),
+            jax.random.fold_in(rk, _CORRUPT_TAG))
 
 
 def make_server_plane(
@@ -104,21 +122,27 @@ def make_server_plane(
     compression: Optional[CompressionConfig] = None,
     cohort_knobs: Optional[tuple] = None,   # (participation, frac, keep) or None
     agg_hypers: Optional[dict] = None,
+    corruption_kind: str = "none",
+    corruption_knobs: Optional[tuple] = None,   # (rate, scale) or None
 ) -> ServerPlane:
     """Compose a server plane. ``cohort_knobs=None`` means the paper's
     full-participation assumption (no cohort RNG enters the graph);
-    knob values may be Python floats or traced scalars."""
+    knob values may be Python floats or traced scalars. Likewise
+    ``corruption_kind="none"`` (and the data-plane "label_shuffle")
+    keeps the identity corruption stage with no adversary RNG."""
     compression = compression or CompressionConfig()
     cohort = (identity_cohort if cohort_knobs is None
               else make_cohort_fn(*cohort_knobs))
     agg_fn = get_aggregator(aggregator)
     hyp = dict(AGG_HYPER_DEFAULTS, **(agg_hypers or {}))
+    rate, scale = corruption_knobs if corruption_knobs is not None else (0.0, 1.0)
     return ServerPlane(
         cohort=cohort,
         compress=make_compressor(compression),
         compression=compression,
         aggregate=lambda deltas, n_k, pmask, key: agg_fn(
             deltas, n_k, pmask, hyp, key),
+        corrupt=make_corruption_fn(corruption_kind, rate, scale),
     )
 
 
@@ -130,7 +154,9 @@ def plan_server_plane(plan: FederatedPlan) -> ServerPlane:
     return make_server_plane(
         plan.aggregator, plan.compression, knobs,
         {"trim_frac": plan.agg_trim_frac, "dp_clip": plan.dp_clip,
-         "dp_sigma": plan.dp_sigma})
+         "dp_sigma": plan.dp_sigma},
+        corruption_kind=plan.corruption.kind,
+        corruption_knobs=(plan.corruption.rate, plan.corruption.scale))
 
 
 _PARITY_PLANE = make_server_plane()
@@ -180,15 +206,20 @@ def _wire_metrics(plane: ServerPlane, params: PyTree, pmask, K: int) -> dict:
     }
 
 
+def _client_axis_zeros(params: PyTree, K: int) -> PyTree:
+    return jax.tree.map(
+        lambda p: jnp.zeros((K,) + jnp.shape(p), jnp.float32), params)
+
+
 def init_server_state(plan: FederatedPlan, params: PyTree) -> ServerState:
     opt = make_server_optimizer(plan)
-    ef = None
-    if plan.compression.error_feedback:
-        K = plan.clients_per_round
-        ef = jax.tree.map(
-            lambda p: jnp.zeros((K,) + jnp.shape(p), jnp.float32), params)
+    K = plan.clients_per_round
+    ef = (_client_axis_zeros(params, K)
+          if plan.compression.error_feedback else None)
+    stale = (_client_axis_zeros(params, K)
+             if plan.corruption.kind == "stale" else None)
     return ServerState(params=params, opt_state=opt.init(params),
-                       round_idx=jnp.zeros((), jnp.int32), ef=ef)
+                       round_idx=jnp.zeros((), jnp.int32), ef=ef, stale=stale)
 
 
 def _client_update(
@@ -241,10 +272,10 @@ def _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn, base_key,
                        state: ServerState, round_batch: PyTree,
                        plane: Optional[ServerPlane] = None):
     """One FedAvg round: client deltas -> cohort -> compression ->
-    aggregator -> server optimizer (all one jitted graph)."""
+    corruption -> aggregator -> server optimizer (one jitted graph)."""
     plane = plane or _PARITY_PLANE
     K = jax.tree.leaves(round_batch)[0].shape[0]
-    ckey, qkey, akey = _plane_keys(base_key, state.round_idx)
+    ckey, qkey, akey, xkey = _plane_keys(base_key, state.round_idx)
 
     round_batch, pmask = _apply_cohort(plane, ckey, round_batch)
 
@@ -273,6 +304,13 @@ def _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn, base_key,
         deltas = jax.vmap(plane.compress)(
             deltas, jax.vmap(lambda i: jax.random.fold_in(qkey, i))(jnp.arange(K)))
 
+    # Adversary stage: corrupts what the server receives (the
+    # post-compression deltas). cmask is already pmask-masked — a
+    # corrupted non-participant contributes neither delta nor EF
+    # residual update; wire bytes are untouched (corrupted participants
+    # pay full uplink).
+    deltas, cmask, stale = plane.corrupt(xkey, deltas, pmask, state.stale)
+
     wbar = plane.aggregate(deltas, n_k, pmask, akey)
 
     updates, opt_state = server_opt.update(wbar, state.opt_state, state.params)
@@ -283,9 +321,11 @@ def _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn, base_key,
         "examples": n_k.sum(),
         "delta_norm": jnp.sqrt(sum(jnp.sum(jnp.square(x))
                                    for x in jax.tree.leaves(wbar))),
+        "corrupted": cmask.sum(),
         **_wire_metrics(plane, state.params, pmask, K),
     }
-    return ServerState(params, opt_state, state.round_idx + 1, ef), metrics
+    return ServerState(params, opt_state, state.round_idx + 1, ef,
+                       stale), metrics
 
 
 def make_fedavg_round(
@@ -325,6 +365,7 @@ def make_fedsgd_round(
     """
     _check_fedsgd_aggregator(plan.aggregator)
     _check_fedsgd_compression(plan.compression)
+    _check_fedsgd_corruption(plan.corruption.kind)
     server_opt = make_server_optimizer(plan)
     sigma_fn = (lambda r: fvn_lib.fvn_sigma(plan.fvn, r)) if plan.fvn.enabled else None
     plane = plan_server_plane(plan)
@@ -352,12 +393,23 @@ def _check_fedsgd_compression(compression: Optional[CompressionConfig]) -> None:
             "per-client deltas never exist; use the fedavg engine")
 
 
+def _check_fedsgd_corruption(kind: str) -> None:
+    from repro.core.corruption import DELTA_KINDS
+
+    if kind in DELTA_KINDS:
+        raise ValueError(
+            "delta corruptions transform per-client deltas, but fedsgd "
+            "collapses clients into one weighted forward/backward — use "
+            f"the fedavg engine for corruption kind {kind!r} (the "
+            "data-plane 'label_shuffle' adversary works on either engine)")
+
+
 def _fedsgd_round_body(loss_fn, server_opt, sigma_fn, client_lr, base_key,
                        state: ServerState, round_batch: PyTree,
                        plane: Optional[ServerPlane] = None):
     plane = plane or _PARITY_PLANE
     K, S = jax.tree.leaves(round_batch)[0].shape[:2]
-    ckey, qkey, _ = _plane_keys(base_key, state.round_idx)
+    ckey, qkey, _, _ = _plane_keys(base_key, state.round_idx)
     round_batch, pmask = _apply_cohort(plane, ckey, round_batch)
     flat = jax.tree.map(
         lambda x: x.reshape((K * S * x.shape[2],) + x.shape[3:]), round_batch)
@@ -383,9 +435,13 @@ def _fedsgd_round_body(loss_fn, server_opt, sigma_fn, client_lr, base_key,
         "examples": n,
         "delta_norm": jnp.sqrt(sum(jnp.sum(jnp.square(x))
                                    for x in jax.tree.leaves(wbar))),
+        # delta corruptions are fedavg-only (no per-client deltas here);
+        # the data-plane label_shuffle adversary reports host-side
+        "corrupted": jnp.float32(0.0),
         **_wire_metrics(plane, state.params, pmask, K),
     }
-    return ServerState(params, opt_state, state.round_idx + 1, state.ef), metrics
+    return ServerState(params, opt_state, state.round_idx + 1, state.ef,
+                       state.stale), metrics
 
 
 def make_round_step(loss_fn, plan: FederatedPlan, base_key):
@@ -406,7 +462,10 @@ HYPER_KEYS = ("client_lr", "server_lr", "warmup_rounds", "decay_rounds",
               "decay_rate", "fvn_std", "fvn_ramp",
               # server-plane knobs (cohort + aggregator), all traced
               "participation", "straggler_frac", "straggler_keep",
-              "trim_frac", "dp_clip", "dp_sigma")
+              "trim_frac", "dp_clip", "dp_sigma",
+              # adversary knobs: rate/magnitude traced, kind static —
+              # one compilation per (aggregator, kind) across a grid
+              "corrupt_rate", "corrupt_scale")
 
 
 def plan_hypers(plan: FederatedPlan) -> dict:
@@ -425,6 +484,8 @@ def plan_hypers(plan: FederatedPlan) -> dict:
         "trim_frac": jnp.float32(plan.agg_trim_frac),
         "dp_clip": jnp.float32(plan.dp_clip),
         "dp_sigma": jnp.float32(plan.dp_sigma),
+        "corrupt_rate": jnp.float32(plan.corruption.rate),
+        "corrupt_scale": jnp.float32(plan.corruption.scale),
     }
 
 
@@ -457,15 +518,17 @@ def _hyper_fvn_sigma(hypers, round_idx):
 def make_hyper_round_step(loss_fn, engine: str = "fedavg",
                           server_optimizer: str = "adam",
                           aggregator: str = "weighted_mean",
-                          compression: Optional[CompressionConfig] = None):
+                          compression: Optional[CompressionConfig] = None,
+                          corruption: str = "none"):
     """Returns round_step(state, round_batch, hypers, base_key).
 
-    Only ``engine``, ``server_optimizer``, ``aggregator`` and
-    ``compression`` are compile-time structure (they change the graph /
-    the wire layout); everything in ``hypers`` (see HYPER_KEYS /
-    plan_hypers) is traced. The FVN perturbation and the cohort draw
-    always stay in the graph with traced knobs (sigma 0.0 /
-    participation 1.0 == off, bit-identical to the plain path), so
+    Only ``engine``, ``server_optimizer``, ``aggregator``,
+    ``compression`` and the ``corruption`` *kind* are compile-time
+    structure (they change the graph / the wire layout); everything in
+    ``hypers`` (see HYPER_KEYS / plan_hypers) is traced. The FVN
+    perturbation, the cohort draw and the corruption draw always stay
+    in the graph with traced knobs (sigma 0.0 / participation 1.0 /
+    corrupt_rate 0.0 == off, bit-identical to the plain path), so
     on/off points share the compilation too. Because the cohort draw is
     unconditional, round batches must carry the data plane's "weight"
     leaf — the legacy weight-less layout is plan-path only.
@@ -478,6 +541,7 @@ def make_hyper_round_step(loss_fn, engine: str = "fedavg",
     if engine == "fedsgd":
         _check_fedsgd_aggregator(aggregator)
         _check_fedsgd_compression(compression)
+        _check_fedsgd_corruption(corruption)
 
     def round_step(state: ServerState, round_batch: PyTree, hypers: dict, base_key):
         server_opt = make_server(lambda count: _hyper_server_lr(hypers, count))
@@ -487,7 +551,9 @@ def make_hyper_round_step(loss_fn, engine: str = "fedavg",
             (hypers["participation"], hypers["straggler_frac"],
              hypers["straggler_keep"]),
             {"trim_frac": hypers["trim_frac"], "dp_clip": hypers["dp_clip"],
-             "dp_sigma": hypers["dp_sigma"]})
+             "dp_sigma": hypers["dp_sigma"]},
+            corruption_kind=corruption,
+            corruption_knobs=(hypers["corrupt_rate"], hypers["corrupt_scale"]))
         if engine == "fedsgd":
             return _fedsgd_round_body(loss_fn, server_opt, sigma_fn,
                                       hypers["client_lr"], base_key,
@@ -500,14 +566,15 @@ def make_hyper_round_step(loss_fn, engine: str = "fedavg",
 
 
 def server_state_specs(plan: FederatedPlan, param_specs, moment_specs=None,
-                       ef_specs=None):
+                       ef_specs=None, stale_specs=None):
     """PartitionSpec tree matching init_server_state's output.
 
     ``moment_specs`` lets the launcher FSDP-shard optimizer moments
     independently of the live params (they only touch aggregation).
     ``ef_specs`` shards the per-client EF residuals; the default keeps
     each residual with its client's replica (leading K axis unsharded,
-    trailing axes like the params)."""
+    trailing axes like the params). ``stale_specs`` does the same for
+    the stale-replay delta cache."""
     from jax.sharding import PartitionSpec as P
 
     from repro.optim.optimizers import AdamState, MomentumState, ScaleState
@@ -520,10 +587,16 @@ def server_state_specs(plan: FederatedPlan, param_specs, moment_specs=None,
         os_ = MomentumState(count=P(), trace=moment_specs)
     else:  # adam | yogi
         os_ = AdamState(count=P(), mu=moment_specs, nu=moment_specs)
-    ef = None
-    if plan.compression.error_feedback:
-        ef = (ef_specs if ef_specs is not None else
-              jax.tree.map(lambda s: P(*((None,) + tuple(s))), param_specs,
-                           is_leaf=lambda x: isinstance(x, P)))
+
+    def client_axis_specs(override):
+        if override is not None:
+            return override
+        return jax.tree.map(lambda s: P(*((None,) + tuple(s))), param_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    ef = (client_axis_specs(ef_specs)
+          if plan.compression.error_feedback else None)
+    stale = (client_axis_specs(stale_specs)
+             if plan.corruption.kind == "stale" else None)
     return ServerState(params=param_specs, opt_state=os_,
-                       round_idx=P(), ef=ef)
+                       round_idx=P(), ef=ef, stale=stale)

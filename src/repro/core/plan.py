@@ -11,6 +11,7 @@ import dataclasses
 from typing import Optional
 
 from repro.core.compression import CompressionConfig
+from repro.core.corruption import CorruptionConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +60,10 @@ class FederatedPlan:
     compression: CompressionConfig = dataclasses.field(
         default_factory=CompressionConfig)
     aggregator: str = "weighted_mean"   # see repro.core.aggregation registry
+    # Adversarial client corruption (see repro.core.corruption): kind is
+    # compile-time structure, rate/scale are traced hyper scalars.
+    corruption: CorruptionConfig = dataclasses.field(
+        default_factory=CorruptionConfig)
     agg_trim_frac: float = 0.1          # trimmed_mean: fraction trimmed per side
     dp_clip: float = 1.0                # clipped_mean: per-client L2 clip norm
     dp_sigma: float = 0.0               # clipped_mean: DP noise multiplier

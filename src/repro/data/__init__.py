@@ -7,7 +7,7 @@ from repro.data.pipeline import (
 )
 from repro.data.prefetch import PrefetchIterator, round_batches
 from repro.data.strategies import available_strategies, get_strategy, register_strategy
-from repro.data.synthetic import synthetic_lm_clients, synthetic_lm_batch
+from repro.data.synthetic import label_shuffle, synthetic_lm_clients, synthetic_lm_batch
 
 __all__ = [
     "SpeakerCorpus",
@@ -23,4 +23,5 @@ __all__ = [
     "register_strategy",
     "synthetic_lm_clients",
     "synthetic_lm_batch",
+    "label_shuffle",
 ]

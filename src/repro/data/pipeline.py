@@ -26,6 +26,7 @@ from typing import Optional
 import numpy as np
 
 from repro.data.strategies import get_strategy
+from repro.data.synthetic import label_shuffle
 
 
 @dataclasses.dataclass
@@ -79,6 +80,7 @@ class FederatedSampler:
         steps: Optional[int] = None,
         strategy: str = "uniform",
         legacy: bool = False,
+        label_shuffle_rate: float = 0.0,
     ):
         self.corpus = corpus
         self.K = clients_per_round
@@ -88,6 +90,14 @@ class FederatedSampler:
         self.rng = np.random.default_rng(seed)
         self.legacy = legacy
         self._select = get_strategy(strategy)
+        # Data-plane adversary (repro.core.corruption "label_shuffle"):
+        # each round, Bernoulli(rate)-selected clients get their round
+        # labels permuted among their real examples. A dedicated RNG
+        # keeps the selection/packing stream byte-identical to an
+        # uncorrupted run at rate 0.
+        self.label_shuffle_rate = float(label_shuffle_rate)
+        self._corrupt_rng = np.random.default_rng((seed + 1) * 0xC0FFEE)
+        self.corrupted_counts: list = []
         # Per-client cursors so data-limited rounds still traverse all data.
         self._cursors = np.zeros(corpus.num_speakers, np.int64)
         self._counts = np.array([s["n"] for s in corpus.speakers], np.int64)
@@ -163,7 +173,30 @@ class FederatedSampler:
             n_k[j] = m
         return ex, n_k
 
+    def _shuffle_labels(self, rb: RoundBatch) -> RoundBatch:
+        """Apply the label_shuffle adversary to Bernoulli-selected
+        clients, in place on the freshly-packed (copied) arrays; the
+        realized corrupted-client count is appended per round so
+        drivers can report it next to the in-graph corruption metric."""
+        K = rb.labels.shape[0]
+        hit = self._corrupt_rng.random(K) < self.label_shuffle_rate
+        # (K, S, b, ...) -> flat (K, S*b, ...) views onto the same memory
+        labels = rb.labels.reshape(K, -1, rb.labels.shape[-1])
+        label_len = rb.label_len.reshape(K, -1)
+        mask = rb.mask.reshape(K, -1)
+        for k in np.flatnonzero(hit):
+            label_shuffle(labels[k], label_len[k], mask[k] > 0,
+                          self._corrupt_rng)
+        self.corrupted_counts.append(int(hit.sum()))
+        return rb
+
     def next_round(self) -> RoundBatch:
+        rb = self._next_round()
+        if self.label_shuffle_rate > 0.0:
+            rb = self._shuffle_labels(rb)
+        return rb
+
+    def _next_round(self) -> RoundBatch:
         K, b, S = self.K, self.b, self.steps
         chosen = np.asarray(self._select(self.rng, self.corpus, K), np.int64)
         if self.legacy:

@@ -44,3 +44,25 @@ def synthetic_lm_clients(
 def synthetic_lm_batch(batch: int, seq_len: int, vocab_size: int, seed: int = 0):
     rng = np.random.default_rng(seed)
     return rng.integers(0, vocab_size, size=(batch, seq_len)).astype(np.int32)
+
+
+def label_shuffle(labels, label_len, valid, rng) -> int:
+    """Data-plane adversary: permute one client's (labels, label_len)
+    rows among its valid example slots, IN PLACE, so features no longer
+    match their transcripts — the client then trains honestly on
+    poisoned pairs (the gradient, not the wire, carries the damage).
+
+    ``labels`` is (E, U), ``label_len`` (E,), ``valid`` an (E,) bool
+    mask of real (non-padding) slots: only valid rows move, so padded
+    zero-length transcripts never land on real features (which would
+    change the loss masking, not just the supervision). Returns the
+    number of shuffled examples (0 when fewer than two are valid —
+    nothing to permute).
+    """
+    pos = np.flatnonzero(valid)
+    if pos.size < 2:
+        return 0
+    perm = rng.permutation(pos.size)
+    labels[pos] = labels[pos[perm]]
+    label_len[pos] = label_len[pos[perm]]
+    return int(pos.size)

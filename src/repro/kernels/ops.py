@@ -12,7 +12,6 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
 from repro.kernels.decode_attention import flash_decode
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.lstm_gates import lstm_gates_fused

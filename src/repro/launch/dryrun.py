@@ -24,9 +24,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_arch
 from repro.configs.base import SHAPES, default_plan

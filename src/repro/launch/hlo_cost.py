@@ -21,10 +21,8 @@ per-chip — divide by per-chip peaks for roofline terms.
 from __future__ import annotations
 
 import dataclasses
-import json
 import math
 import re
-from collections import defaultdict
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,

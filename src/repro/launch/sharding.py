@@ -15,7 +15,6 @@ import re
 from typing import Any, Sequence
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -26,12 +26,19 @@ Grids:
   bytes (top-k 5%/1%, int4, + the materialized packed-wire path) —
   the quality EF recovers at aggressive sparsity;
 - ``sampling``: the client-sampling strategy registry (uniform /
-  weighted-by-examples / stratified) x data limit.
+  weighted-by-examples / stratified) x data limit;
+- ``robustness``: aggregator x adversary x corruption-rate (see
+  ``repro.core.corruption``) — where weighted_mean collapses under
+  sign-flip/stale attacks and the robust rules hold, at *identical*
+  wire cost (corrupted clients still pay uplink bytes). Rates and
+  magnitudes are traced, so one compilation serves each
+  (aggregator, adversary-kind) cell across every rate in the grid.
 
 CLI::
 
     PYTHONPATH=src python -m repro.launch.sweeps --grid noniid_fvn --smoke
     PYTHONPATH=src python -m repro.launch.sweeps --grid compression --smoke
+    PYTHONPATH=src python -m repro.launch.sweeps --grid robustness --smoke --check
     PYTHONPATH=src python -m repro.launch.sweeps --grid ladder --rounds 100
 
 emits one frontier JSON (WER + final loss vs ``cfmq_tb`` per point,
@@ -54,6 +61,7 @@ import numpy as np
 from repro.core import (
     CohortConfig,
     CompressionConfig,
+    CorruptionConfig,
     FederatedPlan,
     FVNConfig,
     accumulate_wire_bytes,
@@ -123,16 +131,20 @@ class SweepRunner:
         return self._bundles[specaug_scale]
 
     def _round_fn(self, plan: FederatedPlan, specaug_scale: float):
-        # aggregator + compression are compile-time structure; every
-        # cohort/trim/DP knob is traced, so e.g. a participation grid
-        # still shares one entry here
+        # aggregator + compression + corruption *kind* are compile-time
+        # structure; every cohort/trim/DP/corruption-rate knob is
+        # traced, so e.g. a participation or adversary-rate grid still
+        # shares one entry here. The data-plane label_shuffle adversary
+        # maps to the identity in-graph plane ("none"), so it shares
+        # the honest compilation too.
+        ckind = (plan.corruption.kind if plan.corruption.in_graph else "none")
         key = (plan.engine, plan.server_optimizer, float(specaug_scale),
-               plan.aggregator, plan.compression)
+               plan.aggregator, plan.compression, ckind)
         if key not in self._jit_cache:
             _, bundle = self._bundle(specaug_scale)
             self._jit_cache[key] = jax.jit(make_hyper_round_step(
                 bundle.loss_fn, plan.engine, plan.server_optimizer,
-                plan.aggregator, plan.compression))
+                plan.aggregator, plan.compression, corruption=ckind))
         return self._jit_cache[key]
 
     def native_steps(self, plan: FederatedPlan) -> int:
@@ -153,6 +165,11 @@ class SweepRunner:
     def run_point(self, point: SweepPoint, steps: Optional[int] = None,
                   log=print) -> dict:
         plan = point.plan
+        if point.iid and plan.corruption.kind == "label_shuffle":
+            raise ValueError(
+                f"{point.id}: label_shuffle corrupts inside the "
+                "FederatedSampler, which IID points bypass — the adversary "
+                "would silently never fire")
         cfg, bundle = self._bundle(point.specaug_scale)
         params = bundle.init(jax.random.PRNGKey(point.seed))
         n_params = bundle.param_count(params)
@@ -167,7 +184,10 @@ class SweepRunner:
             self.corpus, clients_per_round=plan.clients_per_round,
             local_batch_size=plan.local_batch_size, data_limit=plan.data_limit,
             local_epochs=plan.local_epochs, seed=point.seed, steps=S,
-            strategy=plan.client_sampling)
+            strategy=plan.client_sampling,
+            label_shuffle_rate=(plan.corruption.rate
+                                if plan.corruption.kind == "label_shuffle"
+                                else 0.0))
         rng = np.random.default_rng(point.seed)
 
         def host_batches():
@@ -188,6 +208,7 @@ class SweepRunner:
         t0 = time.time()
         losses = []
         participants = []
+        corrupted = []
         batches = (PrefetchIterator(host_batches(), depth=2) if self.prefetch
                    else map(lambda b: jax.tree.map(jax.numpy.asarray, b),
                             host_batches()))
@@ -196,9 +217,14 @@ class SweepRunner:
                 state, metrics = round_fn(state, batch, hypers, base_key)
                 losses.append(float(metrics["loss"]))
                 participants.append(float(metrics["participants"]))
+                corrupted.append(float(metrics["corrupted"]))
         finally:
             if self.prefetch:
                 batches.close()
+        if plan.corruption.kind == "label_shuffle":
+            # the data-plane adversary corrupts host-side; the realized
+            # counts live on the sampler, not in the round metrics
+            corrupted = [float(c) for c in sampler.corrupted_counts]
 
         from repro.launch.train import evaluate_wer
 
@@ -230,6 +256,8 @@ class SweepRunner:
             "wire_bytes_total": wire_total,
             "downlink_bytes_round": down_per_round,
             "participants_mean": float(np.mean(participants)),
+            "corrupted_mean": float(np.mean(corrupted)) if corrupted else 0.0,
+            "corrupted_total": int(round(sum(corrupted))),
             "n_params": n_params,
             "wall_s": time.time() - t0,
             "loss_curve": losses[:: max(1, point.rounds // 50)],
@@ -398,6 +426,51 @@ def sampling_points(rounds: int = 40, smoke: bool = False, seed: int = 0,
     return points
 
 
+def robustness_points(rounds: int = 40, smoke: bool = False,
+                      seed: int = 0) -> list[SweepPoint]:
+    """Aggregator x adversary x corruption-rate grid — the Byzantine
+    axis of the quality/cost frontier.
+
+    Each aggregator gets one clean baseline (kind "none") plus every
+    adversary at each nonzero rate. Kind is compile-time structure but
+    rate/scale are traced, so the whole grid compiles once per
+    (aggregator, kind) cell — label_shuffle (a host-side data-plane
+    adversary) shares the honest compilation. Wire bytes are identical
+    down every column: corrupted clients still pay full uplink, so the
+    grid isolates pure quality damage at fixed CFMQ cost.
+
+    trim_frac 0.3 so trimmed_mean drops floor(0.3 * 8) = 2 clients per
+    side — enough to shed the ~2.4 corrupted clients a 0.3 rate draws
+    at K=8 (the plan default 0.1 would trim nobody).
+    """
+    base = dict(clients_per_round=8, local_batch_size=4, data_limit=4,
+                local_steps=12, client_lr=0.3, server_lr=0.05,
+                server_warmup_rounds=4)
+    aggregators = ["weighted_mean", "trimmed_mean", "coordinate_median"]
+    adversaries = [("sign_flip", 3.0), ("gaussian", 5.0), ("zero", 1.0),
+                   ("stale", 1.0), ("label_shuffle", 1.0)]
+    rates = (0.1, 0.3)
+    if smoke:
+        rounds = min(rounds, 8)
+        aggregators = ["weighted_mean", "trimmed_mean"]
+        adversaries = [("sign_flip", 3.0), ("label_shuffle", 1.0)]
+        rates = (0.3,)
+    points = []
+    for agg in aggregators:
+        for kind, scale, rate in ([("none", 1.0, 0.0)] +
+                                  [(k, s, r) for k, s in adversaries
+                                   for r in rates]):
+            plan = FederatedPlan(
+                **base, aggregator=agg, agg_trim_frac=0.3,
+                corruption=CorruptionConfig(kind=kind, rate=rate, scale=scale))
+            points.append(SweepPoint(
+                id=f"{agg}_{kind}_r{int(round(rate * 100))}",
+                plan=plan, rounds=rounds, seed=seed,
+                meta={"aggregator": agg, "adversary": kind,
+                      "corrupt_rate": rate, "corrupt_scale": scale}))
+    return points
+
+
 # Container-scale ladder constants (shared with benchmarks/common.py).
 LADDER_BASE = dict(clients_per_round=8, local_batch_size=4, client_lr=0.3,
                    server_lr=0.05, local_steps=12)
@@ -476,6 +549,40 @@ GRIDS: Dict[str, Callable[..., list]] = {
     "compression": compression_points,
     "ef_compression": ef_compression_points,
     "sampling": sampling_points,
+    "robustness": robustness_points,
+}
+
+
+def check_robustness(frontier: dict, log=print) -> None:
+    """The robustness grid's qualitative claim, asserted (the CI smoke
+    gate): under sign_flip at rate 0.3 the robust trimmed_mean must
+    end at a lower loss than the paper's weighted_mean, and every row
+    must carry its realized corrupted-client count and exact wire
+    bytes."""
+    rows = {r["id"]: r for r in frontier["points"]}
+    wm = rows["weighted_mean_sign_flip_r30"]
+    tm = rows["trimmed_mean_sign_flip_r30"]
+    log(f"[check] sign_flip@0.3: trimmed_mean loss={tm['final_loss']:.3f} "
+        f"vs weighted_mean loss={wm['final_loss']:.3f}")
+    assert tm["final_loss"] < wm["final_loss"], (
+        "robustness claim failed: trimmed_mean should beat weighted_mean "
+        f"under sign_flip at rate 0.3 ({tm['final_loss']:.3f} vs "
+        f"{wm['final_loss']:.3f})")
+    for r in frontier["points"]:
+        assert "corrupted_mean" in r and "wire_bytes_total" in r, r["id"]
+        if r["corrupt_rate"] >= 0.3:
+            assert r["corrupted_mean"] > 0, (
+                f"{r['id']}: adversary at rate {r['corrupt_rate']} never "
+                "corrupted anyone")
+    # identical wire cost down every column: the adversary moves
+    # quality, never bytes
+    totals = {r["wire_bytes_total"] for r in frontier["points"]}
+    assert len(totals) == 1, f"wire bytes must not vary with the adversary: {totals}"
+    log("[check] robustness grid invariants hold")
+
+
+GRID_CHECKS: Dict[str, Callable[..., None]] = {
+    "robustness": check_robustness,
 }
 
 
@@ -495,7 +602,8 @@ def mark_pareto(rows: list[dict], cost="cfmq_tb", quality="wer") -> list[dict]:
 
 def run_grid(grid: str, rounds: Optional[int] = None, smoke: bool = False,
              seed: int = 0, out: Optional[str] = None, runner: Optional[SweepRunner] = None,
-             pad_steps: Optional[bool] = None, log=print, **grid_kwargs) -> dict:
+             pad_steps: Optional[bool] = None, check: bool = False,
+             log=print, **grid_kwargs) -> dict:
     """Run a named grid and write one quality/cost frontier JSON.
 
     ``pad_steps`` defaults to the smoke flag: with tiny round budgets
@@ -527,6 +635,12 @@ def run_grid(grid: str, rounds: Optional[int] = None, smoke: bool = False,
         json.dump(frontier, f, indent=1)
     log(f"[sweeps] frontier ({sum(r['pareto'] for r in rows)} pareto points) "
         f"-> {out} [{frontier['wall_s']:.0f}s]")
+    if check:
+        checker = GRID_CHECKS.get(grid)
+        if checker is None:
+            log(f"[sweeps] no --check defined for grid {grid!r}; skipping")
+        else:
+            checker(frontier, log=log)
     return frontier
 
 
@@ -542,9 +656,13 @@ def main():
                     default=None, help="pad all points to one batch shape "
                     "(one compiled round fn for the whole grid)")
     ap.add_argument("--no-pad-steps", dest="pad_steps", action="store_false")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the grid's qualitative claim after the "
+                         "run (e.g. robustness: trimmed_mean beats "
+                         "weighted_mean under sign_flip@0.3)")
     args = ap.parse_args()
     run_grid(args.grid, rounds=args.rounds, smoke=args.smoke, seed=args.seed,
-             out=args.out, pad_steps=args.pad_steps)
+             out=args.out, pad_steps=args.pad_steps, check=args.check)
 
 
 if __name__ == "__main__":

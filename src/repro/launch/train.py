@@ -28,9 +28,11 @@ from repro.configs import get_arch
 from repro.core import (
     CohortConfig,
     CompressionConfig,
+    CorruptionConfig,
     FederatedPlan,
     FVNConfig,
     available_aggregators,
+    available_corruptions,
     cfmq,
     init_server_state,
     make_round_step,
@@ -83,6 +85,13 @@ def run_federated_asr(
     prefetch: bool = True,
 ):
     """Returns history dict with per-round losses + final WERs + CFMQ."""
+    if iid and plan.corruption.kind == "label_shuffle":
+        raise ValueError(
+            "label_shuffle corrupts labels inside the FederatedSampler, but "
+            "--iid packs rounds from the global pool and bypasses the "
+            "sampler — the adversary would silently never fire. Use a "
+            "non-IID run (or a delta corruption kind, which is engine-side "
+            "and composes with --iid)")
     if specaug_scale != 1.0:
         sa = cfg.specaug
         cfg = dataclasses.replace(
@@ -100,7 +109,10 @@ def run_federated_asr(
         corpus, clients_per_round=plan.clients_per_round,
         local_batch_size=plan.local_batch_size, data_limit=plan.data_limit,
         local_epochs=plan.local_epochs, seed=seed,
-        max_steps=plan.local_steps, strategy=plan.client_sampling)
+        max_steps=plan.local_steps, strategy=plan.client_sampling,
+        label_shuffle_rate=(plan.corruption.rate
+                            if plan.corruption.kind == "label_shuffle"
+                            else 0.0))
     rng = np.random.default_rng(seed)
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
 
@@ -128,6 +140,7 @@ def run_federated_asr(
     t0 = time.time()
     wire_total = 0
     participants = []
+    corrupted = []
     batches = (PrefetchIterator(host_batches(), depth=2) if prefetch
                else map(lambda b: jax.tree.map(jnp.asarray, b), host_batches()))
     try:
@@ -135,6 +148,7 @@ def run_federated_asr(
             state, metrics = round_step(state, batch)
             history["loss"].append(float(metrics["loss"]))
             participants.append(float(metrics["participants"]))
+            corrupted.append(float(metrics["corrupted"]))
             wire_total += round_wire_bytes(up_per_client, down_per_round,
                                            participants[-1])
             if eval_every and (r + 1) % eval_every == 0:
@@ -162,6 +176,10 @@ def run_federated_asr(
     history["cfmq_tb"] = terms.total_terabytes
     history["wire_bytes"] = wire_total
     history["participants_mean"] = float(np.mean(participants))
+    if plan.corruption.kind == "label_shuffle":
+        # data-plane adversary: realized counts live on the sampler
+        corrupted = [float(c) for c in sampler.corrupted_counts]
+    history["corrupted_mean"] = float(np.mean(corrupted)) if corrupted else 0.0
     history["n_params"] = n_params
     history["final_loss"] = float(np.mean(history["loss"][-5:]))
     return state, history
@@ -223,6 +241,15 @@ def main():
                     help="fraction of local steps a straggler completes")
     ap.add_argument("--trim-frac", type=float, default=0.1,
                     help="trimmed_mean: fraction trimmed per side")
+    # adversarial client corruption (see repro.core.corruption)
+    ap.add_argument("--corrupt-kind", default="none",
+                    choices=["none", "label_shuffle"] + available_corruptions(),
+                    help="adversary: delta corruption (sign_flip/gaussian/"
+                         "zero/stale) or the data-plane label_shuffle")
+    ap.add_argument("--corrupt-rate", type=float, default=0.0,
+                    help="P(participating client is corrupted) per round")
+    ap.add_argument("--corrupt-scale", type=float, default=1.0,
+                    help="adversary magnitude (sign_flip/gaussian/stale)")
     ap.add_argument("--dp-clip", type=float, default=1.0,
                     help="clipped_mean: per-client L2 clip norm")
     ap.add_argument("--dp-sigma", type=float, default=0.0,
@@ -255,6 +282,9 @@ def main():
                                       error_feedback=args.error_feedback),
         aggregator=args.aggregator, agg_trim_frac=args.trim_frac,
         dp_clip=args.dp_clip, dp_sigma=args.dp_sigma,
+        corruption=CorruptionConfig(kind=args.corrupt_kind,
+                                    rate=args.corrupt_rate,
+                                    scale=args.corrupt_scale),
     )
     _, hist = run_federated_asr(cfg, corpus, plan, args.rounds, iid=args.iid,
                                 eval_every=args.eval_every,

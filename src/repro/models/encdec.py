@@ -22,7 +22,6 @@ from repro.models.attention import (
     _project_qkv,
 )
 from repro.models.layers import (
-    dense_init,
     embed_init,
     layer_norm,
     lm_loss,

@@ -10,8 +10,7 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

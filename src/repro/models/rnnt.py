@@ -10,7 +10,6 @@ the U-chunked jnp reference here.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

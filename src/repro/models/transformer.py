@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.models import moe as moe_lib
 from repro.models import mla as mla_lib
-from repro.models.attention import AttnConfig, attn_init, attn_forward, attn_decode
+from repro.models.attention import AttnConfig, attn_init
 from repro.models.layers import (
     dense_init,
     embed_init,

@@ -10,7 +10,7 @@ optimizers over the client axis and FSDP-shards server state.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Sequence
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

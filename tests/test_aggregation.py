@@ -103,6 +103,79 @@ def test_coordinate_median_odd_and_even():
     np.testing.assert_allclose(v, 2.0, rtol=1e-6)     # masked client excluded
 
 
+ROBUST = ("trimmed_mean", "coordinate_median", "clipped_mean")
+
+
+def test_robust_rules_survive_nan_client():
+    """A hostile client shipping NaN must be excluded, not propagated:
+    NaN * 0 == NaN, so mask-multiplied sums are NOT protection. The
+    robust rules treat non-finite coordinates like non-participants."""
+    vals = [1.0, 1.2, 0.8, np.nan]
+    v = _run("trimmed_mean", vals, hypers={"trim_frac": 0.0})
+    np.testing.assert_allclose(v, np.mean([1.0, 1.2, 0.8]), rtol=1e-5)
+    v = _run("coordinate_median", vals)
+    np.testing.assert_allclose(v, 1.0, rtol=1e-5)
+    v = _run("clipped_mean", vals, hypers={"dp_clip": 100.0})
+    np.testing.assert_allclose(v, (1.0 + 1.2 + 0.8) / 4.0, rtol=1e-5)
+
+
+def test_robust_rules_survive_inf_client():
+    vals = [1.0, 1.2, 0.8, np.inf, -np.inf]
+    v = _run("trimmed_mean", vals, hypers={"trim_frac": 0.0})
+    np.testing.assert_allclose(v, np.mean([1.0, 1.2, 0.8]), rtol=1e-5)
+    v = _run("coordinate_median", vals)
+    np.testing.assert_allclose(v, 1.0, rtol=1e-5)
+    v = _run("clipped_mean", vals, hypers={"dp_clip": 100.0})
+    np.testing.assert_allclose(v, (1.0 + 1.2 + 0.8) / 5.0, rtol=1e-5)
+
+
+def test_robust_rules_all_clients_hostile():
+    """Every client NaN: the only finite answer is a zero update —
+    nothing may leak into the server state."""
+    for name in ROBUST:
+        v = _run(name, [np.nan] * 4)
+        assert np.isfinite(v) and v == 0.0, (name, v)
+
+
+def test_robust_rules_nan_excluded_per_coordinate():
+    """A NaN in one coordinate must not disturb the other coordinates
+    of the same client (exclusion is per coordinate, like rank
+    masking), except clipped_mean, which must drop the whole client
+    (its L2 norm — the DP sensitivity bound — is undefined)."""
+    deltas = {"w": jnp.asarray(np.array(
+        [[1.0, 5.0], [1.2, 6.0], [0.8, np.nan]], np.float32))}
+    ones = jnp.ones((3,))
+    h = dict(AGG_HYPER_DEFAULTS, trim_frac=0.0)
+    out = np.asarray(get_aggregator("trimmed_mean")(
+        deltas, ones, ones, h, jax.random.PRNGKey(0))["w"])
+    np.testing.assert_allclose(out, [1.0, 5.5], rtol=1e-5)
+    out = np.asarray(get_aggregator("clipped_mean")(
+        deltas, ones, ones, dict(AGG_HYPER_DEFAULTS, dp_clip=100.0),
+        jax.random.PRNGKey(0))["w"])
+    np.testing.assert_allclose(out, [(1.0 + 1.2) / 3.0, 11.0 / 3.0], rtol=1e-5)
+
+
+def test_trimmed_mean_tie_breaking_even_cohort():
+    """Tied values at the trim boundary (even cohort): sort stability
+    gives ties distinct ranks, so exactly t clients drop per side —
+    a tied pair is never double-trimmed or double-kept."""
+    v = _run("trimmed_mean", [1.0, 1.0, 2.0, 2.0], hypers={"trim_frac": 0.25})
+    np.testing.assert_allclose(v, 1.5, rtol=1e-6)     # one 1.0 + one 2.0 kept
+    # all-tied: any trim keeps the common value
+    v = _run("trimmed_mean", [3.0, 3.0, 3.0, 3.0], hypers={"trim_frac": 0.25})
+    np.testing.assert_allclose(v, 3.0, rtol=1e-6)
+
+
+def test_clipped_mean_zero_norm_updates():
+    """All-zero deltas have norm 0; the clip scale must clamp (not
+    divide by zero) and the result is a clean zero update."""
+    v = _run("clipped_mean", [0.0, 0.0, 0.0])
+    assert np.isfinite(v) and v == 0.0
+    # mixed: zero-norm client contributes nothing but stays counted
+    v = _run("clipped_mean", [0.0, 3.0], hypers={"dp_clip": 1.0})
+    np.testing.assert_allclose(v, 0.5, rtol=1e-5)
+
+
 def test_clipped_mean_clips_and_noise():
     # norms 1 and 10; clip 1 -> second contributes its direction only
     v = _run("clipped_mean", [1.0, 10.0], hypers={"dp_clip": 1.0, "dp_sigma": 0.0})
@@ -204,7 +277,7 @@ def test_dropped_clients_contribute_nothing():
 
     # replicate the realized mask by hand on the parity engine
     from repro.core.fedavg import _plane_keys
-    ckey, _, _ = _plane_keys(key, state.round_idx)
+    ckey, _, _, _ = _plane_keys(key, state.round_idx)
     pmask = participation_mask(jax.random.fold_in(ckey, 0), 3,
                                plan.cohort.participation)
     w = np.ones((3, 2, 4), np.float32) * np.asarray(pmask)[:, None, None]

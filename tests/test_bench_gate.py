@@ -1,0 +1,178 @@
+"""benchmarks/check_regression — the CI bench-regression gate's
+comparison semantics, driven directly (no subprocess, no bench run)."""
+import json
+
+from benchmarks.check_regression import classify, flatten, make_parser, run_gate
+
+BASE = {
+    "smoke": True,
+    "kernels": {"us_per_call": {"fed_round_tiny_rnnt": 100.0}},
+    "data": {"pack_speedup": 6.0, "pack_us": 50.0, "pass": True},
+    "t1": {"pass": True, "final_loss": {"E0": 2.0, "E1": 2.5}},
+}
+
+
+def args(**kw):
+    a = make_parser().parse_args([])
+    for k, v in kw.items():
+        setattr(a, k, v)
+    return a
+
+
+def gate(fresh, **kw):
+    return run_gate(BASE, fresh, args(**kw))
+
+
+def fresh_copy(**edits):
+    f = json.loads(json.dumps(BASE))
+    for path, v in edits.items():
+        node = f
+        keys = path.split(".")
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = v
+    return f
+
+
+def failed_paths(rows):
+    return {r[0] for r in rows if r[4] == "FAIL"}
+
+
+def test_identical_passes():
+    rows, failed = gate(fresh_copy())
+    assert not failed
+    assert failed_paths(rows) == set()
+
+
+def test_classify_paths():
+    assert classify("t1.pass") == "bool"
+    assert classify("kernels.us_per_call.fed_round_tiny_rnnt") == "time"
+    assert classify("data.pack_us") == "time"
+    assert classify("data.pack_speedup") == "speedup"
+    assert classify("t1.final_loss.E0") == "loss"
+    assert classify("smoke") is None
+
+
+def test_flatten_nested():
+    flat = flatten(BASE)
+    assert flat["kernels.us_per_call.fed_round_tiny_rnnt"] == 100.0
+    assert flat["t1.final_loss.E1"] == 2.5
+
+
+def test_time_regression_fails_at_ratio():
+    # 3x is the default ceiling: 299 passes, 301 fails
+    rows, failed = gate(fresh_copy(**{"kernels.us_per_call.fed_round_tiny_rnnt": 299.0}))
+    assert not failed
+    rows, failed = gate(fresh_copy(**{"kernels.us_per_call.fed_round_tiny_rnnt": 301.0}))
+    assert failed
+    assert failed_paths(rows) == {"kernels.us_per_call.fed_round_tiny_rnnt"}
+
+
+def test_time_improvement_never_fails():
+    _, failed = gate(fresh_copy(**{"kernels.us_per_call.fed_round_tiny_rnnt": 1.0}))
+    assert not failed
+
+
+def test_bool_claim_may_not_flip_false():
+    rows, failed = gate(fresh_copy(**{"t1.pass": False}))
+    assert failed and "t1.pass" in failed_paths(rows)
+    # false -> true is an improvement, never a failure
+    base = json.loads(json.dumps(BASE))
+    base["t1"]["pass"] = False
+    rows, failed = run_gate(base, fresh_copy(), args())
+    assert not failed
+
+
+def test_speedup_floor():
+    rows, failed = gate(fresh_copy(**{"data.pack_speedup": 2.9}))
+    assert failed and "data.pack_speedup" in failed_paths(rows)
+    _, failed = gate(fresh_copy(**{"data.pack_speedup": 3.1}))
+    assert not failed
+
+
+def test_loss_rtol():
+    _, failed = gate(fresh_copy(**{"t1.final_loss.E0": 2.9}))
+    assert not failed                       # within 1.5x
+    rows, failed = gate(fresh_copy(**{"t1.final_loss.E0": 3.1}))
+    assert failed and "t1.final_loss.E0" in failed_paths(rows)
+
+
+def test_missing_bench_fails_new_bench_notes():
+    f = fresh_copy()
+    del f["data"]["pack_us"]
+    rows, failed = gate(f)
+    assert failed and "data.pack_us" in failed_paths(rows)
+    rows, failed = gate(fresh_copy(**{"kernels.us_per_call.new_bench": 5.0}))
+    assert not failed
+    assert any(r[0].endswith("new_bench") and r[4] == "NOTE" for r in rows)
+
+
+def test_smoke_flag_must_match():
+    rows, failed = gate(fresh_copy(smoke=False))
+    assert failed and "smoke" in failed_paths(rows)
+
+
+def test_knobs_are_tunable():
+    f = fresh_copy(**{"kernels.us_per_call.fed_round_tiny_rnnt": 150.0})
+    _, failed = gate(f, time_ratio=1.2)
+    assert failed
+    _, failed = gate(f, time_ratio=2.0)
+    assert not failed
+
+
+def test_committed_baseline_matches_fresh_schema():
+    """The committed baseline must stay diffable against what
+    benchmarks.run --smoke emits today: every gated metric class
+    present, smoke flag set."""
+    with open("results/bench_baseline.json") as f:
+        baseline = json.load(f)
+    flat = flatten(baseline)
+    assert flat.get("smoke") is True
+    kinds = {classify(p) for p in flat}
+    assert {"bool", "time", "speedup", "loss"} <= kinds
+    rows, failed = run_gate(baseline, baseline, args())
+    assert not failed
+
+
+def test_cli_missing_baseline_returns_error(tmp_path, monkeypatch, capsys):
+    from benchmarks import check_regression
+
+    fresh = tmp_path / "fresh.json"
+    fresh.write_text(json.dumps(BASE))
+    monkeypatch.setattr(
+        "sys.argv",
+        ["prog", "--fresh", str(fresh), "--baseline", str(tmp_path / "nope.json")],
+    )
+    assert check_regression.main() == 1
+    assert "no baseline" in capsys.readouterr().out
+
+
+def test_cli_missing_fresh_returns_error(tmp_path, monkeypatch, capsys):
+    from benchmarks import check_regression
+
+    missing = str(tmp_path / "nope.json")
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(BASE))
+    for extra in ([], ["--update-baseline"]):
+        argv = ["prog", "--fresh", missing, "--baseline", str(base)] + extra
+        monkeypatch.setattr("sys.argv", argv)
+        assert check_regression.main() == 1
+        assert "no fresh summary" in capsys.readouterr().out
+
+
+def test_cli_update_baseline_roundtrip(tmp_path, monkeypatch):
+    from benchmarks import check_regression
+
+    fresh = tmp_path / "fresh.json"
+    base = tmp_path / "base.json"
+    fresh.write_text(json.dumps(BASE))
+    monkeypatch.setattr(
+        "sys.argv",
+        ["prog", "--fresh", str(fresh), "--baseline", str(base),
+         "--update-baseline"],
+    )
+    assert check_regression.main() == 0
+    monkeypatch.setattr(
+        "sys.argv", ["prog", "--fresh", str(fresh), "--baseline", str(base)]
+    )
+    assert check_regression.main() == 0

@@ -243,7 +243,7 @@ def test_error_feedback_keeps_dropped_client_residuals():
     step = jax.jit(make_round_step(loss_fn, plan, base_key))
     state2, m = step(state, make_batch(4, 2, 4, seed=7))
 
-    ckey, _, _ = _plane_keys(base_key, jnp.zeros((), jnp.int32))
+    ckey, _, _, _ = _plane_keys(base_key, jnp.zeros((), jnp.int32))
     pmask = np.asarray(participation_mask(jax.random.fold_in(ckey, 0), 4,
                                           plan.cohort.participation))
     assert 0 < pmask.sum() < 4                       # the draw actually split

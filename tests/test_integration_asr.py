@@ -8,7 +8,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import FederatedPlan, FVNConfig
+from repro.core import FederatedPlan
 from repro.launch.train import run_federated_asr, tiny_asr_setup
 
 # multi-round end-to-end parity: the slowest tests in the suite (CI

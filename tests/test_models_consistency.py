@@ -1,11 +1,8 @@
 """Cross-path model consistency: decode==prefill, ring==full cache,
 MLA absorbed decode == expanded forward, SSM/RWKV state streaming."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models import build_model
 from repro.models.hybrid import HybridConfig

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.asr.rnnt_loss import rnnt_loss, rnnt_loss_from_logprobs
+from repro.asr.rnnt_loss import rnnt_loss
 
 
 def brute_force_nll(logp, labels, T, U):

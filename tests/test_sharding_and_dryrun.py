@@ -8,11 +8,10 @@ import textwrap
 
 import jax
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.launch.hlo_cost import HloCostModel, analyze, shape_bytes
-from repro.launch.sharding import _pad_spec, fsdpify, make_param_specs, sanitize_specs
+from repro.launch.hlo_cost import analyze, shape_bytes
+from repro.launch.sharding import fsdpify, make_param_specs, sanitize_specs
 
 
 class FakeMesh:

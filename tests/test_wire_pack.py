@@ -1,7 +1,6 @@
 """Packed-wire plane: Pallas kernels vs jnp oracles, byte-exact payload
 sizes vs the Python formulas, and bit-exact round-trips against the
 in-graph quantize->dequantize path."""
-import math
 
 import jax
 import jax.numpy as jnp
