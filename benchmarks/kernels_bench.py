@@ -63,7 +63,6 @@ def bench_rnnt_joint():
 
 
 def _fed_round_setup():
-    from repro.core import FederatedPlan, init_server_state
     from repro.launch.train import tiny_asr_setup
     from repro.data import FederatedSampler
     from repro.models import build_model
@@ -79,38 +78,17 @@ def _fed_round_setup():
     return bundle, params, batch
 
 
-def _time_round(bundle, params, batch, plan, name, derived):
-    from repro.core import init_server_state, make_round_step
+def _round_variants(base):
+    from repro.core import CompressionConfig, FederatedPlan
 
-    state = init_server_state(plan, params)
-    step = jax.jit(make_round_step(bundle.loss_fn, plan, jax.random.PRNGKey(1)))
-    state, _ = step(state, batch)          # compile
-    t0 = time.perf_counter()
-    for _ in range(3):
-        state, m = step(state, batch)
-    jax.block_until_ready(m["loss"])
-    us = (time.perf_counter() - t0) / 3 * 1e6
-    print(csv_row(name, us, derived))
-    return us
-
-
-def bench_fed_round():
-    """Wall time of one jitted federated round at bench scale, plus the
-    compressed/robust server-plane variants: the in-graph quantize->
-    dequantize overhead vs the wire bytes it saves (bytes/round from
-    the exact per-client accounting, clients=8)."""
-    from repro.core import CompressionConfig, FederatedPlan, client_wire_bytes
-
-    bundle, params, batch = _fed_round_setup()
-    base = dict(clients_per_round=8, local_batch_size=4, client_lr=0.3)
-    us = _time_round(bundle, params, batch, FederatedPlan(**base),
-                     "fed_round_tiny_rnnt", "clients=8")
-    times = {"fed_round_tiny_rnnt": us}
-    for name, plan in [
+    return [
+        ("fed_round_tiny_rnnt", FederatedPlan(**base)),
+        # compression-only variants (weighted_mean) so the timings are
+        # attributable to the quantize/sparsify plane alone. int8/int4
+        # take the code-domain fast path (shared-scale codes, int32
+        # code-sum reduction, one server dequant).
         ("fed_round_tiny_rnnt_int8",
          FederatedPlan(**base, compression=CompressionConfig(kind="int8"))),
-        # compression-only variants (weighted_mean) so the timings are
-        # attributable to the quantize/sparsify plane alone
         ("fed_round_tiny_rnnt_top5",
          FederatedPlan(**base, compression=CompressionConfig(kind="topk",
                                                              topk_frac=0.05))),
@@ -126,21 +104,176 @@ def bench_fed_round():
         ("fed_round_tiny_rnnt_top5_ef",
          FederatedPlan(**base, compression=CompressionConfig(
              kind="topk", topk_frac=0.05, error_feedback=True))),
-    ]:
+    ]
+
+
+def bench_fed_round():
+    """Wall time of one jitted federated round at bench scale, plus the
+    compressed/robust server-plane variants (bytes/round from the exact
+    per-client accounting, clients=8).
+
+    Measurement protocol: every variant is compiled first, then timed
+    over ``REPRO_BENCH_FED_REPS`` (default 5) *interleaved* cycles
+    whose per-cycle order rotates. The per-variant MINIMUM is reported
+    as us_per_call (the noise floor each graph can reach), and the
+    fp32-vs-compressed ordering flags use *paired within-cycle ratios*:
+    each cycle divides a variant's time by the fp32 time of the SAME
+    cycle — temporally adjacent, so shared-runner load drift cancels —
+    and the flag takes the median over cycles against a documented
+    ``_NOISE_MARGIN``. Sequential per-variant loops (the pre-PR 5
+    protocol) made this ordering a coin flip: cross-variant load drift
+    dwarfs the sub-percent differential that is actually left now that
+    the code fast path removed the compression plane's compute tax
+    (the PR 4 baseline had int4_packed at 1.4x fp32).
+
+    Returns (times, flags): flags are the never-flip bench-gate claims
+    that a quantized round costs at-or-under the fp32 round (within
+    the paired-measurement noise floor; the raw median ratios are
+    printed in the derived column and persisted next to the flags).
+    """
+    import os
+    import statistics
+
+    from repro.core import client_wire_bytes, init_server_state, make_round_step
+
+    bundle, params, batch = _fed_round_setup()
+    base = dict(clients_per_round=8, local_batch_size=4, client_lr=0.3)
+    variants = _round_variants(base)
+    steps, states = {}, {}
+    for name, plan in variants:
+        states[name] = init_server_state(plan, params)
+        steps[name] = jax.jit(make_round_step(bundle.loss_fn, plan,
+                                              jax.random.PRNGKey(1)))
+        states[name], m = steps[name](states[name], batch)       # compile
+        jax.block_until_ready(m["loss"])
+    reps = max(1, int(os.environ.get("REPRO_BENCH_FED_REPS", "5")))
+    cycle_times = {name: [] for name, _ in variants}
+
+    def step_once(name):
+        t0 = time.perf_counter()
+        states[name], m = steps[name](states[name], batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) * 1e6
+        cycle_times[name].append(us)
+        return us
+
+    for rep in range(reps):
+        order = variants[rep % len(variants):] + variants[:rep % len(variants)]
+        for name, _ in order:
+            step_once(name)
+    # The ordering flags: ADJACENT fp32<->variant pairs (back-to-back
+    # steps, so host-steal drift has ~one round step to move instead of
+    # a whole cycle), median of the pair ratios.
+    flags = {}
+    pair_reps = max(3, int(os.environ.get("REPRO_BENCH_FED_PAIR_REPS", "6")))
+    for tag, name in [("int8", "fed_round_tiny_rnnt_int8"),
+                      ("int4_packed", "fed_round_tiny_rnnt_int4_packed")]:
+        ratios = []
+        for _ in range(pair_reps):
+            f = step_once("fed_round_tiny_rnnt")
+            v = step_once(name)
+            ratios.append(v / f)
+        r = statistics.median(ratios)
+        flags[f"{tag}_le_fp32"] = {
+            "pass": r <= 1.0 + _NOISE_MARGIN,
+            "vs_fp32_ratio": round(r, 4),
+        }
+    times = {name: min(ts) for name, ts in cycle_times.items()}
+    ratio = {name: flags[tag]["vs_fp32_ratio"]
+             for tag, name in [("int8_le_fp32", "fed_round_tiny_rnnt_int8"),
+                               ("int4_packed_le_fp32",
+                                "fed_round_tiny_rnnt_int4_packed")]}
+    for name, plan in variants:
         up = 8 * client_wire_bytes(plan.compression, params)
-        times[name] = _time_round(bundle, params, batch, plan, name,
-                                  f"baseline_us={us:.1f};uplink_B_round={up}")
-    return times
+        if plan.compression.kind == "none":
+            derived = "clients=8"
+        elif name in ratio:
+            derived = f"vs_fp32_ratio={ratio[name]};uplink_B_round={up}"
+        else:
+            derived = f"uplink_B_round={up}"
+        print(csv_row(name, times[name], derived))
+    return times, flags
 
 
-def main() -> dict:
-    """Runs every micro-bench; returns {bench_name: us_per_call} so the
-    harness can persist the timings for the CI regression gate."""
+# The discrimination floor of shared 2-core runners: the int8 and
+# int8_packed fast paths compile to the SAME HLO (the static packed
+# bit only changes which wrapper builds the graph) yet their median
+# adjacent-pair ratios vs fp32 still land up to ~8% apart under host
+# CPU steal — no estimator at this wall-time budget can certify a
+# sub-percent ordering. The flag therefore gates the claim that
+# actually regressed before PR 5 and is measurable: a quantized round
+# costs AT MOST fp32 + this band (the PR 4 baseline had int4_packed at
+# 1.40x fp32 — a regression back to a real compute tax trips this
+# immediately), while the strict sub-1.0 orderings show up in quiet-
+# window runs (persisted as vs_fp32_ratio next to each flag) and in
+# the stable plane-only wire_plane_*_speedup metrics.
+_NOISE_MARGIN = 0.10
+
+
+def bench_wire_plane():
+    """The compression plane in isolation at bench-model shapes: the
+    slow path (per-client quantize->dequantize, K fp32 trees reduced by
+    the aggregator) vs the code-domain fast path (shared-scale fused
+    quantize(+pack), int32 code-sum, ONE dequant). The full-round bench
+    above buries this differential under local training; here it is the
+    whole measurement — timed as mins over interleaved slow/fast reps
+    (same rationale as ``bench_fed_round``) so the ``*_speedup`` ratios
+    are stable enough for the bench gate's speedup-floor class."""
+    from repro.core.aggregation import get_aggregator
+    from repro.core.compression import (
+        CompressionConfig, code_domain_aggregate, make_compressor)
+
+    rng = np.random.default_rng(7)
+    K = 8
+    tree = {f"l{i}": jnp.asarray(rng.normal(size=(K, 256, 91)), jnp.float32)
+            for i in range(8)}
+    n_k = jnp.full((K,), 16.0)
+    pmask = jnp.ones((K,))
+    key = jax.random.PRNGKey(0)
+    ckeys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(K))
+    wm = get_aggregator("weighted_mean")
+
+    times, speedups = {}, {}
+    for tag, cfg in [("int8", CompressionConfig(kind="int8")),
+                     ("int4_packed", CompressionConfig(kind="int4",
+                                                       packed=True))]:
+        comp = make_compressor(cfg)
+        slow = jax.jit(lambda tr, c=comp: wm(jax.vmap(c)(tr, ckeys),
+                                             n_k, pmask, {}, key))
+        fast = jax.jit(lambda tr, c=cfg: code_domain_aggregate(
+            c, tr, n_k, pmask, ckeys))
+        jax.block_until_ready(slow(tree))                 # compile both
+        jax.block_until_ready(fast(tree))
+        t_slow = t_fast = float("inf")
+        for _ in range(12):
+            t0 = time.perf_counter()
+            jax.block_until_ready(slow(tree))
+            t_slow = min(t_slow, (time.perf_counter() - t0) * 1e6)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fast(tree))
+            t_fast = min(t_fast, (time.perf_counter() - t0) * 1e6)
+        speedup = t_slow / max(t_fast, 1e-9)
+        times[f"wire_plane_{tag}"] = t_fast
+        speedups[f"{tag}_speedup"] = round(speedup, 2)
+        print(csv_row(f"wire_plane_{tag}", t_fast,
+                      f"slow_us={t_slow:.1f};fast_speedup={speedup:.2f}"))
+    return times, speedups
+
+
+def main() -> tuple[dict, dict]:
+    """Runs every micro-bench; returns (times, extra): {bench_name:
+    us_per_call} plus the extra gated sections — the never-flip
+    code-fast-path pass flags and the wire-plane fast-vs-slow speedups
+    — so the harness can persist all of it for the CI regression
+    gate."""
     times = {}
     times["attention_blockwise_1k"], _ = bench_attention()
     times["rnnt_joint_chunked"], _ = bench_rnnt_joint()
-    times.update(bench_fed_round())
-    return times
+    plane_times, plane_speedups = bench_wire_plane()
+    times.update(plane_times)
+    round_times, flags = bench_fed_round()
+    times.update(round_times)
+    return times, {"code_fast_path": flags, "wire_plane": plane_speedups}
 
 
 if __name__ == "__main__":

@@ -53,9 +53,12 @@ def main() -> None:
     summary = {"smoke": args.smoke}
     if "kernels" in want:
         print("== kernel micro-benches (name,us_per_call,derived) ==")
-        times = kernels_bench.main()
+        times, extra = kernels_bench.main()
         summary["kernels"] = {
-            "us_per_call": {k: round(v, 1) for k, v in times.items()}}
+            "us_per_call": {k: round(v, 1) for k, v in times.items()},
+            # never-flip claims (code-domain fast path keeps quantized
+            # rounds at-or-under fp32) + stable plane-level speedups
+            **extra}
     if "data" in want:
         print("== data-plane micro-benches (name,us_per_call,derived) ==")
         t_vec, _, speedup = data_bench.bench_packing()

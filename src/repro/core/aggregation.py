@@ -25,6 +25,15 @@ non-participants by rank: values are sorted with non-participants
 pushed to +inf, so participant ranks occupy [0, m) and rank tests
 against traced m work for any cohort size.
 
+``weighted_mean`` has a second, semantically-equivalent realization:
+when the compression plane quantizes (int8/int4) the round engine
+bypasses this registry and computes the weighted mean in the *code
+domain* (``repro.core.compression.code_domain_aggregate``: shared
+negotiated scale, exact int32 weighted code sum, one server dequant).
+The robust rules can never take that path — they need per-client fp32
+order statistics — which is exactly the static condition
+``fedavg._code_fast_path`` checks.
+
 Hostile inputs: a Byzantine client (see ``repro.core.corruption``) can
 ship NaN/Inf coordinates, and ``NaN * 0 == NaN`` means a masked sum is
 NOT protection. The robust rules therefore treat non-finite

@@ -13,6 +13,17 @@ subsystem (repro.core.compression), measured wire bytes from the round
 metrics via ``wire_payload`` (the sweep runner does this whenever a
 plan compresses or drops clients; default plans keep the paper
 formula as the parity path).
+
+Computation-side invariance: the code-domain aggregation fast path
+(``compression.code_domain_aggregate``, selected statically in the
+round engine) changes WHERE the dequantization happens (once at the
+server instead of once per client), never what travels — per-client
+payload buffers keep the exact shapes ``leaf_wire_bytes`` prices, plus
+the same one fp32 scale per tensor (negotiated by max-reduce instead
+of computed locally: identical four bytes on the wire). Every formula
+in this module is therefore fast-path-agnostic by construction, and
+tests/test_code_fastpath.py asserts the round metrics' uplink bytes
+stay byte-identical when the fast path engages.
 """
 from __future__ import annotations
 

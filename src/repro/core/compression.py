@@ -30,7 +30,15 @@ buffers, not just arithmetic:
    Pack->unpack is bit-exact against path 2 by construction: both
    consume the same codes, so the dequantized deltas are identical
    while the payload's materialized byte size equals
-   ``leaf_wire_bytes`` for every kind (property-tested).
+   ``leaf_wire_bytes`` for every kind (property-tested);
+4. a *code-domain fast path* (``code_domain_aggregate``; the round
+   engine selects it statically for quantizing planes under the
+   paper's weighted mean) that never rematerializes per-client fp32
+   deltas: scales are negotiated cohort-wide by a max-reduce over the
+   client axis (so the integer code sums are exact), each client runs
+   the fused ``wire_pack.quantize_pack`` kernel, ``sum_packed_codes``
+   reduces in int32, and the server dequantizes ONCE. Same wire bytes,
+   same payload buffers — only the compute drops.
 
 ``error_feedback`` turns on EF21-style residual accumulation in the
 round engine (see ``repro.core.fedavg``): each client compresses
@@ -44,6 +52,7 @@ wire layout and graph shape); the RNG key is traced. Byte accounting
 is pure Python over leaf shapes (``client_wire_bytes``) so CFMQ and
 the round metrics agree to the byte by construction.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -66,16 +75,16 @@ _BITS = {"int8": 8, "int4": 4}
 @dataclasses.dataclass(frozen=True)
 class CompressionConfig:
     """Static uplink compression spec (part of the jit cache key)."""
-    kind: str = "none"          # none | int8 | int4 | topk
-    topk_frac: float = 0.05     # fraction of coordinates kept per tensor
-    stochastic: bool = True     # stochastic (unbiased) vs nearest rounding
-    packed: bool = False        # materialize + round-trip the wire payload
+
+    kind: str = "none"  # none | int8 | int4 | topk
+    topk_frac: float = 0.05  # fraction of coordinates kept per tensor
+    stochastic: bool = True  # stochastic (unbiased) vs nearest rounding
+    packed: bool = False  # materialize + round-trip the wire payload
     error_feedback: bool = False  # EF21 per-client residual accumulation
 
     def __post_init__(self):
         if self.kind not in KINDS:
-            raise ValueError(
-                f"unknown compression kind {self.kind!r}; available: {KINDS}")
+            raise ValueError(f"unknown compression kind {self.kind!r}; available: {KINDS}")
         # only validate the knob that is actually in use, so callers can
         # pass an inert topk_frac (e.g. a CLI default) with other kinds
         if self.kind == "topk" and not 0.0 < self.topk_frac <= 1.0:
@@ -83,11 +92,13 @@ class CompressionConfig:
         if self.kind == "none" and self.packed:
             raise ValueError(
                 "packed=True materializes a quantized wire payload; "
-                "kind='none' ships raw fp32 and has nothing to pack")
+                "kind='none' ships raw fp32 and has nothing to pack"
+            )
         if self.kind == "none" and self.error_feedback:
             raise ValueError(
                 "error_feedback compensates compression error; with "
-                "kind='none' there is no error to feed back")
+                "kind='none' there is no error to feed back"
+            )
 
 
 def _topk_count(frac: float, size: int) -> int:
@@ -99,9 +110,9 @@ def leaf_wire_bytes(cfg: CompressionConfig, size: int) -> int:
     if cfg.kind == "none":
         return _WORD * size
     if cfg.kind == "int8":
-        return size + _WORD                      # 1 B/elt + fp32 scale
+        return size + _WORD  # 1 B/elt + fp32 scale
     if cfg.kind == "int4":
-        return (size + 1) // 2 + _WORD           # two elts per byte + scale
+        return (size + 1) // 2 + _WORD  # two elts per byte + scale
     if cfg.kind == "topk":
         return 2 * _WORD * _topk_count(cfg.topk_frac, size)
     raise ValueError(cfg.kind)
@@ -114,8 +125,7 @@ def client_wire_bytes(cfg: CompressionConfig, tree: PyTree) -> int:
 
 def tree_param_bytes(tree: PyTree) -> int:
     """Downlink bytes: the server broadcasts the full model."""
-    return sum(int(l.size) * jnp.dtype(l.dtype).itemsize
-               for l in jax.tree.leaves(tree))
+    return sum(int(l.size) * jnp.dtype(l.dtype).itemsize for l in jax.tree.leaves(tree))
 
 
 # ----------------------------------------------------------------------
@@ -124,29 +134,47 @@ def tree_param_bytes(tree: PyTree) -> int:
 # built on these, which is what makes them bit-exact to each other.
 # ----------------------------------------------------------------------
 
-def quantize_codes(x, key, bits: int, stochastic: bool = True):
-    """Per-tensor absmax intN codes: -> (int8 codes shaped like x, fp32
-    scale scalar), with codes in [-levels, levels].
 
-    ``y`` is clamped into the grid *before* the Bernoulli draw: f32
+def leaf_scale(x, bits: int):
+    """Per-tensor absmax scale: max|x| / levels, guarded against the
+    all-zero tensor (scale 1.0 keeps the codes at exactly 0)."""
+    levels = 2.0 ** (bits - 1) - 1.0  # 127 (int8) / 7 (int4)
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / levels
+    return jnp.where(scale > 0, scale, 1.0)
+
+
+def _rounding_field(key, shape, stochastic: bool):
+    """The stochastic-rounding uniforms (None = nearest). ``u < frac``
+    is jax.random.bernoulli's own draw, so threading the explicit field
+    through the fused kernel is bit-identical to the historical
+    in-line bernoulli for the same key."""
+    return jax.random.uniform(key, shape) if stochastic else None
+
+
+def quantize_codes_with_scale(x, key, scale, bits: int, stochastic: bool = True):
+    """intN codes of ``x`` against a *given* scale — the cohort-shared
+    entry point of the code-domain fast path (every client quantizing
+    on one negotiated grid is what makes code sums exact).
+
+    ``y`` is clamped into the grid *before* the rounding draw: f32
     division can land the absmax coordinate one ulp outside the grid
-    (|x|/ (|x|/levels) > levels), and a boundary draw would round up to
-    levels+1 and get clipped back — biasing E[Q(x)] *below* x exactly
-    at the max-magnitude coordinate. Clamped, the boundary is
+    (|x| / (|x|/levels) > levels), and a boundary draw would round up
+    to levels+1 and get clipped back — biasing E[Q(x)] *below* x
+    exactly at the max-magnitude coordinate. Clamped, the boundary is
     deterministic and the documented unbiasedness holds on the whole
     grid.
     """
-    levels = 2.0 ** (bits - 1) - 1.0             # 127 (int8) / 7 (int4)
-    x32 = x.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(x32)) / levels
-    scale = jnp.where(scale > 0, scale, 1.0)
-    y = jnp.clip(x32 / scale, -levels, levels)
-    if stochastic:
-        lo = jnp.floor(y)
-        q = lo + jax.random.bernoulli(key, y - lo).astype(jnp.float32)
-    else:
-        q = jnp.round(y)
-    return q.astype(jnp.int8), scale
+    from repro.kernels import wire_pack
+
+    u = _rounding_field(key, jnp.shape(x), stochastic)
+    return wire_pack.quantize_with_scale(x.astype(jnp.float32), scale, u, bits)
+
+
+def quantize_codes(x, key, bits: int, stochastic: bool = True):
+    """Per-tensor absmax intN codes: -> (int8 codes shaped like x, fp32
+    scale scalar), with codes in [-levels, levels]."""
+    scale = leaf_scale(x, bits)
+    return quantize_codes_with_scale(x, key, scale, bits, stochastic), scale
 
 
 def dequantize_codes(codes, scale, dtype=jnp.float32):
@@ -181,6 +209,7 @@ def _topk_leaf(x, frac: float):
 # Packed-wire payloads: the materialized buffers behind the formulas.
 # ----------------------------------------------------------------------
 
+
 def pack_leaf(cfg: CompressionConfig, x, key):
     """Materialize one tensor's uplink payload as a tuple of arrays
     whose total byte size equals ``leaf_wire_bytes`` exactly:
@@ -193,11 +222,14 @@ def pack_leaf(cfg: CompressionConfig, x, key):
 
     if cfg.kind == "topk":
         return topk_select(x, cfg.topk_frac)
-    codes, scale = quantize_codes(x, key, _BITS[cfg.kind], cfg.stochastic)
-    flat = codes.reshape(-1)
-    if cfg.kind == "int4":
-        return wire_pack.nibble_pack(flat), scale
-    return flat, scale
+    bits = _BITS[cfg.kind]
+    scale = leaf_scale(x, bits)
+    # the rounding field keeps x's shape (bit-parity with the historical
+    # per-shape bernoulli draw); the fused kernel consumes it flat
+    u = _rounding_field(key, jnp.shape(x), cfg.stochastic)
+    uf = None if u is None else u.reshape(-1)
+    payload = wire_pack.quantize_pack(x.astype(jnp.float32).reshape(-1), scale, uf, bits)
+    return payload, scale
 
 
 def unpack_leaf(cfg: CompressionConfig, payload, shape, dtype=jnp.float32):
@@ -221,32 +253,122 @@ def packed_leaf_bytes(payload) -> int:
     return sum(int(a.size) * jnp.dtype(a.dtype).itemsize for a in payload)
 
 
-def sum_packed_codes(cfg: CompressionConfig, data, size: int):
-    """All-reduce a stack of packed intN payload buffers *in the code
-    domain*: (K, nbytes) packed bytes -> (size,) int32 code sums.
+def sum_packed_codes(cfg: CompressionConfig, data, size: int, weights=None):
+    """All-reduce a stack of intN payload buffers *in the code domain*:
+    (K, nbytes) payload -> (size,) int32 code sums. ``data`` is the
+    wire buffer of ``cfg`` — nibble-packed bytes for a packed int4
+    plane, raw int8 codes otherwise.
 
     This is the packed-form all-reduce of the uplink: int8/int4 codes
-    widen to int32 (K * levels stays far below 2^31), so the server can
-    ``psum`` the widened codes across the client mesh axis and
-    dequantize once — valid whenever the cohort shares one scale (the
-    per-tensor scales are 4-byte scalars, cheap to max-reduce first).
+    widen to int32, so the server can ``psum`` the widened codes across
+    the client mesh axis and dequantize ONCE — valid whenever the
+    cohort shares one scale (the per-tensor scales are 4-byte scalars,
+    cheap to max-reduce first; see ``shared_leaf_scale``). With
+    ``weights`` (int32 per-client example counts n_k — integral by
+    data-plane construction, the weight leaves are 0/1 masks) the
+    reduction is the example-weighted code sum the paper's aggregator
+    needs, still in exact integer arithmetic.
+
+    int32 overflow bound (property-tested in tests/test_code_fastpath.py):
+    |sum| <= levels * sum(w_k) (or levels * K unweighted), so int8
+    accumulation is exact up to sum(n_k) < 2**31 / 127 = 16,909,320
+    examples (clients) per round, int4 up to 2**31 / 7 ~= 306M — far
+    above any real cohort; past that, widen to int64 before the psum.
     """
     from repro.kernels import wire_pack
 
     if cfg.kind not in _BITS:
         raise ValueError(
             f"sum_packed_codes is the intN code-domain reduction; a "
-            f"{cfg.kind!r} payload carries fp32 values, not codes")
-    if cfg.kind == "int4":
+            f"{cfg.kind!r} payload carries fp32 values, not codes"
+        )
+    if cfg.kind == "int4" and cfg.packed:
         codes = jax.vmap(lambda b: wire_pack.nibble_unpack(b, size))(data)
     else:
         codes = data
-    return codes.astype(jnp.int32).sum(axis=0)
+    wide = codes.astype(jnp.int32)
+    if weights is None:
+        return wide.sum(axis=0)
+    return jnp.tensordot(weights.astype(jnp.int32), wide, axes=(0, 0))
+
+
+# ----------------------------------------------------------------------
+# Code-domain fast path: shared-scale negotiation + in-graph code-sum
+# aggregation. Clients never rematerialize fp32 deltas — the round
+# engine calls this INSTEAD of compress-then-aggregate whenever the
+# plane quantizes under the paper's weighted mean (selected statically
+# in repro.core.fedavg, so the fp32 parity graph is untouched).
+# ----------------------------------------------------------------------
+
+
+def shared_leaf_scale(d, pmask, bits: int):
+    """Negotiate one scale for a (K, ...) client-stacked leaf: each
+    client's absmax (masked by participation — dropped clients transmit
+    nothing, so they must not coarsen the grid), max-reduced over the
+    client axis. Under pjit with the K axis sharded this lowers to an
+    all-reduce over 4-byte scalars — the cheap half of the negotiation
+    that makes the code sums below exact."""
+    levels = 2.0 ** (bits - 1) - 1.0
+    am = jnp.max(jnp.abs(d.astype(jnp.float32).reshape(d.shape[0], -1)), axis=1)
+    scale = jnp.max(am * (pmask > 0)) / levels
+    return jnp.where(scale > 0, scale, 1.0)
+
+
+def fastpath_leaf_keys(ckeys, leaf_idx: int):
+    """Per-client rounding keys for one leaf: the round's cached client
+    key fan-out (one fold_in per client per round, hoisted in the round
+    engine) folded with the leaf index."""
+    return jax.vmap(lambda ck: jax.random.fold_in(ck, leaf_idx))(ckeys)
+
+
+def code_domain_aggregate(cfg: CompressionConfig, deltas: PyTree, n_k, pmask, ckeys) -> PyTree:
+    """Example-weighted mean of K quantized client deltas without ever
+    rematerializing fp32 per-client tensors:
+
+        per leaf:  absmax_k --max-reduce--> shared scale s
+                   fused quantize(+pack) per client  -> intN payload
+                   sum_packed_codes (int32, weighted by n_k)  -> csum
+                   wbar = csum * (s / n)          [ONE dequant, server]
+
+    vs the slow path's K dequantized fp32 trees reduced by an fp32
+    tensordot. With the shared scale the integer code sum is *exact*,
+    so this equals dequantize-then-weighted-mean up to one final f32
+    rounding (bit-exact for equal weights on power-of-two scales;
+    property-tested in tests/test_code_fastpath.py). Wire accounting is
+    untouched: the payload per client is byte-identical to
+    ``pack_leaf`` (codes against a shared scale instead of its own —
+    same buffer shapes, same ``leaf_wire_bytes``).
+    """
+    from repro.kernels import wire_pack
+
+    bits = _BITS[cfg.kind]
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    n = jnp.maximum(n_k.sum(), 1.0)
+    w_int = jnp.round(n_k).astype(jnp.int32)
+    out = []
+    for li, d in enumerate(leaves):
+        K = d.shape[0]
+        flat = d.astype(jnp.float32).reshape(K, -1)
+        size = flat.shape[1]
+        scale = shared_leaf_scale(d, pmask, bits)
+        lkeys = fastpath_leaf_keys(ckeys, li)
+
+        def client(x, k, scale=scale):
+            u = _rounding_field(k, x.shape, cfg.stochastic)
+            if cfg.packed:
+                return wire_pack.quantize_pack(x, scale, u, bits)
+            return wire_pack.quantize_with_scale(x, scale, u, bits)
+
+        payload = jax.vmap(client)(flat, lkeys)
+        csum = sum_packed_codes(cfg, payload, size, weights=w_int)
+        out.append((csum.astype(jnp.float32) * (scale / n)).reshape(d.shape[1:]))
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 # ----------------------------------------------------------------------
 # In-graph compressors: delta -> dequantized delta (same shape/dtype).
 # ----------------------------------------------------------------------
+
 
 def make_compressor(cfg: CompressionConfig):
     """Returns compress(delta_tree, key) -> delta_tree (dequantized).
@@ -262,12 +384,13 @@ def make_compressor(cfg: CompressionConfig):
     if cfg.kind == "none":
         return lambda tree, key: tree
     if cfg.kind == "topk" and not cfg.packed:
-        return lambda tree, key: jax.tree.map(
-            lambda x: _topk_leaf(x, cfg.topk_frac), tree)
+        return lambda tree, key: jax.tree.map(lambda x: _topk_leaf(x, cfg.topk_frac), tree)
 
     if cfg.packed:
+
         def leaf_fn(x, k):
             return unpack_leaf(cfg, pack_leaf(cfg, x, k), x.shape, x.dtype)
+
     else:
         bits = _BITS[cfg.kind]
 

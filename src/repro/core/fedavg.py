@@ -33,6 +33,17 @@ paper's Alg. 1 exactly and are the parity baseline for tests. The round metrics 
 wire bytes of the configured compression so CFMQ can account measured
 (not approximated) communication cost.
 
+When the plane quantizes (int8/int4) under the paper's weighted mean
+with no EF and no delta adversary, the engine statically swaps the
+compress->aggregate stages for the *code-domain fast path*
+(``compression.code_domain_aggregate``): per-leaf scales are
+negotiated by a max-reduce over the client axis, each client runs ONE
+fused quantize(+nibble-pack) kernel, the reduction is an exact int32
+code sum (``sum_packed_codes``) and the server dequantizes once —
+per-client fp32 deltas are never rematerialized, wire bytes are
+untouched, and every other configuration (including the fp32 parity
+plane) keeps its previous graph byte for byte.
+
 With ``compression.error_feedback`` the pipeline carries EF21-style
 per-client residuals in ``ServerState.ef``: client k uploads
 C(delta_k + ef_k) and keeps ef_k' = (delta_k + ef_k) - C(...), so the
@@ -62,10 +73,15 @@ from repro.core.cohort import identity_cohort, make_cohort_fn
 from repro.core.compression import (
     CompressionConfig,
     client_wire_bytes,
+    code_domain_aggregate,
     make_compressor,
     tree_param_bytes,
 )
-from repro.core.corruption import identity_corruption, make_corruption_fn
+from repro.core.corruption import (
+    DELTA_KINDS,
+    identity_corruption,
+    make_corruption_fn,
+)
 from repro.core.plan import FederatedPlan, make_server_optimizer
 from repro.optim import Optimizer, apply_updates, sgd
 
@@ -94,13 +110,33 @@ class ServerPlane(NamedTuple):
     """The composed server side of one round: cohort -> compression ->
     corruption -> aggregation. Built once per (static) configuration;
     every traced knob rides in via the closures (plan constants or
-    hyper inputs)."""
+    hyper inputs). ``aggregator_name`` / ``corruption_kind`` mirror the
+    closures as static strings so the engine can select the code-domain
+    fast path at trace time (see ``_code_fast_path``)."""
     cohort: Callable          # (key, weight) -> (weight', pmask)
     compress: Callable        # (delta_tree, key) -> delta_tree
     compression: CompressionConfig   # static: wire-byte accounting
     aggregate: Callable       # (deltas, n_k, pmask, key) -> wbar
     corrupt: Callable = identity_corruption
     # (key, deltas, pmask, stale) -> (deltas', cmask, stale')
+    aggregator_name: str = "weighted_mean"
+    corruption_kind: str = "none"
+
+
+def _code_fast_path(plane: ServerPlane) -> bool:
+    """Static selector for the code-domain aggregation fast path: the
+    plane quantizes (int8/int4), aggregates with the paper's weighted
+    mean, and nothing needs the per-client fp32 deltas the fast path
+    never materializes — no EF residuals (they are defined as
+    ``target - dequantized(sent)``) and no delta-domain adversary
+    (corruption transforms what the server receives; in the fast path
+    the server receives code sums). Everything here is compile-time
+    structure, so the fp32 parity graph is byte-for-byte untouched and
+    each configuration keeps one compilation."""
+    return (plane.compression.kind in ("int8", "int4")
+            and not plane.compression.error_feedback
+            and plane.aggregator_name == "weighted_mean"
+            and plane.corruption_kind not in DELTA_KINDS)
 
 
 # Distinct fold_in tags keep the plane's RNG streams away from the FVN
@@ -143,6 +179,8 @@ def make_server_plane(
         aggregate=lambda deltas, n_k, pmask, key: agg_fn(
             deltas, n_k, pmask, hyp, key),
         corrupt=make_corruption_fn(corruption_kind, rate, scale),
+        aggregator_name=aggregator,
+        corruption_kind=corruption_kind,
     )
 
 
@@ -285,33 +323,49 @@ def _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn, base_key,
             state.params, cb, ci, state.round_idx)
     )(round_batch, jnp.arange(K))
 
+    # The round's client-key fan-out, built ONCE and threaded through
+    # every consumer (EF, plain compression, the code fast path) — the
+    # fold_in vmap used to be rebuilt per compress call site.
+    ckeys = (jax.vmap(lambda i: jax.random.fold_in(qkey, i))(jnp.arange(K))
+             if plane.compression.kind != "none" else None)
+
     ef = state.ef
-    if plane.compression.error_feedback:
-        # EF21: each client compresses delta + residual and keeps the
-        # compression error. Non-participants send nothing and keep
-        # their residual untouched — the pmask select matters because,
-        # unlike the plain path (where a dropped client's delta is
-        # exactly 0), C(0 + e_k) is generally nonzero.
-        ckeys = jax.vmap(lambda i: jax.random.fold_in(qkey, i))(jnp.arange(K))
-        target = jax.tree.map(lambda d, e: d + e, deltas, ef)
-        sent = jax.vmap(plane.compress)(target, ckeys)
-        sel = lambda a, b: jnp.where(
-            pmask.reshape((-1,) + (1,) * (a.ndim - 1)) > 0, a, b)
-        deltas = jax.tree.map(lambda s: sel(s, jnp.zeros_like(s)), sent)
-        ef = jax.tree.map(lambda t, s, e: sel(t - s, e), target, sent, ef)
-    elif plane.compression.kind != "none":
-        # each client quantizes its own delta with its own RNG stream
-        deltas = jax.vmap(plane.compress)(
-            deltas, jax.vmap(lambda i: jax.random.fold_in(qkey, i))(jnp.arange(K)))
+    if _code_fast_path(plane):
+        # Code-domain fast path: shared-scale negotiation + in-graph
+        # int32 code-sum reduction, ONE server dequant — per-client
+        # fp32 deltas are never rematerialized. Statically selected, so
+        # every other configuration keeps its existing graph. The
+        # corruption stage here is the honest identity (delta
+        # adversaries force the slow path), matching its cmask = 0.
+        wbar = code_domain_aggregate(plane.compression, deltas, n_k,
+                                     pmask, ckeys)
+        cmask = jnp.zeros((K,), jnp.float32)
+        stale = state.stale
+    else:
+        if plane.compression.error_feedback:
+            # EF21: each client compresses delta + residual and keeps
+            # the compression error. Non-participants send nothing and
+            # keep their residual untouched — the pmask select matters
+            # because, unlike the plain path (where a dropped client's
+            # delta is exactly 0), C(0 + e_k) is generally nonzero.
+            target = jax.tree.map(lambda d, e: d + e, deltas, ef)
+            sent = jax.vmap(plane.compress)(target, ckeys)
+            sel = lambda a, b: jnp.where(
+                pmask.reshape((-1,) + (1,) * (a.ndim - 1)) > 0, a, b)
+            deltas = jax.tree.map(lambda s: sel(s, jnp.zeros_like(s)), sent)
+            ef = jax.tree.map(lambda t, s, e: sel(t - s, e), target, sent, ef)
+        elif plane.compression.kind != "none":
+            # each client quantizes its own delta with its own RNG stream
+            deltas = jax.vmap(plane.compress)(deltas, ckeys)
 
-    # Adversary stage: corrupts what the server receives (the
-    # post-compression deltas). cmask is already pmask-masked — a
-    # corrupted non-participant contributes neither delta nor EF
-    # residual update; wire bytes are untouched (corrupted participants
-    # pay full uplink).
-    deltas, cmask, stale = plane.corrupt(xkey, deltas, pmask, state.stale)
+        # Adversary stage: corrupts what the server receives (the
+        # post-compression deltas). cmask is already pmask-masked — a
+        # corrupted non-participant contributes neither delta nor EF
+        # residual update; wire bytes are untouched (corrupted
+        # participants pay full uplink).
+        deltas, cmask, stale = plane.corrupt(xkey, deltas, pmask, state.stale)
 
-    wbar = plane.aggregate(deltas, n_k, pmask, akey)
+        wbar = plane.aggregate(deltas, n_k, pmask, akey)
 
     updates, opt_state = server_opt.update(wbar, state.opt_state, state.params)
     params = apply_updates(state.params, updates)

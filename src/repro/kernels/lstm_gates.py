@@ -5,8 +5,22 @@ two multiplies over (B, H) — on TPU a chain of small VPU ops whose
 HBM round-trips between unfused HLOs dominate the step at decode
 batch sizes. The kernel fuses them in one VMEM-resident pass.
 Gates layout: (B, 4, H) [i | f | g | o]; grid tiles (B, H).
+
+``lstm_gates_fused_vjp`` adds a custom-VJP wrapper whose backward is a
+second fused kernel: it saves only (gates, c) — the matmul outputs the
+training graph keeps alive anyway — recomputes the four cheap
+activations in VMEM and emits (dgates, dc_prev) in one pass. Without
+it, autodiff through the cell stores every intermediate activation
+(i, f, g, o, c_new, tanh(c_new): 6 extra (B, H) residuals *per scan
+step*) and replays the chain as ~a dozen unfused HLOs; the LSTM cell
+dominates the per-client ``lax.scan`` inside the federated round's
+vmapped local steps, so this backward is the round step's hottest
+gradient path.
 """
+
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -14,8 +28,8 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(g_ref, c_ref, h_out_ref, c_out_ref):
-    g = g_ref[0].astype(jnp.float32)      # (4, th)... block (1, 4, th)
-    c = c_ref[0].astype(jnp.float32)      # (th,)  block (1, th)
+    g = g_ref[0].astype(jnp.float32)  # (4, th)... block (1, 4, th)
+    c = c_ref[0].astype(jnp.float32)  # (th,)  block (1, th)
     i = jax.nn.sigmoid(g[0])
     f = jax.nn.sigmoid(g[1] + 1.0)
     gg = jnp.tanh(g[2])
@@ -26,8 +40,9 @@ def _kernel(g_ref, c_ref, h_out_ref, c_out_ref):
     c_out_ref[0] = c_new.astype(c_out_ref.dtype)
 
 
-def lstm_gates_fused(gates: jnp.ndarray, c: jnp.ndarray, *,
-                     th: int = 256, interpret: bool = False):
+def lstm_gates_fused(
+    gates: jnp.ndarray, c: jnp.ndarray, *, th: int = 256, interpret: bool = False
+):
     """gates: (B, 4H) preactivations [i|f|g|o]; c: (B, H).
     Returns (h_new, c_new) matching ref.lstm_gates_ref."""
     B, H4 = gates.shape
@@ -54,3 +69,80 @@ def lstm_gates_fused(gates: jnp.ndarray, c: jnp.ndarray, *,
         interpret=interpret,
     )(g3, c)
     return h_new, c_new
+
+
+def _bwd_kernel(g_ref, c_ref, dh_ref, dcn_ref, dg_ref, dc_ref):
+    g = g_ref[0].astype(jnp.float32)  # (4, th)
+    c = c_ref[0].astype(jnp.float32)  # (th,)
+    dh = dh_ref[0].astype(jnp.float32)
+    dcn = dcn_ref[0].astype(jnp.float32)
+    i = jax.nn.sigmoid(g[0])
+    f = jax.nn.sigmoid(g[1] + 1.0)
+    gg = jnp.tanh(g[2])
+    o = jax.nn.sigmoid(g[3])
+    t = jnp.tanh(f * c + i * gg)  # tanh(c_new), recomputed in VMEM
+    dc = dcn + dh * o * (1.0 - t * t)
+    dg_ref[0, 0] = (dc * gg * i * (1.0 - i)).astype(dg_ref.dtype)
+    dg_ref[0, 1] = (dc * c * f * (1.0 - f)).astype(dg_ref.dtype)
+    dg_ref[0, 2] = (dc * i * (1.0 - gg * gg)).astype(dg_ref.dtype)
+    dg_ref[0, 3] = (dh * t * o * (1.0 - o)).astype(dg_ref.dtype)
+    dc_ref[0] = (dc * f).astype(dc_ref.dtype)
+
+
+def lstm_gates_bwd_fused(gates, c, dh, dc_next, *, th: int = 256, interpret: bool = False):
+    """Fused backward of the cell: (gates, c, dh, dc_next) ->
+    (dgates (B, 4H), dc_prev (B, H)) in one VMEM pass, recomputing the
+    activations from the saved pre-activations instead of storing six
+    per-step residual tensors."""
+    B, H4 = gates.shape
+    H = H4 // 4
+    th = min(th, H)
+    assert H % th == 0, (H, th)
+    g3 = gates.reshape(B, 4, H)
+
+    dg3, dc_prev = pl.pallas_call(
+        _bwd_kernel,
+        grid=(B, H // th),
+        in_specs=[
+            pl.BlockSpec((1, 4, th), lambda b, hi: (b, 0, hi)),
+            pl.BlockSpec((1, th), lambda b, hi: (b, hi)),
+            pl.BlockSpec((1, th), lambda b, hi: (b, hi)),
+            pl.BlockSpec((1, th), lambda b, hi: (b, hi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 4, th), lambda b, hi: (b, 0, hi)),
+            pl.BlockSpec((1, th), lambda b, hi: (b, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 4, H), gates.dtype),
+            jax.ShapeDtypeStruct((B, H), c.dtype),
+        ],
+        interpret=interpret,
+    )(g3, c, dh, dc_next)
+    return dg3.reshape(B, H4), dc_prev
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _lstm_gates_vjp(gates, c, th, interpret):
+    return lstm_gates_fused(gates, c, th=th, interpret=interpret)
+
+
+def _lstm_gates_fwd(gates, c, th, interpret):
+    out = lstm_gates_fused(gates, c, th=th, interpret=interpret)
+    return out, (gates, c)
+
+
+def _lstm_gates_bwd(th, interpret, res, cts):
+    gates, c = res
+    dh, dc_next = cts
+    return lstm_gates_bwd_fused(gates, c, dh, dc_next, th=th, interpret=interpret)
+
+
+_lstm_gates_vjp.defvjp(_lstm_gates_fwd, _lstm_gates_bwd)
+
+
+def lstm_gates_fused_vjp(gates, c, *, th: int = 256, interpret: bool = False):
+    """The training-path entry point: fused forward AND fused custom-VJP
+    backward (autodiff through the raw ``pallas_call`` is unsupported,
+    and the unfused jnp backward is the round step's hot spot)."""
+    return _lstm_gates_vjp(gates, c, th, interpret)

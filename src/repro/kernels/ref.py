@@ -5,6 +5,7 @@ sweep shapes/dtypes and assert the kernels (interpret=True on CPU)
 match them. Production jnp fallbacks live in repro/models (blockwise
 formulations); these oracles materialize everything for clarity.
 """
+
 from __future__ import annotations
 
 import jax
@@ -18,7 +19,7 @@ def attention_ref(q, k, v, *, causal=True, window=None, q_offset=0, logit_softca
     B, Sq, H, D = q.shape
     Sk, Kv = k.shape[1], k.shape[2]
     G = H // Kv
-    qf = q.astype(jnp.float32).reshape(B, Sq, Kv, G, D) * (D ** -0.5)
+    qf = q.astype(jnp.float32).reshape(B, Sq, Kv, G, D) * (D**-0.5)
     s = jnp.einsum("bqkgd,bjkd->bqkgj", qf, k.astype(jnp.float32))
     if logit_softcap > 0:
         s = logit_softcap * jnp.tanh(s / logit_softcap)
@@ -41,7 +42,7 @@ def decode_attention_ref(q, k_cache, v_cache, pos, *, window=None):
     B, H, D = q.shape
     S, Kv = k_cache.shape[1], k_cache.shape[2]
     G = H // Kv
-    qf = q.astype(jnp.float32).reshape(B, Kv, G, D) * (D ** -0.5)
+    qf = q.astype(jnp.float32).reshape(B, Kv, G, D) * (D**-0.5)
     s = jnp.einsum("bkgd,bjkd->bkgj", qf, k_cache.astype(jnp.float32))
     j = jnp.arange(S)
     valid = j <= pos
@@ -60,12 +61,13 @@ def rnnt_joint_ref(enc_proj, pred_proj, w_out, bias, labels):
     bias: (V,); labels: (B, U1-? ) — (B, U1) label ids (last unused).
     Returns (blank_lp, label_lp): (B, T, U1).
     """
-    h = jnp.tanh(enc_proj[:, :, None, :].astype(jnp.float32)
-                 + pred_proj[:, None, :, :].astype(jnp.float32))
+    h = jnp.tanh(
+        enc_proj[:, :, None, :].astype(jnp.float32) + pred_proj[:, None, :, :].astype(jnp.float32)
+    )
     logits = h @ w_out.astype(jnp.float32) + bias.astype(jnp.float32)
     lse = jax.nn.logsumexp(logits, axis=-1)
     blank_lp = logits[..., 0] - lse
-    lbl = labels[:, None, :, None].astype(jnp.int32)            # (B,1,U1,1)
+    lbl = labels[:, None, :, None].astype(jnp.int32)  # (B,1,U1,1)
     lbl = jnp.broadcast_to(lbl, logits.shape[:3] + (1,))
     label_lp = jnp.take_along_axis(logits, lbl, axis=-1)[..., 0] - lse
     return blank_lp, label_lp
@@ -80,7 +82,7 @@ def nibble_pack_ref(codes):
     c = jnp.pad(c, (0, n % 2))
     pairs = c.reshape(-1, 2)
     b = pairs[:, 0] | (pairs[:, 1] << 4)
-    return (((b & 0xFF) ^ 0x80) - 0x80).astype(jnp.int8)   # two's-complement byte
+    return (((b & 0xFF) ^ 0x80) - 0x80).astype(jnp.int8)  # two's-complement byte
 
 
 def nibble_unpack_ref(packed, n: int):
@@ -97,6 +99,33 @@ def dequantize_ref(codes, scale):
     return codes.astype(jnp.float32) * scale
 
 
+def quantize_codes_with_scale_ref(x, scale, u, levels: float):
+    """Stochastic-round/clamp oracle for a *given* scale: (n,) f32 +
+    scale () + uniforms (n,) (None = nearest rounding) -> (n,) int8
+    codes in [-levels, levels].
+
+    The clamp precedes the rounding draw (the PR 3 ulp regression: f32
+    division can land the absmax coordinate one ulp outside the grid,
+    and a boundary draw would round to levels+1 and wrap the int8
+    cast). ``u < frac`` is exactly ``jax.random.bernoulli``'s
+    uniform-threshold draw, so given the same key this matches the
+    historical bernoulli-based path bit for bit."""
+    y = jnp.clip(x.astype(jnp.float32) / scale, -levels, levels)
+    if u is None:
+        return jnp.round(y).astype(jnp.int8)
+    lo = jnp.floor(y)
+    return (lo + (u < (y - lo)).astype(jnp.float32)).astype(jnp.int8)
+
+
+def quantize_pack_ref(x, scale, u, bits: int):
+    """Fused quantize->pack oracle: one tensor's intN wire buffer from
+    (x, shared-or-own scale, uniforms). int8 -> the codes themselves;
+    int4 -> the nibble-packed bytes (pack_ref of the codes)."""
+    levels = 2.0 ** (bits - 1) - 1.0
+    codes = quantize_codes_with_scale_ref(x, scale, u, levels)
+    return nibble_pack_ref(codes) if bits == 4 else codes
+
+
 def topk_unpack_ref(values, idx, n: int):
     """Scatter a top-k (value, index) payload into a dense (n,) f32."""
     return jnp.zeros((n,), jnp.float32).at[idx].set(values.astype(jnp.float32))
@@ -108,9 +137,9 @@ def lstm_gates_ref(gates, c):
     hd = h4 // 4
     gf = gates.astype(jnp.float32)
     i = jax.nn.sigmoid(gf[..., :hd])
-    f = jax.nn.sigmoid(gf[..., hd: 2 * hd] + 1.0)
-    g = jnp.tanh(gf[..., 2 * hd: 3 * hd])
-    o = jax.nn.sigmoid(gf[..., 3 * hd:])
+    f = jax.nn.sigmoid(gf[..., hd : 2 * hd] + 1.0)
+    g = jnp.tanh(gf[..., 2 * hd : 3 * hd])
+    o = jax.nn.sigmoid(gf[..., 3 * hd :])
     c_new = f * c.astype(jnp.float32) + i * g
     h_new = o * jnp.tanh(c_new)
     return h_new.astype(gates.dtype), c_new.astype(c.dtype)

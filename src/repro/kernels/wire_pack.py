@@ -10,10 +10,19 @@ real packed buffer, not an accounting fiction:
 - ``dequantize``: intN codes x fp32 scale -> f32, fused in one
   VMEM-resident pass (the server-side unpack of every intN payload).
 - ``topk_unpack``: scatter a (value, index) payload into the dense
-  tensor. Serial over k inside one VMEM block — k is a few percent of
-  the tensor, and the sorted-by-magnitude payload makes the stores
-  conflict-free; a production variant would segment the index space
-  across the grid.
+  tensor. Two variants: the original serial kernel (all k stores into
+  one VMEM-resident block) and the *segmented* scatter
+  (``topk_unpack_segmented_pallas``) that sorts the payload by index
+  once, computes per-segment bounds with a searchsorted, and lets each
+  grid cell store only its own contiguous slice — small VMEM blocks,
+  pipelined output windows, and no serial pass over the whole tensor.
+- ``quantize_pack``: the *fused* uplink client kernel — grid-divide by
+  the (shared or per-tensor) scale, clamp into the code grid,
+  stochastic-round against a uniform field, and (for int4) nibble-pack
+  — one VMEM pass per leaf instead of a quantize HLO chain followed by
+  a separate pack pass. The absmax reduction stays outside so the
+  4-byte scales can be max-reduced across the client axis first
+  (shared-scale negotiation: exact code-domain sums).
 
 Each kernel has a jnp oracle in ``ref.py`` (the parity target,
 interpret=True on CPU) and a public auto-dispatch wrapper (Pallas on
@@ -22,7 +31,10 @@ model kernels). Pack->unpack is the identity on codes by construction,
 which is what makes the packed compression path bit-exact against the
 in-graph quantize->dequantize (tested in tests/test_wire_pack.py).
 """
+
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +42,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import ref
 
-_TILE = 512                     # lane-aligned (4 x 128) payload tile
+_TILE = 512  # lane-aligned (4 x 128) payload tile
 
 
 def _on_cpu() -> bool:
@@ -43,6 +55,7 @@ def _pad_to(x, m: int):
 
 # ------------------------------------------------------------ nibble pack
 
+
 def _nibble_pack_kernel(ev_ref, od_ref, out_ref):
     ev = ev_ref[...].astype(jnp.int32) & 0xF
     od = od_ref[...].astype(jnp.int32) & 0xF
@@ -54,8 +67,8 @@ def nibble_pack_pallas(codes, *, tile: int = _TILE, interpret: bool = False):
     """codes: (n,) int8 in [-8, 7] -> ((n+1)//2,) int8 nibble-packed."""
     n = codes.shape[0]
     nb = (n + 1) // 2
-    c = _pad_to(codes, 2 * tile).reshape(-1, 2)       # (nbp, 2) pairs
-    ev, od = c[:, 0][None, :], c[:, 1][None, :]        # (1, nbp)
+    c = _pad_to(codes, 2 * tile).reshape(-1, 2)  # (nbp, 2) pairs
+    ev, od = c[:, 0][None, :], c[:, 1][None, :]  # (1, nbp)
     nbp = ev.shape[1]
     out = pl.pallas_call(
         _nibble_pack_kernel,
@@ -74,8 +87,7 @@ def _nibble_unpack_kernel(b_ref, lo_ref, hi_ref):
     hi_ref[...] = ((((b >> 4) & 0xF) ^ 8) - 8).astype(jnp.int8)
 
 
-def nibble_unpack_pallas(packed, n: int, *, tile: int = _TILE,
-                         interpret: bool = False):
+def nibble_unpack_pallas(packed, n: int, *, tile: int = _TILE, interpret: bool = False):
     """packed: ((n+1)//2,) int8 -> (n,) int8 sign-extended codes."""
     b = _pad_to(packed, tile)[None, :]
     nbp = b.shape[1]
@@ -92,12 +104,12 @@ def nibble_unpack_pallas(packed, n: int, *, tile: int = _TILE,
 
 # -------------------------------------------------------------- dequantize
 
+
 def _dequantize_kernel(c_ref, s_ref, out_ref):
     out_ref[...] = c_ref[...].astype(jnp.float32) * s_ref[0, 0]
 
 
-def dequantize_pallas(codes, scale, *, tile: int = _TILE,
-                      interpret: bool = False):
+def dequantize_pallas(codes, scale, *, tile: int = _TILE, interpret: bool = False):
     """codes: (n,) int8 + fp32 scale () -> (n,) f32, one fused pass."""
     n = codes.shape[0]
     c = _pad_to(codes, tile)[None, :]
@@ -105,8 +117,10 @@ def dequantize_pallas(codes, scale, *, tile: int = _TILE,
     out = pl.pallas_call(
         _dequantize_kernel,
         grid=(npad // tile,),
-        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i)),
-                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
         out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, npad), jnp.float32),
         interpret=interpret,
@@ -114,7 +128,119 @@ def dequantize_pallas(codes, scale, *, tile: int = _TILE,
     return out[0, :n]
 
 
+# ---------------------------------------------------- fused quantize->pack
+
+
+def _quantize_kernel(levels: float, x_ref, s_ref, u_ref, out_ref):
+    y = jnp.clip(x_ref[...] / s_ref[0, 0], -levels, levels)
+    lo = jnp.floor(y)
+    out_ref[...] = (lo + (u_ref[...] < (y - lo)).astype(jnp.float32)).astype(jnp.int8)
+
+
+def _quantize_nearest_kernel(levels: float, x_ref, s_ref, out_ref):
+    y = jnp.clip(x_ref[...] / s_ref[0, 0], -levels, levels)
+    out_ref[...] = jnp.round(y).astype(jnp.int8)
+
+
+def _pack_byte(qe, qo):
+    b = (qe.astype(jnp.int32) & 0xF) | ((qo.astype(jnp.int32) & 0xF) << 4)
+    return (((b & 0xFF) ^ 0x80) - 0x80).astype(jnp.int8)
+
+
+def _quantize_pack4_kernel(xe_ref, xo_ref, s_ref, ue_ref, uo_ref, out_ref):
+    s = s_ref[0, 0]
+
+    def q(x_ref, u_ref):
+        y = jnp.clip(x_ref[...] / s, -7.0, 7.0)
+        lo = jnp.floor(y)
+        return (lo + (u_ref[...] < (y - lo)).astype(jnp.float32)).astype(jnp.int8)
+
+    out_ref[...] = _pack_byte(q(xe_ref, ue_ref), q(xo_ref, uo_ref))
+
+
+def _quantize_pack4_nearest_kernel(xe_ref, xo_ref, s_ref, out_ref):
+    s = s_ref[0, 0]
+
+    def q(x_ref):
+        return jnp.round(jnp.clip(x_ref[...] / s, -7.0, 7.0)).astype(jnp.int8)
+
+    out_ref[...] = _pack_byte(q(xe_ref), q(xo_ref))
+
+
+def quantize_with_scale_pallas(
+    x, scale, u, bits: int, *, tile: int = _TILE, interpret: bool = False
+):
+    """x: (n,) f32 + scale () [+ uniforms u: (n,) f32, None = nearest]
+    -> (n,) int8 codes in [-levels, levels]: scale-divide, clamp and
+    stochastic-round fused in one VMEM pass (the quantize half of the
+    fused uplink kernel, for the unpacked int8/int4 planes)."""
+    levels = 2.0 ** (bits - 1) - 1.0
+    n = x.shape[0]
+    xp = _pad_to(x, tile)[None, :]
+    npad = xp.shape[1]
+    spec = pl.BlockSpec((1, tile), lambda i: (0, i))
+    sspec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    if u is None:
+        out = pl.pallas_call(
+            functools.partial(_quantize_nearest_kernel, levels),
+            grid=(npad // tile,),
+            in_specs=[spec, sspec],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct((1, npad), jnp.int8),
+            interpret=interpret,
+        )(xp, scale.reshape(1, 1))
+    else:
+        out = pl.pallas_call(
+            functools.partial(_quantize_kernel, levels),
+            grid=(npad // tile,),
+            in_specs=[spec, sspec, spec],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct((1, npad), jnp.int8),
+            interpret=interpret,
+        )(xp, scale.reshape(1, 1), _pad_to(u, tile)[None, :])
+    return out[0, :n]
+
+
+def quantize_pack4_pallas(x, scale, u, *, tile: int = _TILE, interpret: bool = False):
+    """Fully fused int4 client kernel: (n,) f32 + scale [+ uniforms]
+    -> ((n+1)//2,) int8 nibble-packed wire bytes. Quantization and the
+    even/odd nibble interleave happen in the same VMEM pass — the codes
+    are never materialized in HBM."""
+    n = x.shape[0]
+    nb = (n + 1) // 2
+
+    def pairs(a):
+        p = _pad_to(a, 2 * tile).reshape(-1, 2)
+        return p[:, 0][None, :], p[:, 1][None, :]
+
+    xe, xo = pairs(x)
+    nbp = xe.shape[1]
+    spec = pl.BlockSpec((1, tile), lambda i: (0, i))
+    sspec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    if u is None:
+        out = pl.pallas_call(
+            _quantize_pack4_nearest_kernel,
+            grid=(nbp // tile,),
+            in_specs=[spec, spec, sspec],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct((1, nbp), jnp.int8),
+            interpret=interpret,
+        )(xe, xo, scale.reshape(1, 1))
+    else:
+        ue, uo = pairs(u)
+        out = pl.pallas_call(
+            _quantize_pack4_kernel,
+            grid=(nbp // tile,),
+            in_specs=[spec, spec, sspec, spec, spec],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct((1, nbp), jnp.int8),
+            interpret=interpret,
+        )(xe, xo, scale.reshape(1, 1), ue, uo)
+    return out[0, :nb]
+
+
 # ------------------------------------------------------------- topk unpack
+
 
 def _topk_unpack_kernel(v_ref, i_ref, out_ref):
     out_ref[...] = jnp.zeros_like(out_ref)
@@ -129,7 +255,11 @@ def _topk_unpack_kernel(v_ref, i_ref, out_ref):
 
 
 def topk_unpack_pallas(values, idx, n: int, *, interpret: bool = False):
-    """(k,) f32 values + (k,) int32 flat indices -> dense (n,) f32."""
+    """(k,) f32 values + (k,) int32 flat indices -> dense (n,) f32.
+
+    The serial variant: every store lands in one n-wide VMEM block.
+    Kept as the small-n fallback and the parity reference for the
+    segmented kernel below."""
     out = pl.pallas_call(
         _topk_unpack_kernel,
         out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
@@ -138,9 +268,59 @@ def topk_unpack_pallas(values, idx, n: int, *, interpret: bool = False):
     return out[0]
 
 
+def _topk_unpack_seg_kernel(seg: int, b_ref, v_ref, i_ref, out_ref):
+    """One grid cell owns output segment [pid*seg, (pid+1)*seg): the
+    payload arrives sorted by index, so this cell's entries are the
+    contiguous slice b[pid] .. b[pid+1] of the payload — a dynamic-
+    bound loop over *its own* entries only, instead of every cell (or
+    one serial pass) scanning all k."""
+    pid = pl.program_id(0)
+    base = pid * seg
+    start = pl.load(b_ref, (slice(0, 1), pl.ds(pid, 1)))[0, 0]
+    end = pl.load(b_ref, (slice(0, 1), pl.ds(pid + 1, 1)))[0, 0]
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+    def body(j, carry):
+        idx = pl.load(i_ref, (slice(0, 1), pl.ds(j, 1)))[0, 0]
+        val = pl.load(v_ref, (slice(0, 1), pl.ds(j, 1)))
+        pl.store(out_ref, (slice(0, 1), pl.ds(idx - base, 1)), val)
+        return carry
+
+    jax.lax.fori_loop(start, end, body, 0)
+
+
+def topk_unpack_segmented_pallas(values, idx, n: int, *, seg: int = 2048, interpret: bool = False):
+    """Segmented (grid-parallel) top-k scatter: sort the (value, index)
+    payload by index, searchsorted the segment boundaries, and give
+    each grid cell one seg-wide output window plus the payload slice
+    that lands in it. VMEM holds one segment (not the whole tensor),
+    output windows pipeline, and total store work stays O(k)."""
+    k = values.shape[0]
+    seg = min(seg, max(n, 1))
+    npad = n + (-n) % seg
+    nseg = npad // seg
+    order = jnp.argsort(idx)
+    sv, si = values[order], idx[order]
+    bounds = jnp.searchsorted(si, jnp.arange(nseg + 1, dtype=jnp.int32) * seg).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_topk_unpack_seg_kernel, seg),
+        grid=(nseg,),
+        in_specs=[
+            pl.BlockSpec((1, nseg + 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, seg), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, npad), jnp.float32),
+        interpret=interpret,
+    )(bounds[None, :], sv[None, :], si[None, :])
+    return out[0, :n]
+
+
 # ---------------------------------------------------- public auto-dispatch
 # Pallas on TPU; the jnp oracle is the CPU production path (interpret
 # mode is for tests only — same convention as repro.kernels.ops).
+
 
 def nibble_pack(codes):
     if _on_cpu():
@@ -160,7 +340,40 @@ def dequantize(codes, scale):
     return dequantize_pallas(codes, jnp.asarray(scale, jnp.float32))
 
 
+# Below this many output elements the serial kernel's single block is
+# cheaper than sorting the payload + a multi-cell grid.
+_SEG_MIN_N = 4096
+
+
 def topk_unpack(values, idx, n: int):
     if _on_cpu():
         return ref.topk_unpack_ref(values, idx, n)
-    return topk_unpack_pallas(values, idx, n)
+    if n < _SEG_MIN_N:
+        return topk_unpack_pallas(values, idx, n)
+    return topk_unpack_segmented_pallas(values, idx, n)
+
+
+def quantize_with_scale(x, scale, u, bits: int):
+    """Fused scale-divide -> clamp -> (stochastic) round: x (any
+    shape) -> int8 codes shaped like x. ``u`` is the uniform rounding
+    field (x-shaped; None = nearest). Bit-identical to the historical
+    quantize_codes math for the same key — ``u < frac`` IS
+    jax.random.bernoulli's draw."""
+    if _on_cpu():
+        levels = 2.0 ** (bits - 1) - 1.0
+        return ref.quantize_codes_with_scale_ref(x, scale, u, levels)
+    flat = x.reshape(-1)
+    uf = None if u is None else u.reshape(-1)
+    out = quantize_with_scale_pallas(flat, jnp.asarray(scale, jnp.float32), uf, bits)
+    return out.reshape(jnp.shape(x))
+
+
+def quantize_pack(x, scale, u, bits: int):
+    """Fused uplink client kernel: (n,) f32 -> the intN wire buffer
+    (int8: the codes; int4: nibble-packed bytes), quantized against a
+    caller-supplied (shared or per-tensor) scale in one pass."""
+    if _on_cpu():
+        return ref.quantize_pack_ref(x, scale, u, bits)
+    if bits == 4:
+        return quantize_pack4_pallas(x, jnp.asarray(scale, jnp.float32), u)
+    return quantize_with_scale_pallas(x, jnp.asarray(scale, jnp.float32), u, bits)

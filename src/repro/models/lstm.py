@@ -47,6 +47,27 @@ def lstm_gates(gates: jnp.ndarray, c: jnp.ndarray):
     return h_new.astype(gates.dtype), c_new.astype(c.dtype)
 
 
+def _fused_tile(h: int):
+    """Largest lane-friendly tile dividing h (None: shape won't tile)."""
+    for th in (256, 128):
+        if h % th == 0:
+            return th
+    return None
+
+
+def _lstm_gates_dispatch(gates: jnp.ndarray, c: jnp.ndarray):
+    """TPU: the Pallas fused kernel with its fused custom-VJP backward
+    (the cell's backward dominates the federated round's per-client
+    scan). CPU and non-tiling hidden sizes: the jnp reference — same
+    math, XLA-fused, and what every parity test pins."""
+    th = _fused_tile(c.shape[-1]) if gates.ndim == 2 else None
+    if th is None or jax.default_backend() == "cpu":
+        return lstm_gates(gates, c)
+    from repro.kernels.lstm_gates import lstm_gates_fused_vjp
+
+    return lstm_gates_fused_vjp(gates, c, th=th)
+
+
 def lstm_cell_step(p, x, h, c):
     """x: (B, d_in); h, c: (B, d_hidden)."""
     gates = x @ p["w_ih"].astype(x.dtype) + h @ p["w_hh"].astype(x.dtype) + p["b"].astype(x.dtype)
@@ -70,7 +91,7 @@ def lstm_layer(p, xs, h0=None, c0=None, unroll: int = 1, chunk: int = 0):
     def step(carry, xg_t):
         h, c = carry
         gates = xg_t + h @ p["w_hh"].astype(xg_t.dtype)
-        h, c = lstm_gates(gates, c)
+        h, c = _lstm_gates_dispatch(gates, c)
         return (h, c), h
 
     if chunk:

@@ -46,9 +46,16 @@ def test_identical_passes():
 
 def test_classify_paths():
     assert classify("t1.pass") == "bool"
-    assert classify("kernels.us_per_call.fed_round_tiny_rnnt") == "time"
+    assert classify("kernels.us_per_call.fed_round_tiny_rnnt") == "fed_time"
+    assert classify("kernels.us_per_call.fed_round_tiny_rnnt_int4_packed") == "fed_time"
+    assert classify("kernels.us_per_call.attention_blockwise_1k") == "time"
+    assert classify("kernels.us_per_call.wire_plane_int8") == "time"
     assert classify("data.pack_us") == "time"
     assert classify("data.pack_speedup") == "speedup"
+    # a speedup ratio keeps its direction even under a timing-ish path
+    assert classify("kernels.us_per_call.wire_plane_int8_speedup") == "speedup"
+    assert classify("kernels.wire_plane.int8_speedup") == "speedup"
+    assert classify("kernels.code_fast_path.int8_le_fp32.pass") == "bool"
     assert classify("t1.final_loss.E0") == "loss"
     assert classify("smoke") is None
 
@@ -60,12 +67,17 @@ def test_flatten_nested():
 
 
 def test_time_regression_fails_at_ratio():
-    # 3x is the default ceiling: 299 passes, 301 fails
-    rows, failed = gate(fresh_copy(**{"kernels.us_per_call.fed_round_tiny_rnnt": 299.0}))
+    # the fed-round metrics are the tightened class: 2x, not 3x
+    rows, failed = gate(fresh_copy(**{"kernels.us_per_call.fed_round_tiny_rnnt": 199.0}))
     assert not failed
-    rows, failed = gate(fresh_copy(**{"kernels.us_per_call.fed_round_tiny_rnnt": 301.0}))
+    rows, failed = gate(fresh_copy(**{"kernels.us_per_call.fed_round_tiny_rnnt": 201.0}))
     assert failed
     assert failed_paths(rows) == {"kernels.us_per_call.fed_round_tiny_rnnt"}
+    # generic kernel timings keep the generous 3x ceiling
+    rows, failed = gate(fresh_copy(**{"data.pack_us": 149.0}))
+    assert not failed
+    rows, failed = gate(fresh_copy(**{"data.pack_us": 151.0}))
+    assert failed and failed_paths(rows) == {"data.pack_us"}
 
 
 def test_time_improvement_never_fails():
@@ -114,9 +126,30 @@ def test_smoke_flag_must_match():
 
 def test_knobs_are_tunable():
     f = fresh_copy(**{"kernels.us_per_call.fed_round_tiny_rnnt": 150.0})
-    _, failed = gate(f, time_ratio=1.2)
+    _, failed = gate(f, fed_time_ratio=1.2)
     assert failed
-    _, failed = gate(f, time_ratio=2.0)
+    _, failed = gate(f, fed_time_ratio=2.0)
+    assert not failed
+    f = fresh_copy(**{"data.pack_us": 100.0})
+    _, failed = gate(f, time_ratio=1.5)
+    assert failed
+    _, failed = gate(f, time_ratio=2.5)
+    assert not failed
+
+
+def test_fast_path_claim_never_flips():
+    """The 'quantized round <= fp32 round' claims ride the never-flip
+    bool class: once the baseline records them True, a fresh run where
+    the ordering inverts fails the gate."""
+    base = fresh_copy(
+        **{"kernels.code_fast_path.int8_le_fp32.pass": True,
+           "kernels.code_fast_path.int4_packed_le_fp32.pass": True})
+    flipped = json.loads(json.dumps(base))
+    flipped["kernels"]["code_fast_path"]["int4_packed_le_fp32"]["pass"] = False
+    rows, failed = run_gate(base, flipped, args())
+    assert failed
+    assert "kernels.code_fast_path.int4_packed_le_fp32.pass" in failed_paths(rows)
+    rows, failed = run_gate(base, base, args())
     assert not failed
 
 
@@ -129,7 +162,10 @@ def test_committed_baseline_matches_fresh_schema():
     flat = flatten(baseline)
     assert flat.get("smoke") is True
     kinds = {classify(p) for p in flat}
-    assert {"bool", "time", "speedup", "loss"} <= kinds
+    assert {"bool", "time", "fed_time", "speedup", "loss"} <= kinds
+    # the code-fast-path ordering claims are committed as never-flip
+    assert flat.get("kernels.code_fast_path.int8_le_fp32.pass") is True
+    assert flat.get("kernels.code_fast_path.int4_packed_le_fp32.pass") is True
     rows, failed = run_gate(baseline, baseline, args())
     assert not failed
 

@@ -1,0 +1,333 @@
+"""Code-domain aggregation fast path: shared-scale negotiation,
+exact int32 code sums, and parity against dequantize-then-weighted-mean
+(the slow path's semantics on the same shared-scale codes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FederatedPlan, CompressionConfig, init_server_state, make_round_step
+from repro.core.compression import (
+    code_domain_aggregate,
+    fastpath_leaf_keys,
+    quantize_codes_with_scale,
+    shared_leaf_scale,
+    sum_packed_codes,
+    _BITS,
+)
+from repro.core.fedavg import _code_fast_path, plan_server_plane
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - deterministic fallback below
+    HAVE_HYPOTHESIS = False
+
+
+def _client_keys(seed, K):
+    key = jax.random.PRNGKey(seed)
+    return key, jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(K))
+
+
+def _tree(rng, K, shapes):
+    return {f"l{i}": jnp.asarray(rng.normal(size=(K,) + s), jnp.float32)
+            for i, s in enumerate(shapes)}
+
+
+def _reference_wbar(cfg, deltas, n_k, pmask, ckeys):
+    """Dequantize-then-weighted-mean over the SAME shared-scale codes
+    the fast path transmits: the slow-path semantics of the negotiated
+    wire protocol, computed leaf by leaf in f64 so the comparison
+    target carries no accumulated f32 rounding of its own."""
+    bits = _BITS[cfg.kind]
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    n = max(float(n_k.sum()), 1.0)
+    w = np.asarray(n_k, np.float64) / n
+    out = []
+    for li, d in enumerate(leaves):
+        scale = shared_leaf_scale(d, pmask, bits)
+        lkeys = fastpath_leaf_keys(ckeys, li)
+        K = d.shape[0]
+        flat = d.reshape(K, -1)
+        codes = np.stack([
+            np.asarray(quantize_codes_with_scale(
+                flat[k], lkeys[k], scale, bits, cfg.stochastic))
+            for k in range(K)])
+        dequant = codes.astype(np.float64) * float(scale)   # K dequants
+        out.append((w @ dequant).reshape(d.shape[1:]))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@pytest.mark.parametrize("kind,packed", [("int8", False), ("int8", True),
+                                         ("int4", False), ("int4", True)])
+def test_fast_path_matches_dequantize_then_mean_equal_weights(kind, packed):
+    """Equal weights: the int32 code sum is exact, so the only
+    divergence from dequantize-then-mean is final f32 rounding — the
+    fast path computes fl(csum * fl(scale/n)), two roundings against
+    the f64 reference's one, i.e. <= 2 ulp per coordinate (the K
+    dequants and K-term f32 accumulation of the slow path are gone;
+    bit-exactness proper holds on power-of-two scales, tested below)."""
+    rng = np.random.default_rng(3)
+    K = 5
+    deltas = _tree(rng, K, [(33,), (16, 8), (1,)])
+    n_k = jnp.full((K,), 12.0)
+    pmask = jnp.ones((K,))
+    _, ckeys = _client_keys(0, K)
+    cfg = CompressionConfig(kind=kind, packed=packed)
+    fast = code_domain_aggregate(cfg, deltas, n_k, pmask, ckeys)
+    ref = _reference_wbar(cfg, deltas, n_k, pmask, ckeys)
+    for a, b in zip(jax.tree.leaves(fast), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(
+            np.asarray(a), b.astype(np.float32), rtol=3e-7, atol=1e-9,
+            err_msg="fast path beyond 2 ulp of the exact reference")
+
+
+def test_fast_path_bit_exact_on_pow2_scale_equal_weights():
+    """Power-of-two shared scale: every product code * scale is exact
+    in f32, so code-domain aggregation and dequantize-then-weighted-
+    mean are the SAME real number — bit-exact, no tolerance."""
+    K, n = 4, 64
+    rng = np.random.default_rng(9)
+    # absmax 8.0 in every client's leaf => shared scale = 8/127... not
+    # pow2; build codes directly instead: values already on a pow2 grid
+    scale = np.float32(0.03125)                      # 2**-5
+    codes = rng.integers(-127, 128, size=(K, n)).astype(np.float32)
+    deltas = {"w": jnp.asarray(codes * scale)}
+    # absmax coordinate pinned so the negotiated scale is exactly pow2
+    deltas["w"] = deltas["w"].at[:, 0].set(127.0 * scale)
+    n_k = jnp.full((K,), 4.0)
+    pmask = jnp.ones((K,))
+    _, ckeys = _client_keys(1, K)
+    cfg = CompressionConfig(kind="int8", stochastic=False)
+    s = shared_leaf_scale(deltas["w"], pmask, 8)
+    assert float(s) == 0.03125
+    fast = np.asarray(code_domain_aggregate(cfg, deltas, n_k, pmask, ckeys)["w"])
+    # slow-path semantics in f32: K dequants then the weighted mean
+    lkeys = fastpath_leaf_keys(ckeys, 0)
+    deq = jnp.stack([
+        quantize_codes_with_scale(deltas["w"][k], lkeys[k], s, 8, False)
+        .astype(jnp.float32) * s
+        for k in range(K)])
+    slow = np.asarray(jnp.tensordot(n_k / n_k.sum(), deq, axes=(0, 0)))
+    np.testing.assert_array_equal(fast, slow)
+
+
+def _weighted_case(seed, weights):
+    rng = np.random.default_rng(seed)
+    K = len(weights)
+    deltas = _tree(rng, K, [(128,)])
+    n_k = jnp.asarray(weights, jnp.float32)
+    pmask = jnp.ones((K,))
+    _, ckeys = _client_keys(seed, K)
+    return deltas, n_k, pmask, ckeys
+
+
+@pytest.mark.parametrize("kind", ["int8", "int4"])
+def test_fast_path_weighted_within_stochastic_tolerance(kind):
+    """Example weighting: the weighted int32 code sum is still exact
+    integer arithmetic, so the fast path matches the f64 reference to
+    f32 rounding; against the *unquantized* weighted mean it stays
+    within one stochastic-rounding grid cell."""
+    deltas, n_k, pmask, ckeys = _weighted_case(11, [8, 2, 16, 1])
+    cfg = CompressionConfig(kind=kind)
+    fast = np.asarray(jax.tree.leaves(
+        code_domain_aggregate(cfg, deltas, n_k, pmask, ckeys))[0])
+    ref = np.asarray(jax.tree.leaves(
+        _reference_wbar(cfg, deltas, n_k, pmask, ckeys))[0])
+    np.testing.assert_allclose(fast, ref, rtol=0, atol=1e-6)
+    # quantization error bound: |wbar - exact mean| <= shared grid step
+    exact = np.tensordot(np.asarray(n_k) / float(n_k.sum()),
+                         np.asarray(deltas["l0"]), axes=(0, 0))
+    step = float(shared_leaf_scale(deltas["l0"], pmask, _BITS[kind]))
+    assert np.abs(fast - exact).max() <= step + 1e-6
+
+
+def test_shared_scale_excludes_non_participants():
+    """A dropped client's (never-transmitted) huge delta must not
+    coarsen the cohort's negotiated grid."""
+    K = 3
+    d = jnp.asarray(np.ones((K, 8), np.float32))
+    d = d.at[2].mul(1000.0)
+    pmask = jnp.asarray([1.0, 1.0, 0.0])
+    s_masked = shared_leaf_scale(d, pmask, 8)
+    s_full = shared_leaf_scale(d, jnp.ones((K,)), 8)
+    np.testing.assert_allclose(float(s_masked), 1.0 / 127.0, rtol=1e-6)
+    np.testing.assert_allclose(float(s_full), 1000.0 / 127.0, rtol=1e-6)
+    # all-dropped (cohort rescue guarantees >= 1 participant in the
+    # engine; the helper still guards the degenerate scale)
+    assert float(shared_leaf_scale(jnp.zeros((K, 8)), pmask, 8) ) > 0
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           kind=st.sampled_from(["int8", "int4"]),
+           packed=st.booleans(),
+           weights=st.lists(st.integers(0, 50), min_size=2, max_size=6))
+    def test_fast_path_parity_property(seed, kind, packed, weights):
+        if sum(weights) == 0:
+            weights[0] = 1
+        deltas, n_k, pmask, ckeys = _weighted_case(seed, weights)
+        cfg = CompressionConfig(kind=kind, packed=packed)
+        fast = np.asarray(jax.tree.leaves(
+            code_domain_aggregate(cfg, deltas, n_k, pmask, ckeys))[0])
+        ref = np.asarray(jax.tree.leaves(
+            _reference_wbar(cfg, deltas, n_k, pmask, ckeys))[0])
+        np.testing.assert_allclose(fast, ref, rtol=0, atol=1e-6)
+
+else:  # deterministic fallback sweep
+
+    @pytest.mark.parametrize("seed,kind,packed,weights", [
+        (0, "int8", False, [3, 1]), (1, "int4", True, [5, 0, 2]),
+        (2, "int8", True, [1, 1, 1, 7]), (3, "int4", False, [50, 2, 9]),
+    ])
+    def test_fast_path_parity_property(seed, kind, packed, weights):
+        deltas, n_k, pmask, ckeys = _weighted_case(seed, weights)
+        cfg = CompressionConfig(kind=kind, packed=packed)
+        fast = np.asarray(jax.tree.leaves(
+            code_domain_aggregate(cfg, deltas, n_k, pmask, ckeys))[0])
+        ref = np.asarray(jax.tree.leaves(
+            _reference_wbar(cfg, deltas, n_k, pmask, ckeys))[0])
+        np.testing.assert_allclose(fast, ref, rtol=0, atol=1e-6)
+
+
+# ----------------------------------------------------- engine selection
+
+def _plane(plan):
+    return plan_server_plane(plan)
+
+
+def test_fast_path_static_selection():
+    """The fast path is compile-time structure: quantizing planes under
+    the paper's weighted mean take it; anything needing per-client fp32
+    deltas (robust aggregators, EF residuals, delta adversaries) and
+    the fp32/topk planes keep the existing graph."""
+    from repro.core.plan import CorruptionConfig
+
+    on = [FederatedPlan(compression=CompressionConfig(kind="int8")),
+          FederatedPlan(compression=CompressionConfig(kind="int4", packed=True)),
+          FederatedPlan(compression=CompressionConfig(kind="int8"),
+                        corruption=CorruptionConfig(kind="label_shuffle",
+                                                    rate=0.3))]
+    for plan in on:
+        assert _code_fast_path(_plane(plan)), plan
+
+    off = [FederatedPlan(),
+           FederatedPlan(compression=CompressionConfig(kind="topk")),
+           FederatedPlan(compression=CompressionConfig(kind="int8"),
+                         aggregator="trimmed_mean"),
+           FederatedPlan(compression=CompressionConfig(kind="int8",
+                                                       error_feedback=True)),
+           FederatedPlan(compression=CompressionConfig(kind="int8"),
+                         corruption=CorruptionConfig(kind="sign_flip",
+                                                     rate=0.3))]
+    for plan in off:
+        assert not _code_fast_path(_plane(plan)), plan
+
+
+def _round_pieces():
+    W = np.random.default_rng(42).normal(size=(4, 2)).astype(np.float32)
+
+    def loss_fn(params, batch, rng):
+        pred = batch["x"] @ params["w"]
+        w = batch["weight"]
+        l = jnp.sum((pred - batch["y"]) ** 2 * w[:, None]) / jnp.maximum(w.sum(), 1)
+        return l, {}
+
+    def make_batch(K, S, b, seed=0):
+        r = np.random.default_rng(seed)
+        x = r.normal(size=(K, S, b, 4)).astype(np.float32)
+        return {"x": jnp.array(x), "y": jnp.array(x @ W),
+                "weight": jnp.ones((K, S, b), jnp.float32)}
+
+    return loss_fn, make_batch
+
+
+def test_fast_path_round_wire_metrics_and_convergence():
+    """Engine-level: the fast path reports byte-identical wire metrics
+    to the accounting formulas (CFMQ parity) and still trains."""
+    from repro.core.compression import client_wire_bytes
+
+    loss_fn, make_batch = _round_pieces()
+    params0 = {"w": jnp.zeros((4, 2))}
+    for kind, packed in [("int8", False), ("int4", True)]:
+        plan = FederatedPlan(clients_per_round=4, client_lr=0.1,
+                             server_optimizer="sgd", server_lr=1.0,
+                             compression=CompressionConfig(kind=kind,
+                                                           packed=packed))
+        assert _code_fast_path(_plane(plan))
+        step = jax.jit(make_round_step(loss_fn, plan, jax.random.PRNGKey(0)))
+        state = init_server_state(plan, params0)
+        losses = []
+        for r in range(20):
+            state, m = step(state, make_batch(4, 2, 8, seed=r))
+            losses.append(float(m["loss"]))
+        assert losses[-1] < 0.05 * losses[0]
+        up = client_wire_bytes(plan.compression, params0)
+        assert float(m["participants"]) == 4.0
+        assert float(m["uplink_bytes"]) == 4.0 * up
+        assert float(m["corrupted"]) == 0.0
+
+
+def test_fast_path_packed_and_unpacked_identical():
+    """packed=True only materializes the wire buffer; the codes (and
+    therefore the trained model) are bit-identical to the unpacked
+    fast path."""
+    loss_fn, make_batch = _round_pieces()
+    outs = []
+    for packed in (False, True):
+        plan = FederatedPlan(clients_per_round=4, client_lr=0.1,
+                             server_optimizer="sgd", server_lr=1.0,
+                             compression=CompressionConfig(kind="int4",
+                                                           packed=packed))
+        step = jax.jit(make_round_step(loss_fn, plan, jax.random.PRNGKey(0)))
+        state = init_server_state(plan, {"w": jnp.zeros((4, 2))})
+        for r in range(3):
+            state, _ = step(state, make_batch(4, 2, 8, seed=r))
+        outs.append(np.asarray(state.params["w"]))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+# ----------------------------------------------- int32 overflow guard
+
+def test_sum_packed_codes_all_saturated_exact():
+    """K clients of all-saturated codes accumulate exactly in int32 —
+    the property that licenses the code-domain psum. The documented
+    wrap bound: sum(weights) * levels < 2**31, i.e. 16,909,320
+    saturated int8 clients (306M for int4); far above any cohort."""
+    for kind, levels in [("int8", 127), ("int4", 7)]:
+        cfg = CompressionConfig(kind=kind)
+        for K in (2, 64, 1024):
+            codes = jnp.full((K, 33), levels, jnp.int8)
+            out = np.asarray(sum_packed_codes(cfg, codes, 33))
+            np.testing.assert_array_equal(out, np.full((33,), K * levels))
+            assert out.dtype == np.int32
+            # weighted: sum(w_k) * levels stays exact too
+            w = jnp.full((K,), 16, jnp.int32)
+            out = np.asarray(sum_packed_codes(cfg, codes, 33, weights=w))
+            np.testing.assert_array_equal(out, np.full((33,), 16 * K * levels))
+
+
+def test_sum_packed_codes_weighted_matches_manual():
+    rng = np.random.default_rng(0)
+    cfg = CompressionConfig(kind="int8")
+    codes = jnp.asarray(rng.integers(-127, 128, size=(5, 17)), jnp.int8)
+    w = jnp.asarray([3, 0, 7, 1, 2], jnp.int32)
+    out = np.asarray(sum_packed_codes(cfg, codes, 17, weights=w))
+    manual = np.tensordot(np.asarray(w, np.int64),
+                          np.asarray(codes, np.int64), axes=(0, 0))
+    np.testing.assert_array_equal(out, manual)
+
+
+def test_sum_packed_codes_packed_int4_unpacks_first():
+    from repro.kernels import ref
+
+    cfg = CompressionConfig(kind="int4", packed=True)
+    rng = np.random.default_rng(1)
+    codes = jnp.asarray(rng.integers(-7, 8, size=(3, 9)), jnp.int8)
+    packed = jnp.stack([ref.nibble_pack_ref(codes[i]) for i in range(3)])
+    out = np.asarray(sum_packed_codes(cfg, packed, 9))
+    np.testing.assert_array_equal(out, np.asarray(codes, np.int32).sum(0))

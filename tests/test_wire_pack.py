@@ -74,6 +74,106 @@ def test_topk_unpack_kernel_matches_ref(n, k):
                                   np.asarray(ref.topk_unpack_ref(vals, idx, n)))
 
 
+@pytest.mark.parametrize("n,k,seg", [(64, 5, 16), (256, 32, 64), (100, 11, 32),
+                                     (4096, 200, 1024), (16, 16, 16), (1, 1, 8)])
+def test_topk_unpack_segmented_matches_ref(n, k, seg):
+    """The grid-parallel segmented scatter: sorted payload + per-segment
+    searchsorted bounds must reproduce the serial scatter exactly —
+    including entries straddling segment boundaries, a full payload
+    (k == n) and the size-1 degenerate."""
+    rng = np.random.default_rng(k * 7 + n)
+    vals = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    idx = jnp.asarray(rng.choice(n, size=k, replace=False), jnp.int32)
+    out = wire_pack.topk_unpack_segmented_pallas(vals, idx, n, seg=seg,
+                                                 interpret=True)
+    assert out.shape == (n,)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.topk_unpack_ref(vals, idx, n)))
+
+
+def test_topk_unpack_segmented_boundary_indices():
+    """Entries exactly on segment edges (0, seg-1, seg, n-1) land in the
+    right cells."""
+    n, seg = 128, 32
+    idx = jnp.asarray([0, 31, 32, 63, 64, 127], jnp.int32)
+    vals = jnp.arange(1.0, 7.0, dtype=jnp.float32)
+    out = wire_pack.topk_unpack_segmented_pallas(vals, idx, n, seg=seg,
+                                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.topk_unpack_ref(vals, idx, n)))
+
+
+# ----------------------------------------------- fused quantize -> pack
+
+# the PR 3 ulp regression values: |x| / (|x| / levels) > levels in f32
+_BOUNDARY = {8: 2.770888566970825, 4: 7.646292686462402}
+
+
+def _fused_case(n, bits, seed, boundary=False, stochastic=True):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n,)).astype(np.float32)
+    if boundary:
+        x[0] = _BOUNDARY[bits]
+        x[1:] = x[1:] * 0.1
+    return jnp.asarray(x)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("n", [1, 2, 3, 33, 101, 512, 1025])
+@pytest.mark.parametrize("stochastic", [True, False])
+def test_fused_quantize_pack_matches_composition(bits, n, stochastic):
+    """The fused kernel == quantize_codes + pack_leaf's historical
+    composition, code for code and byte for byte — odd sizes, size-1,
+    both rounding modes."""
+    from repro.core.compression import leaf_scale, _rounding_field
+
+    x = _fused_case(n, bits, seed=n * bits)
+    key = jax.random.PRNGKey(n + bits)
+    scale = leaf_scale(x, bits)
+    u = _rounding_field(key, x.shape, stochastic)
+    codes_ref = ref.quantize_codes_with_scale_ref(
+        x, scale, u, 2.0 ** (bits - 1) - 1.0)
+    # dispatch wrapper (oracle on CPU)
+    codes = wire_pack.quantize_with_scale(x, scale, u, bits)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes_ref))
+    # pallas kernels in interpret mode
+    k_codes = wire_pack.quantize_with_scale_pallas(x, scale, u, bits,
+                                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(k_codes), np.asarray(codes_ref))
+    payload_ref = (ref.nibble_pack_ref(codes_ref) if bits == 4 else codes_ref)
+    payload = wire_pack.quantize_pack(x, scale, u, bits)
+    np.testing.assert_array_equal(np.asarray(payload), np.asarray(payload_ref))
+    if bits == 4:
+        k_payload = wire_pack.quantize_pack4_pallas(x, scale, u,
+                                                    interpret=True)
+        np.testing.assert_array_equal(np.asarray(k_payload),
+                                      np.asarray(payload_ref))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_fused_quantize_pack_absmax_boundary_never_wraps(bits):
+    """The PR 3 ulp regression case through the FUSED kernel: the
+    absmax coordinate must clamp before the rounding draw, or a
+    boundary draw quantizes to levels+1 and the int8/nibble cast wraps
+    the sign inside the packed buffer."""
+    from repro.core.compression import leaf_scale, _rounding_field
+
+    levels = 2 ** (bits - 1) - 1
+    x = _fused_case(64, bits, seed=0, boundary=True)
+    scale = leaf_scale(x, bits)
+    for i in range(20):
+        u = _rounding_field(jax.random.PRNGKey(i), x.shape, True)
+        codes = np.asarray(wire_pack.quantize_with_scale_pallas(
+            x, scale, u, bits, interpret=True))
+        assert codes.min() >= -levels and codes.max() <= levels
+        assert codes[0] == levels
+        if bits == 4:
+            packed = wire_pack.quantize_pack4_pallas(x, scale, u,
+                                                     interpret=True)
+            unpacked = np.asarray(ref.nibble_unpack_ref(packed, 64))
+            np.testing.assert_array_equal(unpacked, codes)
+
+
 # --------------------------------------- payload size == byte formula
 
 _KIND_CFGS = [
