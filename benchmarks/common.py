@@ -56,20 +56,14 @@ def run_experiment(eid: str, seed: int = 0) -> dict:
         return _MEM[key]
 
     (point,) = ladder_points(ROUNDS, seed=seed, experiments=[eid])
+    # the sweep row IS the experiment summary: one schema
+    # (repro.core.metrics.SUMMARY_KEYS) across train histories, sweep
+    # rows and the bench cache — no hand-picked subset to drift
     row = shared_runner().run_point(point)
-    out = {
-        "id": eid, "rounds": row["rounds"],
-        "final_loss": row["final_loss"],
-        "wer": row["wer"], "wer_hard": row["wer_hard"],
-        "cfmq_tb": row["cfmq_tb"], "cfmq_bytes": row["cfmq_bytes"],
-        "n_params": row["n_params"],
-        "wall_s": row["wall_s"],
-        "loss_curve": row["loss_curve"],
-    }
     with open(path, "w") as f:
-        json.dump(out, f)
-    _MEM[key] = out
-    return out
+        json.dump(row, f)
+    _MEM[key] = row
+    return row
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

@@ -79,10 +79,17 @@ def _fed_round_setup():
 
 
 def _round_variants(base):
-    from repro.core import CompressionConfig, FederatedPlan
+    from repro.core import AsyncConfig, CompressionConfig, FederatedPlan
 
     return [
         ("fed_round_tiny_rnnt", FederatedPlan(**base)),
+        # buffered-async engine: same client compute, plus the arrival
+        # scan + staleness-discounted buffer flushes (B=5 of K=8, the
+        # async_vs_sync sweep's configuration)
+        ("fed_round_tiny_rnnt_async",
+         FederatedPlan(**base, engine="async",
+                       asynchrony=AsyncConfig(buffer_size=5,
+                                              staleness_beta=0.5))),
         # compression-only variants (weighted_mean) so the timings are
         # attributable to the quantize/sparsify plane alone. int8/int4
         # take the code-domain fast path (shared-scale codes, int32

@@ -3,6 +3,12 @@
 - ``fedavg``  — FedAvg round engines (Alg. 1) as pjit-able pure functions,
   composed as client deltas -> cohort -> compression -> aggregation
   -> server optimizer
+- ``async_engine`` — buffered-asynchronous (FedBuff-style) round
+  engine: staleness-discounted size-B buffer over a simulated
+  arrival stream
+- ``engine``  — the unified RoundEngine facade
+  (``build_round_engine(plan, loss_fn)``) over all three engines
+- ``metrics`` — the single round-metrics / summary-row schema
 - ``cohort``  — partial participation / dropout / straggler masks
 - ``compression`` — uplink delta compression with exact wire bytes
 - ``aggregation`` — pluggable server aggregators (weighted/trimmed
@@ -15,12 +21,15 @@
 - ``experiments`` — the paper's E0-E10 ladder as plans
 """
 from repro.core.plan import (
+    AggregatorConfig,
+    AsyncConfig,
     CohortConfig,
     FederatedPlan,
     FVNConfig,
     make_server_optimizer,
     server_lr_schedule,
 )
+from repro.core.cohort import LatencyConfig, draw_latencies, make_latency_fn
 from repro.core.fedavg import (
     ServerPlane,
     ServerState,
@@ -33,6 +42,14 @@ from repro.core.fedavg import (
     plan_hypers,
     plan_server_plane,
 )
+from repro.core.async_engine import AsyncBuffer, init_async_buffer, make_async_round
+from repro.core.engine import (
+    RoundEngine,
+    build_round_engine,
+    engine_structural_key,
+    validate_plan,
+)
+from repro.core.metrics import ROUND_METRIC_KEYS, SUMMARY_KEYS, summary_row
 from repro.core.aggregation import available_aggregators, get_aggregator, register_aggregator
 from repro.core.compression import CompressionConfig, client_wire_bytes, tree_param_bytes
 from repro.core.corruption import (
@@ -56,9 +73,24 @@ from repro.core.cfmq import (
 from repro.core import fvn
 
 __all__ = [
+    "AggregatorConfig",
+    "AsyncBuffer",
+    "AsyncConfig",
     "CohortConfig",
     "FederatedPlan",
     "FVNConfig",
+    "LatencyConfig",
+    "ROUND_METRIC_KEYS",
+    "RoundEngine",
+    "SUMMARY_KEYS",
+    "build_round_engine",
+    "draw_latencies",
+    "engine_structural_key",
+    "init_async_buffer",
+    "make_async_round",
+    "make_latency_fn",
+    "summary_row",
+    "validate_plan",
     "make_server_optimizer",
     "server_lr_schedule",
     "ServerPlane",

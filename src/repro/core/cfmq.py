@@ -125,6 +125,31 @@ def measured_payload(plan, params, mean_participants: float) -> Optional[float]:
                         plan.clients_per_round)
 
 
+def seconds_to_target(losses, sim_times_s, target: float) -> Optional[float]:
+    """The wall-clock axis of the quality/cost frontier: simulated
+    seconds until the loss curve first reaches ``target``.
+
+    ``losses`` and ``sim_times_s`` are the per-round histories (the
+    round metrics' ``loss`` and ``sim_time_s``); round r's cost is the
+    cumulative simulated duration through r. Returns None when the run
+    never reaches the target — a point that never converges has no
+    finite time-to-quality, which keeps it off the frontier instead of
+    silently pricing it at the run length.
+
+    This is CFMQ's second cost axis: bytes (``CFMQTerms``) price the
+    fleet's communication/compute budget, seconds price how long the
+    deployment waits for a model of the target quality. The async
+    engine moves the seconds axis (no barrier on the latency tail) at
+    byte-identical CFMQ — asserted per grid in
+    ``sweeps.check_async_vs_sync``."""
+    total = 0.0
+    for loss, t in zip(losses, sim_times_s):
+        total += float(t)
+        if float(loss) <= target:
+            return total
+    return None
+
+
 def paper_peak_memory(model_bytes: float) -> float:
     """Paper approximation: model + 10% intermediate storage."""
     return 1.1 * model_bytes

@@ -28,8 +28,81 @@ participation parity (participation=1.0 never triggers the rescue).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyConfig:
+    """Per-client round-trip latency model (device tiers + jitter).
+
+    Arrival time of client k's upload, in simulated seconds from the
+    wave start::
+
+        t_k = base_s * tier_speeds[tier_k] * exp(spread * normal())
+
+    with ``tier_k`` a categorical draw over ``tier_probs`` — the
+    device-tier heterogeneity of production cross-device FL (2109.15108
+    §3: phone fleets span >4x single-round latency between flagship and
+    entry tiers). ``base_s`` and ``spread`` are traced hyper scalars
+    (``HYPER_KEYS``); the tier tables are compile-time structure.
+
+    ``enabled`` gates the *sync* engines' wall-clock metric: when True
+    a barrier round's simulated duration is the slowest participant's
+    arrival. The async engine always draws arrival times (it needs the
+    order), whether or not ``enabled`` is set.
+
+    The parity configuration — one tier, ``spread=0.0`` — draws equal
+    times for every client: exp(0) == 1 exactly, so the stable
+    arrival argsort is the identity permutation.
+    """
+
+    enabled: bool = False
+    base_s: float = 60.0                       # median round-trip seconds
+    spread: float = 0.25                       # lognormal jitter sigma
+    tier_speeds: tuple = (1.0, 2.0, 4.0)       # slowdown per device tier
+    tier_probs: tuple = (0.5, 0.3, 0.2)        # tier mix of the fleet
+
+    def __post_init__(self):
+        if len(self.tier_speeds) != len(self.tier_probs):
+            raise ValueError(
+                f"tier_speeds ({len(self.tier_speeds)}) and tier_probs "
+                f"({len(self.tier_probs)}) must pair up one speed per tier")
+
+
+def tier_assignments(key, K: int, tier_probs):
+    """(K,) int32 categorical tier draw from the static fleet mix."""
+    u = jax.random.uniform(key, (K,))
+    cum = jnp.cumsum(jnp.asarray(tier_probs, jnp.float32))
+    idx = (u[:, None] >= cum[None, :]).sum(axis=1)
+    return jnp.minimum(idx, len(tier_probs) - 1).astype(jnp.int32)
+
+
+def draw_latencies(key, K: int, base_s, spread, tier_speeds, tier_probs):
+    """(K,) f32 simulated upload arrival times (seconds from wave
+    start). ``base_s`` / ``spread`` may be Python floats (plan path) or
+    traced scalars (hyper path); the tier tables are static."""
+    tkey, jkey = jax.random.split(key)
+    tiers = tier_assignments(tkey, K, tier_probs)
+    speed = jnp.asarray(tier_speeds, jnp.float32)[tiers]
+    jitter = jnp.exp(spread * jax.random.normal(jkey, (K,)))
+    return base_s * speed * jitter
+
+
+def make_latency_fn(cfg: LatencyConfig, base_s=None, spread=None):
+    """Returns latencies(key, K) -> (K,) f32 arrival times, with the
+    traced knobs overridable (the hyper path passes hyper scalars; the
+    plan path uses the config's constants)."""
+    base_s = cfg.base_s if base_s is None else base_s
+    spread = cfg.spread if spread is None else spread
+
+    def latencies(key, K):
+        return draw_latencies(key, K, base_s, spread,
+                              cfg.tier_speeds, cfg.tier_probs)
+
+    return latencies
 
 
 def rescue_mask(u):

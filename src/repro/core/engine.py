@@ -1,0 +1,141 @@
+"""RoundEngine — one facade over the sync and async round engines.
+
+``train.py``, ``launch.sweeps`` and ``benchmarks/common.py`` used to
+wire up ``make_round_step`` / ``make_hyper_round_step`` / the fedsgd
+path by hand, each duplicating the engine dispatch, the hyper
+extraction and the capability checks. ``build_round_engine(plan, ...)``
+is now the single entry point: it validates the plan at CONSTRUCTION
+time (an invalid engine/plane combination fails before any tracing or
+data movement) and returns a ``RoundEngine`` whose fields cover every
+way the drivers consume an engine:
+
+- ``step``: the plan-constant round function (all knobs baked in) —
+  the train/bench path. Built only when a ``base_key`` is supplied.
+- ``hyper_step``: the traced-knob round function — the sweep path.
+  One compilation serves every grid point that shares
+  ``structural_key``.
+- ``structural_key``: the engine's compile identity (engine name,
+  server optimizer family, aggregator, compression config, corruption
+  kind, plus the latency tier tables and async buffer size when they
+  shape the graph). Two plans with equal keys can share a jitted
+  ``hyper_step`` — this is exactly what the sweep runner's jit cache
+  keys on.
+- ``init_state`` / ``state_specs`` / ``hypers``: state construction,
+  pjit PartitionSpecs, and the plan's traced-scalar dict.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+from repro.core.fedavg import (
+    _check_fedsgd_aggregator,
+    _check_fedsgd_compression,
+    _check_fedsgd_corruption,
+    init_server_state,
+    make_hyper_round_step,
+    make_round_step,
+    plan_hypers,
+    server_state_specs,
+)
+from repro.core.plan import FederatedPlan
+
+ENGINES = ("fedavg", "fedsgd", "async")
+
+
+class RoundEngine(NamedTuple):
+    name: str                     # "fedavg" | "fedsgd" | "async"
+    plan: FederatedPlan
+    structural_key: tuple         # hashable compile identity
+    init_state: Callable          # (params) -> ServerState
+    hyper_step: Callable          # (state, batch, hypers, base_key) -> (state, metrics)
+    hypers: Callable              # () -> plan's traced-scalar dict
+    state_specs: Callable         # (param_specs, ...) -> ServerState specs
+    step: Optional[Callable] = None   # (state, batch) -> (state, metrics)
+
+
+def validate_plan(plan: FederatedPlan) -> None:
+    """Engine-capability validation, centralized at the construction
+    seam: every invalid engine/plane combination fails HERE with the
+    message that explains the capability gap, not rounds later inside
+    a traced body."""
+    if plan.engine not in ENGINES:
+        raise ValueError(f"unknown engine {plan.engine!r}; available: {ENGINES}")
+    if plan.engine == "fedsgd":
+        _check_fedsgd_aggregator(plan.aggregation.name)
+        _check_fedsgd_compression(plan.compression)
+        _check_fedsgd_corruption(plan.corruption.kind)
+    if plan.engine == "async":
+        if plan.asynchrony.buffer_size < 0:
+            raise ValueError(
+                f"async buffer_size must be >= 0 (0 resolves to K), got "
+                f"{plan.asynchrony.buffer_size}"
+            )
+        if plan.asynchrony.staleness_beta < 0:
+            raise ValueError(
+                "staleness_beta < 0 would UP-weight stale deltas, got "
+                f"{plan.asynchrony.staleness_beta}"
+            )
+
+
+def _graph_corruption_kind(plan: FederatedPlan) -> str:
+    """The corruption kind as the jitted graph sees it: data-plane
+    adversaries (label_shuffle) poison host-side and keep the identity
+    in-graph stage, so they share the honest compilation."""
+    return plan.corruption.kind if plan.corruption.in_graph else "none"
+
+
+def engine_structural_key(plan: FederatedPlan) -> tuple:
+    """The plan facets that are compile-time structure for the round
+    step. Everything else (lrs, schedules, FVN, cohort rates, agg
+    knobs, corruption rate/scale, latency base/spread, staleness beta)
+    is traced through ``hyper_step`` and deliberately absent."""
+    key = (
+        plan.engine,
+        plan.server_optimizer,
+        plan.aggregation.name,
+        plan.compression,
+        _graph_corruption_kind(plan),
+    )
+    lat = plan.latency
+    if plan.engine == "async":
+        # async always draws arrivals; enabled does not change its graph
+        key += (lat.tier_speeds, lat.tier_probs,
+                plan.asynchrony.resolve_buffer(plan.clients_per_round))
+    elif lat.enabled:
+        key += (True, lat.tier_speeds, lat.tier_probs)
+    return key
+
+
+def build_round_engine(plan: FederatedPlan, loss_fn: Callable, base_key=None) -> RoundEngine:
+    """THE engine factory: validate the plan, then wire every consumer
+    surface of the selected engine. ``base_key`` is only needed for the
+    plan-constant ``step`` (train/bench); sweep-style callers that only
+    use ``hyper_step`` may omit it."""
+    validate_plan(plan)
+    latency = plan.latency if (plan.engine == "async" or plan.latency.enabled) else None
+    buffer_size = None
+    if plan.engine == "async":
+        buffer_size = plan.asynchrony.resolve_buffer(plan.clients_per_round)
+    hyper_step = make_hyper_round_step(
+        loss_fn,
+        engine=plan.engine,
+        server_optimizer=plan.server_optimizer,
+        aggregator=plan.aggregation.name,
+        compression=plan.compression,
+        corruption=_graph_corruption_kind(plan),
+        latency=latency,
+        buffer_size=buffer_size,
+    )
+    step = make_round_step(loss_fn, plan, base_key) if base_key is not None else None
+    return RoundEngine(
+        name=plan.engine,
+        plan=plan,
+        structural_key=engine_structural_key(plan),
+        init_state=functools.partial(init_server_state, plan),
+        hyper_step=hyper_step,
+        hypers=functools.partial(plan_hypers, plan),
+        state_specs=functools.partial(server_state_specs, plan),
+        step=step,
+    )

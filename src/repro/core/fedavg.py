@@ -7,7 +7,8 @@ sharded over the mesh's ("pod","data") axes, client-parallel local
 training and the delta-aggregation all-reduce lower exactly like the
 production system's communication pattern.
 
-Two engines (see DESIGN.md §3):
+Three engines (see DESIGN.md §3 and ``repro.core.engine`` for the
+unified ``RoundEngine`` facade):
 
 - ``fedavg``: general case. Per-client weight replicas live on the
   client's model-parallel group; supports local_steps >= 1 and
@@ -16,6 +17,10 @@ Two engines (see DESIGN.md §3):
   per-client weight state exists, so weights can be FSDP-sharded; the
   round is one example-weighted forward/backward over all clients'
   data. FVN degrades to one shared draw per round (documented).
+- ``async``: buffered-asynchronous (FedBuff-style) streaming server —
+  see ``repro.core.async_engine``. Shares this module's client update,
+  cohort stage and payload pipeline; replaces the barrier aggregate
+  with a staleness-discounted buffer.
 
 The server update treats the aggregated delta ``wbar`` as a
 pseudo-gradient for the server optimizer (Adam in the paper), i.e.
@@ -29,9 +34,14 @@ The round step is a composed server-side pipeline (one jitted graph):
 Each stage is pluggable (see ``repro.core.cohort`` / ``compression`` /
 ``aggregation`` / ``corruption``); the defaults — full participation,
 no compression, no adversary, example-weighted mean — reproduce the
-paper's Alg. 1 exactly and are the parity baseline for tests. The round metrics report the *exact*
-wire bytes of the configured compression so CFMQ can account measured
-(not approximated) communication cost.
+paper's Alg. 1 exactly and are the parity baseline for tests. The
+round metrics report the *exact* wire bytes of the configured
+compression so CFMQ can account measured (not approximated)
+communication cost, and carry exactly the keys of
+``repro.core.metrics.ROUND_METRIC_KEYS`` — including the simulated
+wall-clock axis (``sim_time_s``), which for a barrier round is the
+slowest participant's arrival under the plan's ``LatencyConfig``
+device-tier model (0.0 when disabled: the paper prices bytes only).
 
 When the plane quantizes (int8/int4) under the paper's weighted mean
 with no EF and no delta adversary, the engine statically swaps the
@@ -60,6 +70,7 @@ an adversary grid shares one compilation per (aggregator, kind), and a
 corrupted client still pays its full uplink bytes — the wire metrics
 count participants, not honesty.
 """
+
 from __future__ import annotations
 
 from typing import Any, Callable, NamedTuple, Optional
@@ -69,7 +80,7 @@ import jax.numpy as jnp
 
 from repro.core import fvn as fvn_lib
 from repro.core.aggregation import AGG_HYPER_DEFAULTS, get_aggregator
-from repro.core.cohort import identity_cohort, make_cohort_fn
+from repro.core.cohort import LatencyConfig, identity_cohort, make_cohort_fn, make_latency_fn
 from repro.core.compression import (
     CompressionConfig,
     client_wire_bytes,
@@ -77,11 +88,7 @@ from repro.core.compression import (
     make_compressor,
     tree_param_bytes,
 )
-from repro.core.corruption import (
-    DELTA_KINDS,
-    identity_corruption,
-    make_corruption_fn,
-)
+from repro.core.corruption import DELTA_KINDS, identity_corruption, make_corruption_fn
 from repro.core.plan import FederatedPlan, make_server_optimizer
 from repro.optim import Optimizer, apply_updates, sgd
 
@@ -104,6 +111,11 @@ class ServerState(NamedTuple):
     # round (honest even for corrupted clients: staleness stays one
     # round deep, never a replay-of-replay).
     stale: Optional[PyTree] = None
+    # Buffered-async engine state (plan.engine == "async", else None):
+    # an ``async_engine.AsyncBuffer`` of pending staleness-tagged
+    # deltas that persists ACROSS waves — a straggler's update lands in
+    # a later wave's flush instead of being dropped.
+    abuf: Optional[Any] = None
 
 
 class ServerPlane(NamedTuple):
@@ -113,10 +125,11 @@ class ServerPlane(NamedTuple):
     hyper inputs). ``aggregator_name`` / ``corruption_kind`` mirror the
     closures as static strings so the engine can select the code-domain
     fast path at trace time (see ``_code_fast_path``)."""
-    cohort: Callable          # (key, weight) -> (weight', pmask)
-    compress: Callable        # (delta_tree, key) -> delta_tree
-    compression: CompressionConfig   # static: wire-byte accounting
-    aggregate: Callable       # (deltas, n_k, pmask, key) -> wbar
+
+    cohort: Callable  # (key, weight) -> (weight', pmask)
+    compress: Callable  # (delta_tree, key) -> delta_tree
+    compression: CompressionConfig  # static: wire-byte accounting
+    aggregate: Callable  # (deltas, n_k, pmask, key) -> wbar
     corrupt: Callable = identity_corruption
     # (key, deltas, pmask, stale) -> (deltas', cmask, stale')
     aggregator_name: str = "weighted_mean"
@@ -133,33 +146,43 @@ def _code_fast_path(plane: ServerPlane) -> bool:
     the server receives code sums). Everything here is compile-time
     structure, so the fp32 parity graph is byte-for-byte untouched and
     each configuration keeps one compilation."""
-    return (plane.compression.kind in ("int8", "int4")
-            and not plane.compression.error_feedback
-            and plane.aggregator_name == "weighted_mean"
-            and plane.corruption_kind not in DELTA_KINDS)
+    return (
+        plane.compression.kind in ("int8", "int4")
+        and not plane.compression.error_feedback
+        and plane.aggregator_name == "weighted_mean"
+        and plane.corruption_kind not in DELTA_KINDS
+    )
 
 
 # Distinct fold_in tags keep the plane's RNG streams away from the FVN
 # stream (which folds small client/step indices).
-_COHORT_TAG, _COMPRESS_TAG, _AGG_TAG, _CORRUPT_TAG = (
-    0x636F68, 0x636D70, 0x616767, 0x626164)
+_COHORT_TAG, _COMPRESS_TAG, _AGG_TAG, _CORRUPT_TAG = (0x636F68, 0x636D70, 0x616767, 0x626164)
+# Arrival-latency stream: its own tag so enabling the latency model
+# never perturbs the cohort/compression/aggregation/corruption draws.
+_LATENCY_TAG = 0x6C6174
 
 
 def _plane_keys(base_key, round_idx):
     rk = jax.random.fold_in(base_key, round_idx)
-    return (jax.random.fold_in(rk, _COHORT_TAG),
-            jax.random.fold_in(rk, _COMPRESS_TAG),
-            jax.random.fold_in(rk, _AGG_TAG),
-            jax.random.fold_in(rk, _CORRUPT_TAG))
+    return (
+        jax.random.fold_in(rk, _COHORT_TAG),
+        jax.random.fold_in(rk, _COMPRESS_TAG),
+        jax.random.fold_in(rk, _AGG_TAG),
+        jax.random.fold_in(rk, _CORRUPT_TAG),
+    )
+
+
+def _latency_key(base_key, round_idx):
+    return jax.random.fold_in(jax.random.fold_in(base_key, round_idx), _LATENCY_TAG)
 
 
 def make_server_plane(
     aggregator: str = "weighted_mean",
     compression: Optional[CompressionConfig] = None,
-    cohort_knobs: Optional[tuple] = None,   # (participation, frac, keep) or None
+    cohort_knobs: Optional[tuple] = None,  # (participation, frac, keep) or None
     agg_hypers: Optional[dict] = None,
     corruption_kind: str = "none",
-    corruption_knobs: Optional[tuple] = None,   # (rate, scale) or None
+    corruption_knobs: Optional[tuple] = None,  # (rate, scale) or None
 ) -> ServerPlane:
     """Compose a server plane. ``cohort_knobs=None`` means the paper's
     full-participation assumption (no cohort RNG enters the graph);
@@ -167,8 +190,7 @@ def make_server_plane(
     ``corruption_kind="none"`` (and the data-plane "label_shuffle")
     keeps the identity corruption stage with no adversary RNG."""
     compression = compression or CompressionConfig()
-    cohort = (identity_cohort if cohort_knobs is None
-              else make_cohort_fn(*cohort_knobs))
+    cohort = identity_cohort if cohort_knobs is None else make_cohort_fn(*cohort_knobs)
     agg_fn = get_aggregator(aggregator)
     hyp = dict(AGG_HYPER_DEFAULTS, **(agg_hypers or {}))
     rate, scale = corruption_knobs if corruption_knobs is not None else (0.0, 1.0)
@@ -176,8 +198,7 @@ def make_server_plane(
         cohort=cohort,
         compress=make_compressor(compression),
         compression=compression,
-        aggregate=lambda deltas, n_k, pmask, key: agg_fn(
-            deltas, n_k, pmask, hyp, key),
+        aggregate=lambda deltas, n_k, pmask, key: agg_fn(deltas, n_k, pmask, hyp, key),
         corrupt=make_corruption_fn(corruption_kind, rate, scale),
         aggregator_name=aggregator,
         corruption_kind=corruption_kind,
@@ -186,15 +207,17 @@ def make_server_plane(
 
 def plan_server_plane(plan: FederatedPlan) -> ServerPlane:
     """The plan's server plane with all knobs as Python constants."""
-    knobs = (None if plan.cohort.full else
-             (plan.cohort.participation, plan.cohort.straggler_frac,
-              plan.cohort.straggler_keep))
+    knobs = None
+    if not plan.cohort.full:
+        knobs = (plan.cohort.participation, plan.cohort.straggler_frac, plan.cohort.straggler_keep)
     return make_server_plane(
-        plan.aggregator, plan.compression, knobs,
-        {"trim_frac": plan.agg_trim_frac, "dp_clip": plan.dp_clip,
-         "dp_sigma": plan.dp_sigma},
+        plan.aggregation.name,
+        plan.compression,
+        knobs,
+        plan.aggregation.hypers,
         corruption_kind=plan.corruption.kind,
-        corruption_knobs=(plan.corruption.rate, plan.corruption.scale))
+        corruption_knobs=(plan.corruption.rate, plan.corruption.scale),
+    )
 
 
 _PARITY_PLANE = make_server_plane()
@@ -218,7 +241,8 @@ def _apply_cohort(plane: ServerPlane, ckey, round_batch: PyTree):
                 "participation plan. The hyper round step always draws a "
                 "cohort (its knobs are traced, so participation=1.0 cannot "
                 "be detected at trace time) and therefore requires the "
-                "weight leaf unconditionally")
+                "weight leaf unconditionally"
+            )
         return round_batch, jnp.ones((K,), jnp.float32)
     weight, pmask = plane.cohort(ckey, weight)
     return dict(round_batch, weight=weight), pmask
@@ -244,20 +268,47 @@ def _wire_metrics(plane: ServerPlane, params: PyTree, pmask, K: int) -> dict:
     }
 
 
+def _sim_time_metrics(latency_fn, base_key, round_idx, pmask, K: int) -> dict:
+    """The barrier engines' wall-clock/staleness metric trio: a sync
+    round's simulated duration is its slowest reporting participant's
+    arrival (the barrier waits for everyone who reports), it applies
+    exactly one server step, and nothing is ever stale. With no latency
+    model the duration is 0.0 — the paper's CFMQ axis prices bytes, not
+    seconds, and a disabled model keeps that parity path RNG-free."""
+    if latency_fn is None:
+        sim_time = jnp.float32(0.0)
+    else:
+        times = latency_fn(_latency_key(base_key, round_idx), K)
+        sim_time = (times * pmask).max()
+    return {
+        "sim_time_s": sim_time,
+        "server_steps": jnp.float32(1.0),
+        "staleness_mean": jnp.float32(0.0),
+    }
+
+
 def _client_axis_zeros(params: PyTree, K: int) -> PyTree:
-    return jax.tree.map(
-        lambda p: jnp.zeros((K,) + jnp.shape(p), jnp.float32), params)
+    return jax.tree.map(lambda p: jnp.zeros((K,) + jnp.shape(p), jnp.float32), params)
 
 
 def init_server_state(plan: FederatedPlan, params: PyTree) -> ServerState:
     opt = make_server_optimizer(plan)
     K = plan.clients_per_round
-    ef = (_client_axis_zeros(params, K)
-          if plan.compression.error_feedback else None)
-    stale = (_client_axis_zeros(params, K)
-             if plan.corruption.kind == "stale" else None)
-    return ServerState(params=params, opt_state=opt.init(params),
-                       round_idx=jnp.zeros((), jnp.int32), ef=ef, stale=stale)
+    ef = _client_axis_zeros(params, K) if plan.compression.error_feedback else None
+    stale = _client_axis_zeros(params, K) if plan.corruption.kind == "stale" else None
+    abuf = None
+    if plan.engine == "async":
+        from repro.core.async_engine import init_async_buffer
+
+        abuf = init_async_buffer(params, plan.asynchrony.resolve_buffer(K))
+    return ServerState(
+        params=params,
+        opt_state=opt.init(params),
+        round_idx=jnp.zeros((), jnp.int32),
+        ef=ef,
+        stale=stale,
+        abuf=abuf,
+    )
 
 
 def _client_update(
@@ -287,28 +338,77 @@ def _client_update(
         p_eval = p if sigma_fn is None else fvn_lib.perturb(p, key, sigma_fn(round_idx))
         data_key = jax.random.fold_in(key, 1)
         (loss, _aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            p_eval, step_batch, data_key)
+            p_eval, step_batch, data_key
+        )
         updates, opt_state = client_opt.update(grads, opt_state, p)
         p = apply_updates(p, updates)
         w = step_batch.get("weight")
         n = w.sum() if w is not None else jnp.asarray(
-            jax.tree.leaves(step_batch)[0].shape[0], jnp.float32)
+            jax.tree.leaves(step_batch)[0].shape[0], jnp.float32
+        )
         return (p, opt_state), (loss, n)
 
     init = (params, client_opt.init(params))
-    (p_final, _), (losses, ns) = jax.lax.scan(
-        local_step, init, (client_batch, jnp.arange(n_steps)))
-    delta = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
-                         params, p_final)
+    (p_final, _), (losses, ns) = jax.lax.scan(local_step, init, (client_batch, jnp.arange(n_steps)))
+    delta = jax.tree.map(
+        lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32), params, p_final
+    )
     n_k = ns.sum()
     step_mask = (ns > 0).astype(jnp.float32)
     mean_loss = (losses * step_mask).sum() / jnp.maximum(step_mask.sum(), 1.0)
     return delta, mean_loss, n_k
 
 
-def _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn, base_key,
-                       state: ServerState, round_batch: PyTree,
-                       plane: Optional[ServerPlane] = None):
+def _client_key_fanout(plane: ServerPlane, qkey, K: int):
+    """The round's client-key fan-out, built ONCE and threaded through
+    every consumer (EF, plain compression, the code fast path) — the
+    fold_in vmap used to be rebuilt per compress call site."""
+    if plane.compression.kind == "none":
+        return None
+    return jax.vmap(lambda i: jax.random.fold_in(qkey, i))(jnp.arange(K))
+
+
+def _delta_payload_stage(plane: ServerPlane, deltas, ef, pmask, ckeys, xkey, stale):
+    """The generic per-client payload pipeline — (EF-)compression then
+    the delta-domain adversary — shared by the sync slow path and the
+    async engine (which buffers per-client deltas the code-domain fast
+    path never materializes, so it always routes here). Returns
+    (deltas', ef', cmask, stale')."""
+    if plane.compression.error_feedback:
+        # EF21: each client compresses delta + residual and keeps
+        # the compression error. Non-participants send nothing and
+        # keep their residual untouched — the pmask select matters
+        # because, unlike the plain path (where a dropped client's
+        # delta is exactly 0), C(0 + e_k) is generally nonzero.
+        target = jax.tree.map(lambda d, e: d + e, deltas, ef)
+        sent = jax.vmap(plane.compress)(target, ckeys)
+        sel = lambda a, b: jnp.where(pmask.reshape((-1,) + (1,) * (a.ndim - 1)) > 0, a, b)
+        deltas = jax.tree.map(lambda s: sel(s, jnp.zeros_like(s)), sent)
+        ef = jax.tree.map(lambda t, s, e: sel(t - s, e), target, sent, ef)
+    elif plane.compression.kind != "none":
+        # each client quantizes its own delta with its own RNG stream
+        deltas = jax.vmap(plane.compress)(deltas, ckeys)
+
+    # Adversary stage: corrupts what the server receives (the
+    # post-compression deltas). cmask is already pmask-masked — a
+    # corrupted non-participant contributes neither delta nor EF
+    # residual update; wire bytes are untouched (corrupted
+    # participants pay full uplink).
+    deltas, cmask, stale = plane.corrupt(xkey, deltas, pmask, stale)
+    return deltas, ef, cmask, stale
+
+
+def _fedavg_round_body(
+    loss_fn,
+    client_opt,
+    server_opt,
+    sigma_fn,
+    base_key,
+    state: ServerState,
+    round_batch: PyTree,
+    plane: Optional[ServerPlane] = None,
+    latency_fn=None,
+):
     """One FedAvg round: client deltas -> cohort -> compression ->
     corruption -> aggregator -> server optimizer (one jitted graph)."""
     plane = plane or _PARITY_PLANE
@@ -319,15 +419,11 @@ def _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn, base_key,
 
     deltas, losses, n_k = jax.vmap(
         lambda cb, ci: _client_update(
-            loss_fn, client_opt, sigma_fn, base_key,
-            state.params, cb, ci, state.round_idx)
+            loss_fn, client_opt, sigma_fn, base_key, state.params, cb, ci, state.round_idx
+        )
     )(round_batch, jnp.arange(K))
 
-    # The round's client-key fan-out, built ONCE and threaded through
-    # every consumer (EF, plain compression, the code fast path) — the
-    # fold_in vmap used to be rebuilt per compress call site.
-    ckeys = (jax.vmap(lambda i: jax.random.fold_in(qkey, i))(jnp.arange(K))
-             if plane.compression.kind != "none" else None)
+    ckeys = _client_key_fanout(plane, qkey, K)
 
     ef = state.ef
     if _code_fast_path(plane):
@@ -337,34 +433,13 @@ def _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn, base_key,
         # every other configuration keeps its existing graph. The
         # corruption stage here is the honest identity (delta
         # adversaries force the slow path), matching its cmask = 0.
-        wbar = code_domain_aggregate(plane.compression, deltas, n_k,
-                                     pmask, ckeys)
+        wbar = code_domain_aggregate(plane.compression, deltas, n_k, pmask, ckeys)
         cmask = jnp.zeros((K,), jnp.float32)
         stale = state.stale
     else:
-        if plane.compression.error_feedback:
-            # EF21: each client compresses delta + residual and keeps
-            # the compression error. Non-participants send nothing and
-            # keep their residual untouched — the pmask select matters
-            # because, unlike the plain path (where a dropped client's
-            # delta is exactly 0), C(0 + e_k) is generally nonzero.
-            target = jax.tree.map(lambda d, e: d + e, deltas, ef)
-            sent = jax.vmap(plane.compress)(target, ckeys)
-            sel = lambda a, b: jnp.where(
-                pmask.reshape((-1,) + (1,) * (a.ndim - 1)) > 0, a, b)
-            deltas = jax.tree.map(lambda s: sel(s, jnp.zeros_like(s)), sent)
-            ef = jax.tree.map(lambda t, s, e: sel(t - s, e), target, sent, ef)
-        elif plane.compression.kind != "none":
-            # each client quantizes its own delta with its own RNG stream
-            deltas = jax.vmap(plane.compress)(deltas, ckeys)
-
-        # Adversary stage: corrupts what the server receives (the
-        # post-compression deltas). cmask is already pmask-masked — a
-        # corrupted non-participant contributes neither delta nor EF
-        # residual update; wire bytes are untouched (corrupted
-        # participants pay full uplink).
-        deltas, cmask, stale = plane.corrupt(xkey, deltas, pmask, state.stale)
-
+        deltas, ef, cmask, stale = _delta_payload_stage(
+            plane, deltas, ef, pmask, ckeys, xkey, state.stale
+        )
         wbar = plane.aggregate(deltas, n_k, pmask, akey)
 
     updates, opt_state = server_opt.update(wbar, state.opt_state, state.params)
@@ -373,13 +448,12 @@ def _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn, base_key,
     metrics = {
         "loss": (losses * n_k).sum() / n,
         "examples": n_k.sum(),
-        "delta_norm": jnp.sqrt(sum(jnp.sum(jnp.square(x))
-                                   for x in jax.tree.leaves(wbar))),
+        "delta_norm": jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(wbar))),
         "corrupted": cmask.sum(),
         **_wire_metrics(plane, state.params, pmask, K),
+        **_sim_time_metrics(latency_fn, base_key, state.round_idx, pmask, K),
     }
-    return ServerState(params, opt_state, state.round_idx + 1, ef,
-                       stale), metrics
+    return ServerState(params, opt_state, state.round_idx + 1, ef, stale, state.abuf), metrics
 
 
 def make_fedavg_round(
@@ -396,10 +470,13 @@ def make_fedavg_round(
     server_opt = make_server_optimizer(plan)
     sigma_fn = (lambda r: fvn_lib.fvn_sigma(plan.fvn, r)) if plan.fvn.enabled else None
     plane = plan_server_plane(plan)
+    latency_fn = make_latency_fn(plan.latency) if plan.latency.enabled else None
 
     def round_step(state: ServerState, round_batch: PyTree):
-        return _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn,
-                                  base_key, state, round_batch, plane)
+        return _fedavg_round_body(
+            loss_fn, client_opt, server_opt, sigma_fn, base_key, state, round_batch, plane,
+            latency_fn,
+        )
 
     return round_step
 
@@ -417,16 +494,19 @@ def make_fedsgd_round(
     collapses to one example-weighted forward/backward — weights stay
     FSDP-sharded, no per-client weight replicas exist.
     """
-    _check_fedsgd_aggregator(plan.aggregator)
+    _check_fedsgd_aggregator(plan.aggregation.name)
     _check_fedsgd_compression(plan.compression)
     _check_fedsgd_corruption(plan.corruption.kind)
     server_opt = make_server_optimizer(plan)
     sigma_fn = (lambda r: fvn_lib.fvn_sigma(plan.fvn, r)) if plan.fvn.enabled else None
     plane = plan_server_plane(plan)
+    latency_fn = make_latency_fn(plan.latency) if plan.latency.enabled else None
 
     def round_step(state: ServerState, round_batch: PyTree):
-        return _fedsgd_round_body(loss_fn, server_opt, sigma_fn, plan.client_lr,
-                                  base_key, state, round_batch, plane)
+        return _fedsgd_round_body(
+            loss_fn, server_opt, sigma_fn, plan.client_lr, base_key, state, round_batch, plane,
+            latency_fn,
+        )
 
     return round_step
 
@@ -436,7 +516,8 @@ def _check_fedsgd_aggregator(aggregator: str) -> None:
         raise ValueError(
             "fedsgd collapses clients into one weighted forward/backward — "
             "per-client deltas never exist, so robust aggregators "
-            f"({aggregator!r}) need the fedavg engine")
+            f"({aggregator!r}) need the fedavg engine"
+        )
 
 
 def _check_fedsgd_compression(compression: Optional[CompressionConfig]) -> None:
@@ -444,7 +525,8 @@ def _check_fedsgd_compression(compression: Optional[CompressionConfig]) -> None:
         raise ValueError(
             "error feedback keeps a per-client compression residual, but "
             "fedsgd collapses clients into one weighted forward/backward — "
-            "per-client deltas never exist; use the fedavg engine")
+            "per-client deltas never exist; use the fedavg engine"
+        )
 
 
 def _check_fedsgd_corruption(kind: str) -> None:
@@ -455,24 +537,34 @@ def _check_fedsgd_corruption(kind: str) -> None:
             "delta corruptions transform per-client deltas, but fedsgd "
             "collapses clients into one weighted forward/backward — use "
             f"the fedavg engine for corruption kind {kind!r} (the "
-            "data-plane 'label_shuffle' adversary works on either engine)")
+            "data-plane 'label_shuffle' adversary works on either engine)"
+        )
 
 
-def _fedsgd_round_body(loss_fn, server_opt, sigma_fn, client_lr, base_key,
-                       state: ServerState, round_batch: PyTree,
-                       plane: Optional[ServerPlane] = None):
+def _fedsgd_round_body(
+    loss_fn,
+    server_opt,
+    sigma_fn,
+    client_lr,
+    base_key,
+    state: ServerState,
+    round_batch: PyTree,
+    plane: Optional[ServerPlane] = None,
+    latency_fn=None,
+):
     plane = plane or _PARITY_PLANE
     K, S = jax.tree.leaves(round_batch)[0].shape[:2]
     ckey, qkey, _, _ = _plane_keys(base_key, state.round_idx)
     round_batch, pmask = _apply_cohort(plane, ckey, round_batch)
-    flat = jax.tree.map(
-        lambda x: x.reshape((K * S * x.shape[2],) + x.shape[3:]), round_batch)
+    flat = jax.tree.map(lambda x: x.reshape((K * S * x.shape[2],) + x.shape[3:]), round_batch)
     key = fvn_lib.fvn_key(base_key, state.round_idx, 0, 0)
-    p_eval = (state.params if sigma_fn is None
-              else fvn_lib.perturb(state.params, key, sigma_fn(state.round_idx)))
+    p_eval = (
+        state.params
+        if sigma_fn is None
+        else fvn_lib.perturb(state.params, key, sigma_fn(state.round_idx))
+    )
     data_key = jax.random.fold_in(key, 1)
-    (loss, _aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-        p_eval, flat, data_key)
+    (loss, _aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(p_eval, flat, data_key)
     # delta of the 1-step client update = client_lr * grad
     wbar = jax.tree.map(lambda g: client_lr * g.astype(jnp.float32), grads)
     if plane.compression.kind != "none":
@@ -487,18 +579,23 @@ def _fedsgd_round_body(loss_fn, server_opt, sigma_fn, client_lr, base_key,
     metrics = {
         "loss": loss,
         "examples": n,
-        "delta_norm": jnp.sqrt(sum(jnp.sum(jnp.square(x))
-                                   for x in jax.tree.leaves(wbar))),
+        "delta_norm": jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(wbar))),
         # delta corruptions are fedavg-only (no per-client deltas here);
         # the data-plane label_shuffle adversary reports host-side
         "corrupted": jnp.float32(0.0),
         **_wire_metrics(plane, state.params, pmask, K),
+        **_sim_time_metrics(latency_fn, base_key, state.round_idx, pmask, K),
     }
-    return ServerState(params, opt_state, state.round_idx + 1, state.ef,
-                       state.stale), metrics
+    return ServerState(
+        params, opt_state, state.round_idx + 1, state.ef, state.stale, state.abuf
+    ), metrics
 
 
 def make_round_step(loss_fn, plan: FederatedPlan, base_key):
+    if plan.engine == "async":
+        from repro.core.async_engine import make_async_round
+
+        return make_async_round(loss_fn, plan, base_key)
     if plan.engine == "fedsgd":
         return make_fedsgd_round(loss_fn, plan, base_key)
     return make_fedavg_round(loss_fn, plan, base_key)
@@ -512,14 +609,32 @@ def make_round_step(loss_fn, plan: FederatedPlan, base_key):
 # structural plan (engine + server optimizer family).
 # ----------------------------------------------------------------------
 
-HYPER_KEYS = ("client_lr", "server_lr", "warmup_rounds", "decay_rounds",
-              "decay_rate", "fvn_std", "fvn_ramp",
-              # server-plane knobs (cohort + aggregator), all traced
-              "participation", "straggler_frac", "straggler_keep",
-              "trim_frac", "dp_clip", "dp_sigma",
-              # adversary knobs: rate/magnitude traced, kind static —
-              # one compilation per (aggregator, kind) across a grid
-              "corrupt_rate", "corrupt_scale")
+HYPER_KEYS = (
+    "client_lr",
+    "server_lr",
+    "warmup_rounds",
+    "decay_rounds",
+    "decay_rate",
+    "fvn_std",
+    "fvn_ramp",
+    # server-plane knobs (cohort + aggregator), all traced
+    "participation",
+    "straggler_frac",
+    "straggler_keep",
+    "trim_frac",
+    "dp_clip",
+    "dp_sigma",
+    # adversary knobs: rate/magnitude traced, kind static —
+    # one compilation per (aggregator, kind) across a grid
+    "corrupt_rate",
+    "corrupt_scale",
+    # async/wall-clock knobs: the staleness-discount exponent and the
+    # latency model's scale/jitter are traced (buffer size and the
+    # device-tier tables are static structure)
+    "async_beta",
+    "latency_base_s",
+    "latency_spread",
+)
 
 
 def plan_hypers(plan: FederatedPlan) -> dict:
@@ -535,11 +650,14 @@ def plan_hypers(plan: FederatedPlan) -> dict:
         "participation": jnp.float32(plan.cohort.participation),
         "straggler_frac": jnp.float32(plan.cohort.straggler_frac),
         "straggler_keep": jnp.float32(plan.cohort.straggler_keep),
-        "trim_frac": jnp.float32(plan.agg_trim_frac),
-        "dp_clip": jnp.float32(plan.dp_clip),
-        "dp_sigma": jnp.float32(plan.dp_sigma),
+        "trim_frac": jnp.float32(plan.aggregation.trim_frac),
+        "dp_clip": jnp.float32(plan.aggregation.dp_clip),
+        "dp_sigma": jnp.float32(plan.aggregation.dp_sigma),
         "corrupt_rate": jnp.float32(plan.corruption.rate),
         "corrupt_scale": jnp.float32(plan.corruption.scale),
+        "async_beta": jnp.float32(plan.asynchrony.staleness_beta),
+        "latency_base_s": jnp.float32(plan.latency.base_s),
+        "latency_spread": jnp.float32(plan.latency.spread),
     }
 
 
@@ -549,35 +667,44 @@ def _hyper_server_lr(hypers, count):
     plan.server_lr_schedule exactly — including the decay path's
     max(warmup, 1) floor on the warmup window."""
     c = jnp.asarray(count, jnp.float32)
-    w = jnp.where(hypers["decay_rounds"] > 0,
-                  jnp.maximum(hypers["warmup_rounds"], 1.0),
-                  hypers["warmup_rounds"])
+    w = jnp.where(
+        hypers["decay_rounds"] > 0,
+        jnp.maximum(hypers["warmup_rounds"], 1.0),
+        hypers["warmup_rounds"],
+    )
     warm = jnp.where(w > 0, jnp.minimum(c / jnp.maximum(w, 1.0), 1.0), 1.0)
     decay = jnp.where(
         hypers["decay_rounds"] > 0,
-        hypers["decay_rate"] ** (jnp.maximum(c - w, 0.0)
-                                 / jnp.maximum(hypers["decay_rounds"], 1.0)),
-        1.0)
+        hypers["decay_rate"]
+        ** (jnp.maximum(c - w, 0.0) / jnp.maximum(hypers["decay_rounds"], 1.0)),
+        1.0,
+    )
     return hypers["server_lr"] * warm * decay
 
 
 def _hyper_fvn_sigma(hypers, round_idx):
     c = jnp.asarray(round_idx, jnp.float32)
-    frac = jnp.where(hypers["fvn_ramp"] > 0,
-                     jnp.minimum(c / jnp.maximum(hypers["fvn_ramp"], 1.0), 1.0),
-                     1.0)
+    frac = jnp.where(
+        hypers["fvn_ramp"] > 0, jnp.minimum(c / jnp.maximum(hypers["fvn_ramp"], 1.0), 1.0), 1.0
+    )
     return hypers["fvn_std"] * frac
 
 
-def make_hyper_round_step(loss_fn, engine: str = "fedavg",
-                          server_optimizer: str = "adam",
-                          aggregator: str = "weighted_mean",
-                          compression: Optional[CompressionConfig] = None,
-                          corruption: str = "none"):
+def make_hyper_round_step(
+    loss_fn,
+    engine: str = "fedavg",
+    server_optimizer: str = "adam",
+    aggregator: str = "weighted_mean",
+    compression: Optional[CompressionConfig] = None,
+    corruption: str = "none",
+    latency: Optional[LatencyConfig] = None,
+    buffer_size: Optional[int] = None,
+):
     """Returns round_step(state, round_batch, hypers, base_key).
 
     Only ``engine``, ``server_optimizer``, ``aggregator``,
-    ``compression`` and the ``corruption`` *kind* are compile-time
+    ``compression``, the ``corruption`` *kind*, the ``latency`` model's
+    tier tables and the async ``buffer_size`` are compile-time
     structure (they change the graph / the wire layout); everything in
     ``hypers`` (see HYPER_KEYS / plan_hypers) is traced. The FVN
     perturbation, the cohort draw and the corruption draw always stay
@@ -586,41 +713,83 @@ def make_hyper_round_step(loss_fn, engine: str = "fedavg",
     on/off points share the compilation too. Because the cohort draw is
     unconditional, round batches must carry the data plane's "weight"
     leaf — the legacy weight-less layout is plan-path only.
+
+    The latency draw is structural (``latency=None`` or
+    ``enabled=False`` keeps it out of sync graphs entirely) because a
+    zero-base draw cannot be distinguished from "no model" at trace
+    time without burning RNG; its base/spread knobs are traced so one
+    compilation serves a latency grid. ``engine="async"`` always draws
+    arrivals and requires ``buffer_size`` (a static buffer shape).
     """
     from repro import optim
 
-    server_opt_fns = {"adam": optim.adam, "sgd": optim.sgd,
-                      "momentum": optim.momentum, "yogi": optim.yogi}
+    server_opt_fns = {
+        "adam": optim.adam,
+        "sgd": optim.sgd,
+        "momentum": optim.momentum,
+        "yogi": optim.yogi,
+    }
     make_server = server_opt_fns[server_optimizer]
     if engine == "fedsgd":
         _check_fedsgd_aggregator(aggregator)
         _check_fedsgd_compression(compression)
         _check_fedsgd_corruption(corruption)
+    if engine == "async":
+        if not buffer_size or buffer_size < 1:
+            raise ValueError(
+                "the async engine's buffer is compile-time structure: pass "
+                f"buffer_size >= 1 to make_hyper_round_step (got {buffer_size!r})"
+            )
+        latency = latency or LatencyConfig()
 
     def round_step(state: ServerState, round_batch: PyTree, hypers: dict, base_key):
         server_opt = make_server(lambda count: _hyper_server_lr(hypers, count))
         sigma_fn = lambda r: _hyper_fvn_sigma(hypers, r)
         plane = make_server_plane(
-            aggregator, compression,
-            (hypers["participation"], hypers["straggler_frac"],
-             hypers["straggler_keep"]),
-            {"trim_frac": hypers["trim_frac"], "dp_clip": hypers["dp_clip"],
-             "dp_sigma": hypers["dp_sigma"]},
+            aggregator,
+            compression,
+            (hypers["participation"], hypers["straggler_frac"], hypers["straggler_keep"]),
+            {
+                "trim_frac": hypers["trim_frac"],
+                "dp_clip": hypers["dp_clip"],
+                "dp_sigma": hypers["dp_sigma"],
+            },
             corruption_kind=corruption,
-            corruption_knobs=(hypers["corrupt_rate"], hypers["corrupt_scale"]))
+            corruption_knobs=(hypers["corrupt_rate"], hypers["corrupt_scale"]),
+        )
+        latency_fn = None
+        if latency is not None and (latency.enabled or engine == "async"):
+            latency_fn = make_latency_fn(
+                latency, hypers["latency_base_s"], hypers["latency_spread"]
+            )
         if engine == "fedsgd":
-            return _fedsgd_round_body(loss_fn, server_opt, sigma_fn,
-                                      hypers["client_lr"], base_key,
-                                      state, round_batch, plane)
+            return _fedsgd_round_body(
+                loss_fn, server_opt, sigma_fn, hypers["client_lr"], base_key, state,
+                round_batch, plane, latency_fn,
+            )
         client_opt = sgd(lambda count: hypers["client_lr"])
-        return _fedavg_round_body(loss_fn, client_opt, server_opt, sigma_fn,
-                                  base_key, state, round_batch, plane)
+        if engine == "async":
+            from repro.core.async_engine import _async_round_body
+
+            return _async_round_body(
+                loss_fn, client_opt, server_opt, sigma_fn, base_key, state, round_batch,
+                plane, latency_fn, buffer_size, hypers["async_beta"],
+            )
+        return _fedavg_round_body(
+            loss_fn, client_opt, server_opt, sigma_fn, base_key, state, round_batch, plane,
+            latency_fn,
+        )
 
     return round_step
 
 
-def server_state_specs(plan: FederatedPlan, param_specs, moment_specs=None,
-                       ef_specs=None, stale_specs=None):
+def server_state_specs(
+    plan: FederatedPlan,
+    param_specs,
+    moment_specs=None,
+    ef_specs=None,
+    stale_specs=None,
+):
     """PartitionSpec tree matching init_server_state's output.
 
     ``moment_specs`` lets the launcher FSDP-shard optimizer moments
@@ -628,7 +797,8 @@ def server_state_specs(plan: FederatedPlan, param_specs, moment_specs=None,
     ``ef_specs`` shards the per-client EF residuals; the default keeps
     each residual with its client's replica (leading K axis unsharded,
     trailing axes like the params). ``stale_specs`` does the same for
-    the stale-replay delta cache."""
+    the stale-replay delta cache. The async buffer's pending deltas
+    reuse the same leading-axis layout (buffer slots unsharded)."""
     from jax.sharding import PartitionSpec as P
 
     from repro.optim.optimizers import AdamState, MomentumState, ScaleState
@@ -645,12 +815,23 @@ def server_state_specs(plan: FederatedPlan, param_specs, moment_specs=None,
     def client_axis_specs(override):
         if override is not None:
             return override
-        return jax.tree.map(lambda s: P(*((None,) + tuple(s))), param_specs,
-                            is_leaf=lambda x: isinstance(x, P))
+        return jax.tree.map(
+            lambda s: P(*((None,) + tuple(s))), param_specs, is_leaf=lambda x: isinstance(x, P)
+        )
 
-    ef = (client_axis_specs(ef_specs)
-          if plan.compression.error_feedback else None)
-    stale = (client_axis_specs(stale_specs)
-             if plan.corruption.kind == "stale" else None)
-    return ServerState(params=param_specs, opt_state=os_,
-                       round_idx=P(), ef=ef, stale=stale)
+    ef = client_axis_specs(ef_specs) if plan.compression.error_feedback else None
+    stale = client_axis_specs(stale_specs) if plan.corruption.kind == "stale" else None
+    abuf = None
+    if plan.engine == "async":
+        from repro.core.async_engine import AsyncBuffer
+
+        abuf = AsyncBuffer(
+            deltas=client_axis_specs(None),
+            weights=P(),
+            versions=P(),
+            count=P(),
+            version=P(),
+        )
+    return ServerState(
+        params=param_specs, opt_state=os_, round_idx=P(), ef=ef, stale=stale, abuf=abuf
+    )

@@ -1,0 +1,86 @@
+"""The single round-metrics / summary-row schema.
+
+CHANGES.md records a field-drift incident: the train history said
+``wire_bytes`` where the sweep rows said ``wire_bytes_total`` for the
+same quantity. This module is the fix — ONE schema, three emitters:
+
+- every round engine's in-graph metrics dict carries exactly
+  ``ROUND_METRIC_KEYS`` (asserted per engine in tests);
+- the train driver (``launch.train.run_federated_asr``), the sweep
+  runner (``launch.sweeps.SweepRunner.run_point``) and the benchmark
+  tables (``benchmarks.common.experiment_summary``) all build their
+  per-run summaries through ``summary_row``, which rejects a missing
+  or unknown field at emit time instead of letting the schemas drift.
+
+Emitter-specific payloads (curves, sweep metadata, legacy aliases)
+ride in ``extras`` — deliberately open, because they are labelled by
+the emitter, not shared across them.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+# Keys every round engine's jitted metrics dict must carry (sync
+# engines emit the wall-clock/staleness trio as constants: one server
+# step per round, zero staleness, sim_time_s = 0.0 unless the plan's
+# latency model is enabled).
+ROUND_METRIC_KEYS = (
+    "loss",
+    "examples",
+    "delta_norm",
+    "corrupted",
+    "participants",
+    "uplink_bytes",
+    "downlink_bytes",
+    "sim_time_s",
+    "server_steps",
+    "staleness_mean",
+)
+
+# Keys of one run summary (a sweep row / train history summary / bench
+# table entry). Grouped: quality, CFMQ cost, wire accounting, cohort
+# and adversary tallies, wall-clock axis, run bookkeeping.
+SUMMARY_KEYS = (
+    "rounds",
+    "final_loss",
+    "wer",
+    "wer_hard",
+    "cfmq_tb",
+    "cfmq_bytes",
+    "payload_bytes",
+    "uplink_bytes_client",
+    "uplink_bytes_total",
+    "wire_bytes_total",
+    "downlink_bytes_round",
+    "participants_mean",
+    "corrupted_mean",
+    "corrupted_total",
+    "n_params",
+    "sim_time_s",
+    "server_steps_total",
+    "staleness_mean",
+    "wall_s",
+)
+
+
+def summary_row(extras: Optional[dict] = None, **fields) -> dict:
+    """Build one summary row, strictly: every ``SUMMARY_KEYS`` field
+    must be present and nothing else may ride as a field. Emitter-
+    specific keys (curves, ids, legacy aliases) go in ``extras`` and
+    may not shadow a schema field."""
+    missing = [k for k in SUMMARY_KEYS if k not in fields]
+    unknown = [k for k in fields if k not in SUMMARY_KEYS]
+    if missing or unknown:
+        raise ValueError(
+            f"summary_row: missing fields {missing}, unknown fields {unknown} "
+            "(schema drift — see repro.core.metrics.SUMMARY_KEYS)")
+    extras = dict(extras or {})
+    shadowed = [k for k in extras if k in SUMMARY_KEYS]
+    if shadowed:
+        raise ValueError(
+            f"summary_row: extras {shadowed} shadow schema fields — pass "
+            "them as fields, not extras")
+    row = {k: fields[k] for k in SUMMARY_KEYS}
+    row.update(extras)
+    return row

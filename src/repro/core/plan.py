@@ -2,14 +2,18 @@
 
 One plan fully determines a federated optimization: client count and
 sampling, the non-IID dial (per-client data limit), client/server
-optimizers, FVN, and the CFMQ accounting constants. The experiment
-ladder E0–E10 is expressed as plans (see repro/core/experiments.py).
+optimizers, FVN, the round engine (sync barrier or buffered-async),
+and the CFMQ accounting constants. The experiment ladder E0–E10 is
+expressed as plans (see repro/core/experiments.py).
 """
+
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
+from repro.core.cohort import LatencyConfig
 from repro.core.compression import CompressionConfig
 from repro.core.corruption import CorruptionConfig
 
@@ -20,9 +24,10 @@ class CohortConfig:
     clients that report back and the straggler deadline model. All
     rates are traced in the hyper round step, so a participation grid
     shares one compilation."""
-    participation: float = 1.0    # P(sampled client reports back)
-    straggler_frac: float = 0.0   # P(reporting client hits the deadline)
-    straggler_keep: float = 0.5   # fraction of local steps a straggler completes
+
+    participation: float = 1.0  # P(sampled client reports back)
+    straggler_frac: float = 0.0  # P(reporting client hits the deadline)
+    straggler_keep: float = 0.5  # fraction of local steps a straggler completes
 
     @property
     def full(self) -> bool:
@@ -34,42 +39,124 @@ class CohortConfig:
 class FVNConfig:
     """Federated Variational Noise (paper §4.2.2): per-client Gaussian
     weight noise at each local step, std ramped linearly over rounds."""
+
     enabled: bool = False
-    std: float = 0.01            # target std (E5: 0.01, E6: 0.02, E7: ramp to 0.03)
-    ramp_rounds: int = 0         # 0 = constant std; >0 = linear 0 -> std
+    std: float = 0.01  # target std (E5: 0.01, E6: 0.02, E7: ramp to 0.03)
+    ramp_rounds: int = 0  # 0 = constant std; >0 = linear 0 -> std
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregatorConfig:
+    """Server aggregation stage (see repro.core.aggregation): which
+    registered aggregator reduces the client deltas and its knobs. The
+    knobs are traced in the hyper round step (one compilation per
+    aggregator name across a knob grid)."""
+
+    name: str = "weighted_mean"  # see repro.core.aggregation registry
+    trim_frac: float = 0.1  # trimmed_mean: fraction trimmed per side
+    dp_clip: float = 1.0  # clipped_mean: per-client L2 clip norm
+    dp_sigma: float = 0.0  # clipped_mean: DP noise multiplier
+
+    @property
+    def hypers(self) -> dict:
+        """The traced-knob dict the aggregation registry consumes."""
+        return {
+            "trim_frac": self.trim_frac,
+            "dp_clip": self.dp_clip,
+            "dp_sigma": self.dp_sigma,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Buffered-async round engine (FedBuff-style, plan.engine="async"):
+    the server accumulates arriving client deltas into a size-B buffer
+    and steps when it fills, discounting each delta by its staleness
+    ``exp(-beta * log1p(s))`` == ``1 / (1 + s)**beta`` with ``s`` the
+    number of server versions applied since that client downloaded.
+
+    ``buffer_size`` is compile-time structure (it shapes the buffer);
+    ``staleness_beta`` is a traced hyper scalar. ``buffer_size=0``
+    resolves to the plan's clients-per-round K (one flush per wave
+    under full participation — the sync-parity configuration)."""
+
+    buffer_size: int = 0  # B; 0 resolves to clients_per_round
+    staleness_beta: float = 0.5  # staleness discount exponent
+
+    def resolve_buffer(self, clients_per_round: int) -> int:
+        return self.buffer_size if self.buffer_size > 0 else clients_per_round
 
 
 @dataclasses.dataclass(frozen=True)
 class FederatedPlan:
-    clients_per_round: int = 4          # K (paper sweeps 32 -> 128)
-    local_batch_size: int = 2           # b
-    local_epochs: int = 1               # e
-    local_steps: Optional[int] = None   # fixed step count (engine shape); None = from data
-    data_limit: Optional[int] = None    # paper §4.2.1 non-IID dial (None = no limit)
-    client_sampling: str = "uniform"    # see repro.data.strategies registry
-    client_lr: float = 0.008            # paper's coarse-swept client SGD lr
-    server_optimizer: str = "adam"      # "adam" | "sgd" | "momentum" | "yogi"
+    clients_per_round: int = 4  # K (paper sweeps 32 -> 128)
+    local_batch_size: int = 2  # b
+    local_epochs: int = 1  # e
+    local_steps: Optional[int] = None  # fixed step count (engine shape); None = from data
+    data_limit: Optional[int] = None  # paper §4.2.1 non-IID dial (None = no limit)
+    client_sampling: str = "uniform"  # see repro.data.strategies registry
+    client_lr: float = 0.008  # paper's coarse-swept client SGD lr
+    server_optimizer: str = "adam"  # "adam" | "sgd" | "momentum" | "yogi"
     server_lr: float = 1e-3
-    server_warmup_rounds: int = 0       # linear ramp-up (Baseline style)
-    server_decay_rounds: int = 0        # >0: exponential decay (E9/E10 style)
+    server_warmup_rounds: int = 0  # linear ramp-up (Baseline style)
+    server_decay_rounds: int = 0  # >0: exponential decay (E9/E10 style)
     server_decay_rate: float = 0.9
     fvn: FVNConfig = dataclasses.field(default_factory=FVNConfig)
-    engine: str = "fedavg"              # "fedavg" | "fedsgd" (FSDP large-model path)
+    engine: str = "fedavg"  # "fedavg" | "fedsgd" (FSDP path) | "async" (FedBuff)
     # Server-side federated plane (cohort -> compression -> aggregation)
     cohort: CohortConfig = dataclasses.field(default_factory=CohortConfig)
-    compression: CompressionConfig = dataclasses.field(
-        default_factory=CompressionConfig)
-    aggregator: str = "weighted_mean"   # see repro.core.aggregation registry
+    compression: CompressionConfig = dataclasses.field(default_factory=CompressionConfig)
+    aggregation: AggregatorConfig = dataclasses.field(default_factory=AggregatorConfig)
     # Adversarial client corruption (see repro.core.corruption): kind is
     # compile-time structure, rate/scale are traced hyper scalars.
-    corruption: CorruptionConfig = dataclasses.field(
-        default_factory=CorruptionConfig)
-    agg_trim_frac: float = 0.1          # trimmed_mean: fraction trimmed per side
-    dp_clip: float = 1.0                # clipped_mean: per-client L2 clip norm
-    dp_sigma: float = 0.0               # clipped_mean: DP noise multiplier
+    corruption: CorruptionConfig = dataclasses.field(default_factory=CorruptionConfig)
+    # Buffered-async engine knobs (engine="async") and the device-tier
+    # arrival-latency model that orders the update stream. ``latency``
+    # also prices sync rounds: enabled=True reports a barrier round's
+    # simulated duration (slowest participant) in the round metrics.
+    asynchrony: AsyncConfig = dataclasses.field(default_factory=AsyncConfig)
+    latency: LatencyConfig = dataclasses.field(default_factory=LatencyConfig)
     # CFMQ constants (paper §4.3.1): payload/memory approximations
     alpha: float = 1.0
-    param_bytes: int = 4                # bytes per parameter on the wire
+    param_bytes: int = 4  # bytes per parameter on the wire
+
+
+_LEGACY_AGG_KNOBS = {
+    "aggregator": "name",
+    "agg_trim_frac": "trim_frac",
+    "dp_clip": "dp_clip",
+    "dp_sigma": "dp_sigma",
+}
+
+_plan_field_init = FederatedPlan.__init__
+
+
+def _plan_compat_init(self, *args, **kwargs):
+    legacy = {
+        dest: kwargs.pop(name)
+        for name, dest in _LEGACY_AGG_KNOBS.items()
+        if name in kwargs
+    }
+    if legacy:
+        warnings.warn(
+            "FederatedPlan's loose aggregator knobs (aggregator, agg_trim_frac, "
+            "dp_clip, dp_sigma) moved into AggregatorConfig — pass "
+            "aggregation=AggregatorConfig(name=..., trim_frac=..., dp_clip=..., "
+            "dp_sigma=...) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        base = kwargs.get("aggregation", AggregatorConfig())
+        kwargs["aggregation"] = dataclasses.replace(base, **legacy)
+    _plan_field_init(self, *args, **kwargs)
+
+
+# Constructor-compat shim for the pre-AggregatorConfig knob layout:
+# FederatedPlan(aggregator=..., agg_trim_frac=..., dp_clip=..., dp_sigma=...)
+# still constructs (folded into ``aggregation`` with a DeprecationWarning).
+# A wrapped __init__ — not InitVar fields — so dataclasses.replace() round-
+# trips plans without ever re-passing the deprecated names.
+FederatedPlan.__init__ = _plan_compat_init
 
 
 def server_lr_schedule(plan: FederatedPlan):
@@ -77,8 +164,11 @@ def server_lr_schedule(plan: FederatedPlan):
 
     if plan.server_decay_rounds > 0:
         return linear_rampup_exp_decay(
-            plan.server_lr, max(plan.server_warmup_rounds, 1),
-            plan.server_decay_rounds, plan.server_decay_rate)
+            plan.server_lr,
+            max(plan.server_warmup_rounds, 1),
+            plan.server_decay_rounds,
+            plan.server_decay_rate,
+        )
     if plan.server_warmup_rounds > 0:
         return linear_rampup(plan.server_lr, plan.server_warmup_rounds)
     return constant(plan.server_lr)

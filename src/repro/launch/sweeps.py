@@ -32,13 +32,23 @@ Grids:
   sign-flip/stale attacks and the robust rules hold, at *identical*
   wire cost (corrupted clients still pay uplink bytes). Rates and
   magnitudes are traced, so one compilation serves each
-  (aggregator, adversary-kind) cell across every rate in the grid.
+  (aggregator, adversary-kind) cell across every rate in the grid;
+- ``async_vs_sync``: buffered-async (FedBuff-style, see
+  ``repro.core.async_engine``) vs the sync barrier at matched CFMQ
+  across the non-IID ladder — moves the *wall-clock* cost axis
+  (``sim_time_s`` under a shared device-tier latency model) while the
+  byte axes stay pair-identical.
+
+Every row follows ``repro.core.metrics.SUMMARY_KEYS`` (the schema the
+train history and bench summaries share), plus per-grid extras like
+``loss_curve`` / ``sim_time_curve``.
 
 CLI::
 
     PYTHONPATH=src python -m repro.launch.sweeps --grid noniid_fvn --smoke
     PYTHONPATH=src python -m repro.launch.sweeps --grid compression --smoke
     PYTHONPATH=src python -m repro.launch.sweeps --grid robustness --smoke --check
+    PYTHONPATH=src python -m repro.launch.sweeps --grid async_vs_sync --smoke --check
     PYTHONPATH=src python -m repro.launch.sweeps --grid ladder --rounds 100
 
 emits one frontier JSON (WER + final loss vs ``cfmq_tb`` per point,
@@ -59,19 +69,22 @@ import jax
 import numpy as np
 
 from repro.core import (
+    AggregatorConfig,
+    AsyncConfig,
     CohortConfig,
     CompressionConfig,
     CorruptionConfig,
     FederatedPlan,
     FVNConfig,
+    LatencyConfig,
     accumulate_wire_bytes,
+    build_round_engine,
     cfmq,
-    init_server_state,
-    make_hyper_round_step,
     measured_payload,
-    plan_hypers,
     plan_wire_accounting,
+    summary_row,
 )
+from repro.core.cfmq import seconds_to_target
 from repro.data import FederatedSampler, PrefetchIterator, pack_round
 from repro.models import build_model
 
@@ -130,21 +143,23 @@ class SweepRunner:
             self._bundles[specaug_scale] = (cfg, build_model(cfg))
         return self._bundles[specaug_scale]
 
-    def _round_fn(self, plan: FederatedPlan, specaug_scale: float):
-        # aggregator + compression + corruption *kind* are compile-time
-        # structure; every cohort/trim/DP/corruption-rate knob is
-        # traced, so e.g. a participation or adversary-rate grid still
-        # shares one entry here. The data-plane label_shuffle adversary
-        # maps to the identity in-graph plane ("none"), so it shares
-        # the honest compilation too.
-        ckind = (plan.corruption.kind if plan.corruption.in_graph else "none")
-        key = (plan.engine, plan.server_optimizer, float(specaug_scale),
-               plan.aggregator, plan.compression, ckind)
+    def _engine(self, plan: FederatedPlan, specaug_scale: float):
+        """The point's RoundEngine (validated at construction). Cheap —
+        no tracing happens until the jitted hyper_step is called."""
+        _, bundle = self._bundle(specaug_scale)
+        return build_round_engine(plan, bundle.loss_fn)
+
+    def _round_fn(self, engine, specaug_scale: float):
+        # The engine's structural_key IS the compile identity: engine
+        # name + server optimizer + aggregator + compression +
+        # corruption kind (+ latency tiers / async buffer when they
+        # shape the graph). Every cohort/trim/DP/corruption-rate/
+        # latency/staleness knob is traced, so e.g. a participation or
+        # adversary-rate grid still shares one entry here; the
+        # data-plane label_shuffle adversary keys as the honest plane.
+        key = engine.structural_key + (float(specaug_scale),)
         if key not in self._jit_cache:
-            _, bundle = self._bundle(specaug_scale)
-            self._jit_cache[key] = jax.jit(make_hyper_round_step(
-                bundle.loss_fn, plan.engine, plan.server_optimizer,
-                plan.aggregator, plan.compression, corruption=ckind))
+            self._jit_cache[key] = jax.jit(engine.hyper_step)
         return self._jit_cache[key]
 
     def native_steps(self, plan: FederatedPlan) -> int:
@@ -173,9 +188,10 @@ class SweepRunner:
         cfg, bundle = self._bundle(point.specaug_scale)
         params = bundle.init(jax.random.PRNGKey(point.seed))
         n_params = bundle.param_count(params)
-        state = init_server_state(plan, params)
-        round_fn = self._round_fn(plan, point.specaug_scale)
-        hypers = plan_hypers(plan)
+        engine = self._engine(plan, point.specaug_scale)
+        state = engine.init_state(params)
+        round_fn = self._round_fn(engine, point.specaug_scale)
+        hypers = engine.hypers()
         base_key = jax.random.PRNGKey(point.seed + 1)
 
         native = self.native_steps(plan)
@@ -209,6 +225,9 @@ class SweepRunner:
         losses = []
         participants = []
         corrupted = []
+        sim_times = []
+        server_steps = []
+        staleness = []
         batches = (PrefetchIterator(host_batches(), depth=2) if self.prefetch
                    else map(lambda b: jax.tree.map(jax.numpy.asarray, b),
                             host_batches()))
@@ -218,6 +237,9 @@ class SweepRunner:
                 losses.append(float(metrics["loss"]))
                 participants.append(float(metrics["participants"]))
                 corrupted.append(float(metrics["corrupted"]))
+                sim_times.append(float(metrics["sim_time_s"]))
+                server_steps.append(float(metrics["server_steps"]))
+                staleness.append(float(metrics["staleness_mean"]))
         finally:
             if self.prefetch:
                 batches.close()
@@ -244,25 +266,38 @@ class SweepRunner:
                      model_bytes=n_params * plan.param_bytes,
                      local_steps=mu / plan.local_batch_size, alpha=plan.alpha,
                      payload_bytes=payload)
-        row = {
-            "id": point.id,
-            "rounds": point.rounds,
-            "final_loss": float(np.mean(losses[-5:])),
-            "wer": wers["wer"], "wer_hard": wers["wer_hard"],
-            "cfmq_tb": terms.total_terabytes, "cfmq_bytes": terms.total_bytes,
-            "payload_bytes": terms.payload_bytes,
-            "uplink_bytes_client": up_per_client,
-            "uplink_bytes_total": uplink_total,
-            "wire_bytes_total": wire_total,
-            "downlink_bytes_round": down_per_round,
-            "participants_mean": float(np.mean(participants)),
-            "corrupted_mean": float(np.mean(corrupted)) if corrupted else 0.0,
-            "corrupted_total": int(round(sum(corrupted))),
-            "n_params": n_params,
-            "wall_s": time.time() - t0,
-            "loss_curve": losses[:: max(1, point.rounds // 50)],
-            **point.meta,
-        }
+        steps_total = sum(server_steps)
+        # per-round staleness_mean averages over that round's applied
+        # deltas, so the run-level mean weights each round by its step
+        # count (sync rounds: 1 step, staleness 0)
+        stale_mean = (sum(s * w for s, w in zip(staleness, server_steps))
+                      / steps_total if steps_total else 0.0)
+        curve_stride = max(1, point.rounds // 50)
+        row = summary_row(
+            rounds=point.rounds,
+            final_loss=float(np.mean(losses[-5:])),
+            wer=wers["wer"], wer_hard=wers["wer_hard"],
+            cfmq_tb=terms.total_terabytes, cfmq_bytes=terms.total_bytes,
+            payload_bytes=terms.payload_bytes,
+            uplink_bytes_client=up_per_client,
+            uplink_bytes_total=uplink_total,
+            wire_bytes_total=wire_total,
+            downlink_bytes_round=down_per_round,
+            participants_mean=float(np.mean(participants)),
+            corrupted_mean=float(np.mean(corrupted)) if corrupted else 0.0,
+            corrupted_total=int(round(sum(corrupted))),
+            n_params=n_params,
+            sim_time_s=sum(sim_times),
+            server_steps_total=steps_total,
+            staleness_mean=stale_mean,
+            wall_s=time.time() - t0,
+            extras={
+                "id": point.id,
+                "loss_curve": losses[::curve_stride],
+                "sim_time_curve": sim_times[::curve_stride],
+                **point.meta,
+            },
+        )
         log(f"  {point.id:>10s}: loss={row['final_loss']:.3f} "
             f"wer={row['wer']:.3f} cfmq={row['cfmq_tb']:.5f}TB "
             f"({row['wall_s']:.0f}s)")
@@ -342,8 +377,9 @@ def compression_points(rounds: int = 40, smoke: bool = False,
             # (the plan default 0.1 would trim nobody at K=8)
             SweepPoint(id="int8_trim", rounds=rounds, seed=seed,
                        plan=FederatedPlan(**base, compression=int8,
-                                          aggregator="trimmed_mean",
-                                          agg_trim_frac=0.2,
+                                          aggregation=AggregatorConfig(
+                                              name="trimmed_mean",
+                                              trim_frac=0.2),
                                           cohort=CohortConfig(straggler_frac=0.25)),
                        meta={"compression": "int8", "aggregator": "trimmed_mean",
                              "straggler_frac": 0.25}),
@@ -461,13 +497,61 @@ def robustness_points(rounds: int = 40, smoke: bool = False,
                                   [(k, s, r) for k, s in adversaries
                                    for r in rates]):
             plan = FederatedPlan(
-                **base, aggregator=agg, agg_trim_frac=0.3,
+                **base, aggregation=AggregatorConfig(name=agg, trim_frac=0.3),
                 corruption=CorruptionConfig(kind=kind, rate=rate, scale=scale))
             points.append(SweepPoint(
                 id=f"{agg}_{kind}_r{int(round(rate * 100))}",
                 plan=plan, rounds=rounds, seed=seed,
                 meta={"aggregator": agg, "adversary": kind,
                       "corrupt_rate": rate, "corrupt_scale": scale}))
+    return points
+
+
+def async_vs_sync_points(rounds: int = 40, smoke: bool = False, seed: int = 0,
+                         limits=(1, 4, None)) -> list[SweepPoint]:
+    """Buffered-async vs barrier-sync at matched CFMQ across the
+    non-IID ladder — the wall-clock axis of the frontier.
+
+    Both engines share one device-tier latency model, K, round budget
+    and (un)compressed payload, so every pair sits at byte-identical
+    CFMQ; the pair isolates what the async engine buys on the
+    ``sim_time_s`` axis and what (if anything) staleness costs on the
+    quality axis. ``seconds_to_target`` over each row's
+    loss/sim-time curves is the headline readout.
+
+    buffer_size 5 deliberately does NOT divide K = 8: leftover buffered
+    updates carry across waves, so a wave's last flush generally lands
+    BEFORE its slowest arrival — that gap is the async wall-clock win.
+    A divisor buffer at full participation flushes exactly on the last
+    arrival and silently re-creates the sync barrier.
+
+    The async arm's server lr is scaled by B/K (FedBuff's practice): a
+    wave applies ~K/B server steps, so the unscaled lr moves the params
+    ~K/B times further per wave than the barrier engine and overshoots
+    where sync is stable — scaling matches per-wave displacement, which
+    is what "same server lr" actually means across the two engines.
+    """
+    if smoke:
+        rounds = min(rounds, 10)
+        limits = (1, 4)
+    base = dict(clients_per_round=8, local_batch_size=4, local_steps=12,
+                client_lr=0.3, server_warmup_rounds=4,
+                latency=LatencyConfig(enabled=True, base_s=60.0, spread=0.35))
+    server_lr, B = 0.05, 5
+    points = []
+    for limit in limits:
+        lname = f"L{limit if limit is not None else 'inf'}"
+        for engine, acfg in (("fedavg", AsyncConfig()),
+                             ("async", AsyncConfig(buffer_size=B,
+                                                   staleness_beta=0.5))):
+            tag = "sync" if engine == "fedavg" else "async"
+            lr = server_lr * (B / base["clients_per_round"]
+                              if engine == "async" else 1.0)
+            plan = FederatedPlan(**base, data_limit=limit, engine=engine,
+                                 server_lr=lr, asynchrony=acfg)
+            points.append(SweepPoint(
+                id=f"{tag}_{lname}", plan=plan, rounds=rounds, seed=seed,
+                meta={"pair": lname, "engine": engine, "limit": limit}))
     return points
 
 
@@ -550,6 +634,7 @@ GRIDS: Dict[str, Callable[..., list]] = {
     "ef_compression": ef_compression_points,
     "sampling": sampling_points,
     "robustness": robustness_points,
+    "async_vs_sync": async_vs_sync_points,
 }
 
 
@@ -581,8 +666,54 @@ def check_robustness(frontier: dict, log=print) -> None:
     log("[check] robustness grid invariants hold")
 
 
+# Async must land within this factor of the sync final loss at matched
+# CFMQ. At smoke budgets (10 rounds, 5-client flushes, traced staleness
+# discounts) the async arm lands ~1.1-1.25x the sync loss across seeds
+# and beta choices; 1.3 flags the real regressions — an unscaled server
+# lr diverges to ~1.75x here — without flaking on smoke-scale noise.
+ASYNC_LOSS_TOL = 1.3
+
+
+def check_async_vs_sync(frontier: dict, log=print) -> None:
+    """The async engine's claim, asserted (the CI smoke gate): at
+    byte-identical CFMQ, buffered-async finishes its server steps in
+    less simulated wall-clock than the sync barrier while landing at a
+    sync-comparable loss, on every rung of the non-IID ladder."""
+    rows = {r["id"]: r for r in frontier["points"]}
+    for pair in sorted({r["pair"] for r in frontier["points"]}):
+        s, a = rows[f"sync_{pair}"], rows[f"async_{pair}"]
+        assert s["sim_time_s"] > 0 and a["sim_time_s"] > 0, (
+            f"{pair}: wall-clock axis missing — latency model never priced "
+            "a round")
+        # matched cost: same K/rounds/payload and full participation, so
+        # both byte axes must agree exactly
+        assert a["cfmq_bytes"] == s["cfmq_bytes"], (
+            f"{pair}: CFMQ bytes diverged ({a['cfmq_bytes']} vs "
+            f"{s['cfmq_bytes']}) — the pair no longer isolates wall-clock")
+        assert a["wire_bytes_total"] == s["wire_bytes_total"], (
+            f"{pair}: wire bytes diverged ({a['wire_bytes_total']} vs "
+            f"{s['wire_bytes_total']})")
+        assert a["sim_time_s"] < s["sim_time_s"], (
+            f"{pair}: async should beat the barrier on simulated seconds "
+            f"({a['sim_time_s']:.0f}s vs {s['sim_time_s']:.0f}s) — did the "
+            "buffer size become a divisor of K?")
+        assert a["final_loss"] <= s["final_loss"] * ASYNC_LOSS_TOL, (
+            f"{pair}: async loss {a['final_loss']:.3f} not comparable to "
+            f"sync {s['final_loss']:.3f} (tol x{ASYNC_LOSS_TOL})")
+        target = s["final_loss"] * 1.05
+        t_a = seconds_to_target(a["loss_curve"], a["sim_time_curve"], target)
+        t_s = seconds_to_target(s["loss_curve"], s["sim_time_curve"], target)
+        log(f"[check] {pair}: async {a['sim_time_s']:.0f}s/"
+            f"{a['server_steps_total']:.0f} steps/loss {a['final_loss']:.3f} "
+            f"(stale {a['staleness_mean']:.2f}) vs sync "
+            f"{s['sim_time_s']:.0f}s/loss {s['final_loss']:.3f}; "
+            f"seconds-to-target({target:.3f}): async={t_a} sync={t_s}")
+    log("[check] async_vs_sync grid invariants hold")
+
+
 GRID_CHECKS: Dict[str, Callable[..., None]] = {
     "robustness": check_robustness,
+    "async_vs_sync": check_async_vs_sync,
 }
 
 

@@ -26,19 +26,22 @@ from repro.asr.wer import wer
 from repro.checkpoint import Checkpointer
 from repro.configs import get_arch
 from repro.core import (
+    AggregatorConfig,
+    AsyncConfig,
     CohortConfig,
     CompressionConfig,
     CorruptionConfig,
     FederatedPlan,
     FVNConfig,
+    LatencyConfig,
     available_aggregators,
     available_corruptions,
+    build_round_engine,
     cfmq,
-    init_server_state,
-    make_round_step,
     measured_payload,
     plan_wire_accounting,
     round_wire_bytes,
+    summary_row,
 )
 from repro.core.compression import KINDS
 from repro.data import (
@@ -102,8 +105,10 @@ def run_federated_asr(
     key = jax.random.PRNGKey(seed)
     params = bundle.init(key)
     n_params = bundle.param_count(params)
-    state = init_server_state(plan, params)
-    round_step = jax.jit(make_round_step(bundle.loss_fn, plan, jax.random.PRNGKey(seed + 1)))
+    engine = build_round_engine(plan, bundle.loss_fn,
+                                base_key=jax.random.PRNGKey(seed + 1))
+    state = engine.init_state(params)
+    round_step = jax.jit(engine.step)
 
     sampler = FederatedSampler(
         corpus, clients_per_round=plan.clients_per_round,
@@ -136,24 +141,30 @@ def run_federated_asr(
     # byte metrics round above ~16 MB/round, exact ints never do
     up_per_client, down_per_round = plan_wire_accounting(plan, params)
 
-    history = {"loss": [], "rounds": rounds}
     t0 = time.time()
     wire_total = 0
+    losses = []
     participants = []
     corrupted = []
+    sim_times = []
+    server_steps = []
+    staleness = []
     batches = (PrefetchIterator(host_batches(), depth=2) if prefetch
                else map(lambda b: jax.tree.map(jnp.asarray, b), host_batches()))
     try:
         for r, batch in enumerate(batches):
             state, metrics = round_step(state, batch)
-            history["loss"].append(float(metrics["loss"]))
+            losses.append(float(metrics["loss"]))
             participants.append(float(metrics["participants"]))
             corrupted.append(float(metrics["corrupted"]))
+            sim_times.append(float(metrics["sim_time_s"]))
+            server_steps.append(float(metrics["server_steps"]))
+            staleness.append(float(metrics["staleness_mean"]))
             wire_total += round_wire_bytes(up_per_client, down_per_round,
                                            participants[-1])
             if eval_every and (r + 1) % eval_every == 0:
                 w = evaluate_wer(cfg, bundle, state.params, corpus, eval_examples)
-                log(f"round {r+1}: loss={history['loss'][-1]:.4f} "
+                log(f"round {r+1}: loss={losses[-1]:.4f} "
                     f"wer={w['wer']:.3f} wer_hard={w['wer_hard']:.3f}")
             if ckpt and (r + 1) % max(1, rounds // 3) == 0:
                 ckpt.save(r + 1, state.params,
@@ -163,8 +174,8 @@ def run_federated_asr(
         if prefetch:
             batches.close()
 
-    history["train_time_s"] = time.time() - t0
-    history.update(evaluate_wer(cfg, bundle, state.params, corpus, eval_examples))
+    train_time_s = time.time() - t0
+    wers = evaluate_wer(cfg, bundle, state.params, corpus, eval_examples)
     mu = plan.local_epochs * (plan.data_limit or sampler.steps * plan.local_batch_size)
     payload = measured_payload(plan, params, float(np.mean(participants)))
     terms = cfmq(
@@ -172,16 +183,38 @@ def run_federated_asr(
         model_bytes=n_params * plan.param_bytes,
         local_steps=mu / plan.local_batch_size, alpha=plan.alpha,
         payload_bytes=payload)
-    history["cfmq_bytes"] = terms.total_bytes
-    history["cfmq_tb"] = terms.total_terabytes
-    history["wire_bytes"] = wire_total
-    history["participants_mean"] = float(np.mean(participants))
     if plan.corruption.kind == "label_shuffle":
         # data-plane adversary: realized counts live on the sampler
         corrupted = [float(c) for c in sampler.corrupted_counts]
-    history["corrupted_mean"] = float(np.mean(corrupted)) if corrupted else 0.0
-    history["n_params"] = n_params
-    history["final_loss"] = float(np.mean(history["loss"][-5:]))
+    steps_total = sum(server_steps)
+    # same round-metrics schema as the sweep rows and bench summaries
+    # (repro.core.metrics.SUMMARY_KEYS); the loss curve and the legacy
+    # "wire_bytes"/"train_time_s" aliases ride along as extras
+    history = summary_row(
+        rounds=rounds,
+        final_loss=float(np.mean(losses[-5:])),
+        wer=wers["wer"], wer_hard=wers["wer_hard"],
+        cfmq_tb=terms.total_terabytes, cfmq_bytes=terms.total_bytes,
+        payload_bytes=terms.payload_bytes,
+        uplink_bytes_client=up_per_client,
+        uplink_bytes_total=wire_total - down_per_round * rounds,
+        wire_bytes_total=wire_total,
+        downlink_bytes_round=down_per_round,
+        participants_mean=float(np.mean(participants)),
+        corrupted_mean=float(np.mean(corrupted)) if corrupted else 0.0,
+        corrupted_total=int(round(sum(corrupted))),
+        n_params=n_params,
+        sim_time_s=sum(sim_times),
+        server_steps_total=steps_total,
+        staleness_mean=(sum(s * w for s, w in zip(staleness, server_steps))
+                        / steps_total if steps_total else 0.0),
+        wall_s=train_time_s,
+        extras={
+            "loss": losses,
+            "wire_bytes": wire_total,
+            "train_time_s": train_time_s,
+        },
+    )
     return state, history
 
 
@@ -222,9 +255,36 @@ def main():
     ap.add_argument("--client-lr", type=float, default=0.05)
     ap.add_argument("--client-sampling", default="uniform",
                     choices=available_strategies())
-    # server-plane: aggregation / compression / cohort dynamics
-    ap.add_argument("--aggregator", default="weighted_mean",
-                    choices=available_aggregators())
+    # round engine: sync barrier vs buffered-async streaming server
+    eng = ap.add_argument_group("round engine")
+    eng.add_argument("--engine", default="fedavg",
+                     choices=["fedavg", "fedsgd", "async"],
+                     help="barrier FedAvg/FedSGD or the buffered-async "
+                          "(FedBuff-style) streaming server")
+    eng.add_argument("--buffer-size", type=int, default=0,
+                     help="async: server steps when this many updates are "
+                          "buffered (0 = clients-per-round)")
+    eng.add_argument("--staleness-beta", type=float, default=0.5,
+                     help="async: discount buffered deltas by 1/(1+s)^beta, "
+                          "s in server versions since download")
+    eng.add_argument("--latency", action="store_true",
+                     help="price sync rounds in simulated seconds too "
+                          "(async always draws arrival times)")
+    eng.add_argument("--latency-base-s", type=float, default=60.0,
+                     help="device-tier latency model: base upload seconds")
+    eng.add_argument("--latency-spread", type=float, default=0.25,
+                     help="device-tier latency model: lognormal jitter std")
+    # server aggregation rule + its knobs (AggregatorConfig)
+    agg = ap.add_argument_group("aggregation")
+    agg.add_argument("--aggregator", default="weighted_mean",
+                     choices=available_aggregators())
+    agg.add_argument("--trim-frac", type=float, default=0.1,
+                     help="trimmed_mean: fraction trimmed per side")
+    agg.add_argument("--dp-clip", type=float, default=1.0,
+                     help="clipped_mean: per-client L2 clip norm")
+    agg.add_argument("--dp-sigma", type=float, default=0.0,
+                     help="clipped_mean: DP Gaussian noise multiplier")
+    # server-plane: compression / cohort dynamics
     ap.add_argument("--compression", default="none", choices=list(KINDS),
                     help="uplink delta compression (exact wire bytes in CFMQ)")
     ap.add_argument("--topk-frac", type=float, default=0.05)
@@ -239,8 +299,6 @@ def main():
     ap.add_argument("--straggler-frac", type=float, default=0.0)
     ap.add_argument("--straggler-keep", type=float, default=0.5,
                     help="fraction of local steps a straggler completes")
-    ap.add_argument("--trim-frac", type=float, default=0.1,
-                    help="trimmed_mean: fraction trimmed per side")
     # adversarial client corruption (see repro.core.corruption)
     ap.add_argument("--corrupt-kind", default="none",
                     choices=["none", "label_shuffle"] + available_corruptions(),
@@ -250,10 +308,6 @@ def main():
                     help="P(participating client is corrupted) per round")
     ap.add_argument("--corrupt-scale", type=float, default=1.0,
                     help="adversary magnitude (sign_flip/gaussian/stale)")
-    ap.add_argument("--dp-clip", type=float, default=1.0,
-                    help="clipped_mean: per-client L2 clip norm")
-    ap.add_argument("--dp-sigma", type=float, default=0.0,
-                    help="clipped_mean: DP Gaussian noise multiplier")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the async host->device prefetch")
     ap.add_argument("--eval-every", type=int, default=10)
@@ -271,6 +325,12 @@ def main():
         data_limit=args.data_limit, client_lr=args.client_lr,
         client_sampling=args.client_sampling,
         server_lr=args.server_lr, server_warmup_rounds=max(2, args.rounds // 8),
+        engine=args.engine,
+        asynchrony=AsyncConfig(buffer_size=args.buffer_size,
+                               staleness_beta=args.staleness_beta),
+        latency=LatencyConfig(enabled=args.latency,
+                              base_s=args.latency_base_s,
+                              spread=args.latency_spread),
         fvn=FVNConfig(enabled=args.fvn_std > 0, std=args.fvn_std,
                       ramp_rounds=args.fvn_ramp),
         cohort=CohortConfig(participation=args.participation,
@@ -280,8 +340,10 @@ def main():
                                       topk_frac=args.topk_frac,
                                       packed=args.packed_wire,
                                       error_feedback=args.error_feedback),
-        aggregator=args.aggregator, agg_trim_frac=args.trim_frac,
-        dp_clip=args.dp_clip, dp_sigma=args.dp_sigma,
+        aggregation=AggregatorConfig(name=args.aggregator,
+                                     trim_frac=args.trim_frac,
+                                     dp_clip=args.dp_clip,
+                                     dp_sigma=args.dp_sigma),
         corruption=CorruptionConfig(kind=args.corrupt_kind,
                                     rate=args.corrupt_rate,
                                     scale=args.corrupt_scale),

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    AggregatorConfig,
     CohortConfig,
     CompressionConfig,
     FederatedPlan,
@@ -348,7 +349,8 @@ def test_hyper_matches_plan_with_all_knobs_on():
                                              straggler_frac=0.5,
                                              straggler_keep=0.5),
                          compression=CompressionConfig(kind="int8"),
-                         aggregator="trimmed_mean", agg_trim_frac=0.2)
+                         aggregation=AggregatorConfig(name="trimmed_mean",
+                                                      trim_frac=0.2))
     key = jax.random.PRNGKey(11)
     plain = jax.jit(make_round_step(loss_fn, plan, key))
     hyper = jax.jit(make_hyper_round_step(loss_fn, "fedavg", "adam",
@@ -427,7 +429,9 @@ def test_cohort_plan_rejects_weightless_batches():
 
 
 def test_fedsgd_rejects_robust_aggregators():
-    plan = FederatedPlan(engine="fedsgd", aggregator="coordinate_median")
+    plan = FederatedPlan(
+        engine="fedsgd",
+        aggregation=AggregatorConfig(name="coordinate_median"))
     with pytest.raises(ValueError, match="fedsgd"):
         make_round_step(loss_fn, plan, jax.random.PRNGKey(0))
     with pytest.raises(ValueError, match="fedsgd"):

@@ -1,0 +1,250 @@
+"""Buffered-async engine + RoundEngine facade correctness.
+
+The load-bearing claims: (a) with B = K, one device tier and zero
+jitter the async engine IS the sync engine bit-for-bit (the arrival
+stream inserts in client order and flushes exactly once at staleness
+0); (b) the buffer carries partial waves across rounds instead of
+dropping them; (c) staleness discounts engage exactly when the server
+version moves under a buffered delta; (d) invalid engine/plane
+combinations fail at ``build_round_engine`` construction, before any
+tracing.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AggregatorConfig,
+    AsyncConfig,
+    CompressionConfig,
+    CorruptionConfig,
+    FederatedPlan,
+    LatencyConfig,
+    build_round_engine,
+    engine_structural_key,
+    init_server_state,
+    make_round_step,
+    validate_plan,
+)
+from repro.core.async_engine import staleness_discount
+
+W_TRUE = np.random.default_rng(7).normal(size=(4, 2)).astype(np.float32)
+
+
+def loss_fn(params, batch, rng):
+    pred = batch["x"] @ params["w"]
+    w = batch["weight"]
+    l = jnp.sum((pred - batch["y"]) ** 2 * w[:, None]) / jnp.maximum(w.sum(), 1)
+    return l, {}
+
+
+def make_batch(K, S, b, seed=0):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(K, S, b, 4)).astype(np.float32)
+    y = x @ W_TRUE
+    return {"x": jnp.array(x), "y": jnp.array(y),
+            "weight": jnp.ones((K, S, b), np.float32)}
+
+
+def params0():
+    return {"w": jnp.zeros((4, 2))}
+
+
+# One device tier, zero jitter: every arrival lands at the same time,
+# the stable argsort keeps client order — the sync-parity configuration.
+PARITY_LATENCY = LatencyConfig(base_s=60.0, spread=0.0,
+                               tier_speeds=(1.0,), tier_probs=(1.0,))
+
+
+def _plan(**kw):
+    base = dict(clients_per_round=4, client_lr=0.1,
+                server_optimizer="sgd", server_lr=1.0)
+    base.update(kw)
+    return FederatedPlan(**base)
+
+
+def _run(plan, rounds=1, K=None, seed=0):
+    K = K or plan.clients_per_round
+    step = jax.jit(make_round_step(loss_fn, plan, jax.random.PRNGKey(3)))
+    state = init_server_state(plan, params0())
+    metrics = None
+    for r in range(rounds):
+        state, metrics = step(state, make_batch(K, 2, 4, seed=seed + r))
+    return state, metrics
+
+
+# ------------------------------------------------------- sync parity
+
+@pytest.mark.parametrize("beta", [0.0, 0.5, 2.0])
+def test_async_b_equals_k_zero_spread_matches_sync_bitwise(beta):
+    """B = K + single tier + zero spread: every wave inserts K arrivals
+    in client order and flushes once at staleness 0 — the discount is
+    exactly 1.0 for ANY beta, so async == sync bit-for-bit over
+    multiple rounds."""
+    sync, _ = _run(_plan(), rounds=3)
+    asyn, m = _run(_plan(engine="async",
+                         asynchrony=AsyncConfig(buffer_size=4,
+                                                staleness_beta=beta),
+                         latency=PARITY_LATENCY), rounds=3)
+    np.testing.assert_array_equal(np.asarray(sync.params["w"]),
+                                  np.asarray(asyn.params["w"]))
+    assert float(m["server_steps"]) == 1.0
+    assert float(m["staleness_mean"]) == 0.0
+    assert float(m["sim_time_s"]) == 60.0
+
+
+def test_async_hyper_path_matches_plan_path():
+    plan = _plan(engine="async",
+                 asynchrony=AsyncConfig(buffer_size=3, staleness_beta=0.5),
+                 latency=LatencyConfig(base_s=45.0, spread=0.3))
+    key = jax.random.PRNGKey(3)
+    eng = build_round_engine(plan, loss_fn, base_key=key)
+    state_p = eng.init_state(params0())
+    state_h = eng.init_state(params0())
+    hyper = jax.jit(eng.hyper_step)
+    for r in range(3):
+        batch = make_batch(4, 2, 4, seed=r)
+        state_p, mp = eng.step(state_p, batch)
+        state_h, mh = hyper(state_h, batch, eng.hypers(), key)
+        np.testing.assert_array_equal(np.asarray(state_p.params["w"]),
+                                      np.asarray(state_h.params["w"]))
+        np.testing.assert_array_equal(np.asarray(mp["sim_time_s"]),
+                                      np.asarray(mh["sim_time_s"]))
+
+
+# --------------------------------------------------- buffer dynamics
+
+def test_buffer_never_fills_holds_updates_and_params():
+    """B > K: the wave ends with the buffer partially filled, zero
+    server steps, params bitwise unchanged — and the arrivals WAIT in
+    state.abuf rather than being dropped."""
+    plan = _plan(engine="async",
+                 asynchrony=AsyncConfig(buffer_size=6, staleness_beta=0.5),
+                 latency=PARITY_LATENCY)
+    state, m = _run(plan, rounds=1)
+    assert float(m["server_steps"]) == 0.0
+    np.testing.assert_array_equal(np.asarray(state.params["w"]),
+                                  np.asarray(params0()["w"]))
+    assert int(state.abuf.count) == 4
+    assert int(state.abuf.version) == 0
+    # a flushless wave still observes its stream to the last arrival
+    assert float(m["sim_time_s"]) == 60.0
+    # the second wave's 2 arrivals complete the buffer -> one flush of
+    # now-stale wave-1 deltas
+    step = jax.jit(make_round_step(loss_fn, plan, jax.random.PRNGKey(3)))
+    state2, m2 = step(state, make_batch(4, 2, 4, seed=1))
+    assert float(m2["server_steps"]) == 1.0
+    assert int(state2.abuf.count) == 2
+
+
+def test_all_stale_flush_statistics():
+    """B = 2, K = 4, full participation: flush 1 lands mid-wave at
+    staleness 0, bumping the version under the remaining arrivals, so
+    flush 2 is ALL-stale (both deltas downloaded one version ago).
+    staleness_mean = (0 + 0 + 1 + 1) / 4."""
+    plan = _plan(engine="async",
+                 asynchrony=AsyncConfig(buffer_size=2, staleness_beta=0.5),
+                 latency=PARITY_LATENCY)
+    state, m = _run(plan, rounds=1)
+    assert float(m["server_steps"]) == 2.0
+    assert float(m["staleness_mean"]) == pytest.approx(0.5)
+    assert int(state.abuf.version) == 2
+
+
+def test_staleness_discount_exactness_and_effect():
+    # bitwise-exact 1.0 on both parity axes: s = 0 (any beta) and
+    # beta = 0 (any s) — the sync-parity tests cost no tolerance
+    s = jnp.asarray([0.0, 1.0, 3.0, 10.0])
+    assert np.all(np.asarray(staleness_discount(jnp.zeros(4), 1.7)) == 1.0)
+    assert np.all(np.asarray(staleness_discount(s, 0.0)) == 1.0)
+    np.testing.assert_allclose(np.asarray(staleness_discount(s, 1.0)),
+                               1.0 / (1.0 + np.asarray(s)), rtol=1e-6)
+    # beta = 0 is the unweighted engine; a nonzero beta must actually
+    # change the params whenever a stale flush occurs (B = 2 above)
+    mk = lambda b: _plan(engine="async",
+                         asynchrony=AsyncConfig(buffer_size=2,
+                                                staleness_beta=b),
+                         latency=PARITY_LATENCY)
+    w0 = np.asarray(_run(mk(0.0), rounds=1)[0].params["w"])
+    w0b = np.asarray(_run(mk(0.0), rounds=1)[0].params["w"])
+    w1 = np.asarray(_run(mk(1.0), rounds=1)[0].params["w"])
+    np.testing.assert_array_equal(w0, w0b)
+    assert not np.array_equal(w0, w1)
+
+
+def test_async_wins_wall_clock_when_buffer_not_divisor():
+    """B does not divide K: leftovers cycle across waves, so the last
+    flush of a wave generally precedes the slowest arrival — async's
+    sim_time_s must undercut the sync barrier's on the same latency
+    draw."""
+    lat = LatencyConfig(enabled=True, base_s=60.0, spread=0.4)
+    _, ms = _run(_plan(latency=lat), rounds=2, seed=5)
+    _, ma = _run(_plan(engine="async",
+                       asynchrony=AsyncConfig(buffer_size=3,
+                                              staleness_beta=0.5),
+                       latency=lat), rounds=2, seed=5)
+    assert float(ma["sim_time_s"]) < float(ms["sim_time_s"])
+
+
+# -------------------------------------- construction-time validation
+
+def test_build_round_engine_rejects_invalid_plans():
+    bad = [
+        _plan(engine="fedsgd",
+              aggregation=AggregatorConfig(name="coordinate_median")),
+        _plan(engine="fedsgd",
+              compression=CompressionConfig(kind="topk",
+                                            error_feedback=True)),
+        _plan(engine="async",
+              asynchrony=AsyncConfig(buffer_size=-1)),
+        _plan(engine="async",
+              asynchrony=AsyncConfig(staleness_beta=-0.5)),
+        dataclasses.replace(_plan(), engine="fedmystery"),
+    ]
+    for plan in bad:
+        with pytest.raises(ValueError):
+            build_round_engine(plan, loss_fn)
+        with pytest.raises(ValueError):
+            validate_plan(plan)
+    # the messages carry the capability gap, not a traced-shape error
+    with pytest.raises(ValueError, match="fedsgd"):
+        build_round_engine(bad[0], loss_fn)
+
+
+def test_structural_key_shares_traced_knobs_only():
+    a = _plan(engine="async",
+              asynchrony=AsyncConfig(buffer_size=3, staleness_beta=0.5),
+              latency=LatencyConfig(base_s=60.0, spread=0.3))
+    # beta / base_s / spread are traced: same compiled graph
+    b = dataclasses.replace(
+        a, asynchrony=AsyncConfig(buffer_size=3, staleness_beta=2.0),
+        latency=LatencyConfig(base_s=10.0, spread=0.9))
+    assert engine_structural_key(a) == engine_structural_key(b)
+    # buffer size shapes the buffer: different graph
+    c = dataclasses.replace(a, asynchrony=AsyncConfig(buffer_size=4))
+    assert engine_structural_key(a) != engine_structural_key(c)
+    # sync plans only grow a latency facet when pricing is enabled
+    assert engine_structural_key(_plan()) == engine_structural_key(
+        _plan(latency=LatencyConfig(base_s=999.0)))
+    assert engine_structural_key(_plan()) != engine_structural_key(
+        _plan(latency=LatencyConfig(enabled=True)))
+
+
+def test_legacy_aggregator_kwargs_warn_and_fold_in():
+    with pytest.warns(DeprecationWarning, match="AggregatorConfig"):
+        plan = FederatedPlan(aggregator="trimmed_mean", agg_trim_frac=0.2,
+                             dp_sigma=0.3)
+    assert plan.aggregation == AggregatorConfig(name="trimmed_mean",
+                                                trim_frac=0.2, dp_sigma=0.3)
+    # dataclasses.replace must neither re-warn nor clobber
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        plan2 = dataclasses.replace(plan, clients_per_round=2)
+        plan3 = dataclasses.replace(
+            plan, aggregation=AggregatorConfig(name="weighted_mean"))
+    assert plan2.aggregation == plan.aggregation
+    assert plan3.aggregation.name == "weighted_mean"

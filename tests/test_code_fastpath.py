@@ -6,7 +6,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import FederatedPlan, CompressionConfig, init_server_state, make_round_step
+from repro.core import (
+    AggregatorConfig,
+    CompressionConfig,
+    FederatedPlan,
+    init_server_state,
+    make_round_step,
+)
 from repro.core.compression import (
     code_domain_aggregate,
     fastpath_leaf_keys,
@@ -218,7 +224,7 @@ def test_fast_path_static_selection():
     off = [FederatedPlan(),
            FederatedPlan(compression=CompressionConfig(kind="topk")),
            FederatedPlan(compression=CompressionConfig(kind="int8"),
-                         aggregator="trimmed_mean"),
+                         aggregation=AggregatorConfig(name="trimmed_mean")),
            FederatedPlan(compression=CompressionConfig(kind="int8",
                                                        error_feedback=True)),
            FederatedPlan(compression=CompressionConfig(kind="int8"),

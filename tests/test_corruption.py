@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    AggregatorConfig,
     CohortConfig,
     CompressionConfig,
     CorruptionConfig,
@@ -220,7 +221,7 @@ def test_hyper_path_matches_plan_path_under_attack():
         clients_per_round=4, client_lr=0.1, server_optimizer="adam",
         server_lr=0.05,
         cohort=CohortConfig(participation=0.6),
-        aggregator="trimmed_mean", agg_trim_frac=0.2,
+        aggregation=AggregatorConfig(name="trimmed_mean", trim_frac=0.2),
         corruption=CorruptionConfig(kind="sign_flip", rate=0.5, scale=2.0))
     key = jax.random.PRNGKey(11)
     plain = jax.jit(make_round_step(loss_fn, plan, key))

@@ -1,0 +1,116 @@
+"""One round-metrics / summary schema across every emitter.
+
+``repro.core.metrics`` is the contract: the jitted engines emit exactly
+``ROUND_METRIC_KEYS`` per round, and the three run-summary emitters —
+``launch.train.run_federated_asr``, ``launch.sweeps.run_point`` and
+``benchmarks.common.run_experiment`` — all build their dicts through
+``summary_row``, so a key added to one cannot silently drift from the
+others (the pre-schema code had three hand-maintained dicts).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ROUND_METRIC_KEYS,
+    SUMMARY_KEYS,
+    AsyncConfig,
+    FederatedPlan,
+    LatencyConfig,
+    init_server_state,
+    make_round_step,
+    summary_row,
+)
+
+
+def _loss_fn(params, batch, rng):
+    pred = batch["x"] @ params["w"]
+    w = batch["weight"]
+    l = jnp.sum((pred - batch["y"]) ** 2 * w[:, None]) / jnp.maximum(w.sum(), 1)
+    return l, {}
+
+
+def _batch(K=4, S=1, b=4):
+    r = np.random.default_rng(0)
+    x = r.normal(size=(K, S, b, 4)).astype(np.float32)
+    w_true = r.normal(size=(4, 2)).astype(np.float32)
+    return {"x": jnp.array(x), "y": jnp.array(x @ w_true),
+            "weight": jnp.ones((K, S, b), np.float32)}
+
+
+def _dummy_fields(**over):
+    fields = {k: 0.0 for k in SUMMARY_KEYS}
+    fields.update(over)
+    return fields
+
+
+# ------------------------------------------------------- summary_row
+
+def test_summary_row_orders_schema_first():
+    row = summary_row(extras={"id": "x", "loss_curve": [1.0]},
+                      **_dummy_fields(rounds=3))
+    assert list(row)[: len(SUMMARY_KEYS)] == list(SUMMARY_KEYS)
+    assert row["rounds"] == 3 and row["id"] == "x"
+
+
+def test_summary_row_rejects_missing_unknown_and_shadowing():
+    fields = _dummy_fields()
+    missing = dict(fields)
+    del missing["wer"]
+    with pytest.raises(ValueError, match="wer"):
+        summary_row(**missing)
+    with pytest.raises(ValueError, match="not_a_field"):
+        summary_row(not_a_field=1.0, **fields)
+    with pytest.raises(ValueError, match="wer"):
+        summary_row(extras={"wer": 0.1}, **fields)
+
+
+# ------------------------------------------- per-round metric schema
+
+@pytest.mark.parametrize("plan", [
+    FederatedPlan(clients_per_round=4, client_lr=0.1),
+    FederatedPlan(clients_per_round=4, client_lr=0.1, engine="fedsgd"),
+    FederatedPlan(clients_per_round=4, client_lr=0.1,
+                  latency=LatencyConfig(enabled=True)),
+    FederatedPlan(clients_per_round=4, client_lr=0.1, engine="async",
+                  asynchrony=AsyncConfig(buffer_size=3)),
+], ids=["fedavg", "fedsgd", "fedavg_latency", "async"])
+def test_every_engine_emits_the_round_metric_schema(plan):
+    step = jax.jit(make_round_step(_loss_fn, plan, jax.random.PRNGKey(0)))
+    _, metrics = step(init_server_state(plan, {"w": jnp.zeros((4, 2))}),
+                      _batch())
+    assert set(metrics) == set(ROUND_METRIC_KEYS)
+
+
+# ------------------------------------------------- the three emitters
+
+@pytest.mark.slow
+def test_train_sweep_and_bench_summaries_share_the_schema(tmp_path):
+    from benchmarks import common
+    from repro.launch.sweeps import SweepPoint, SweepRunner
+    from repro.launch.train import run_federated_asr, tiny_asr_setup
+
+    cfg, corpus = tiny_asr_setup(0)
+    runner = SweepRunner(cfg=cfg, corpus=corpus, seed=0, eval_examples=8)
+    plan = FederatedPlan(clients_per_round=8, local_batch_size=4,
+                         data_limit=2, local_steps=4, client_lr=0.3,
+                         server_lr=0.05)
+
+    _, hist = run_federated_asr(cfg, corpus, plan, rounds=2, seed=0,
+                                eval_examples=8, log=lambda *a: None)
+    row = runner.run_point(SweepPoint(id="p", plan=plan, rounds=2),
+                           log=lambda *a: None)
+    common.ROUNDS, common.CACHE, common._RUNNER = 2, str(tmp_path), runner
+    common._MEM.clear()
+    bench = common.run_experiment("E1")
+
+    for emitter, d in (("train", hist), ("sweep", row), ("bench", bench)):
+        assert list(d)[: len(SUMMARY_KEYS)] == list(SUMMARY_KEYS), emitter
+    # the emitters differ only in their documented extras
+    assert set(hist) - set(SUMMARY_KEYS) == {"loss", "wire_bytes",
+                                             "train_time_s"}
+    assert set(row) - set(SUMMARY_KEYS) == {"id", "loss_curve",
+                                            "sim_time_curve"}
+    assert set(bench) - set(SUMMARY_KEYS) == {"id", "loss_curve",
+                                              "sim_time_curve", "experiment"}
