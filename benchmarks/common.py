@@ -68,3 +68,25 @@ def run_experiment(eid: str, seed: int = 0) -> dict:
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def bench_reps(env: str, knob: str) -> int:
+    """Rep count for a bench loop: the environment variable wins (CI
+    pins budgets), otherwise the tuner knob (results/tuning.json can
+    retune per device)."""
+    from repro.profile.tuner import get_knob
+
+    raw = os.environ.get(env)
+    return max(1, int(raw)) if raw else int(get_knob(knob))
+
+
+def interleaved_min_us(fns: dict, reps=None) -> dict:
+    """Microsecond wrapper over the profiling plane's shared
+    interleaved order-rotating min protocol
+    (``repro.profile.trace.measure_interleaved_min``) — the fed_round
+    bench measurement style, now the default for every micro-bench:
+    per-cycle order rotation cancels slow-drift runner load, and the
+    per-fn MIN is the noise floor each graph can reach."""
+    from repro.profile.trace import measure_interleaved_min
+
+    return {k: v * 1e6 for k, v in measure_interleaved_min(fns, reps=reps).items()}

@@ -1,6 +1,12 @@
 """Micro-benchmarks of the Pallas kernel wrappers (interpret mode on
 CPU — relative timings only; the jnp fallback is the CPU production
 path) and the jnp blockwise implementations they target.
+
+Measurement protocol (all benches): interleaved order-rotating reps
+with per-variant MIN, via ``benchmarks.common.interleaved_min_us``
+(the fed_round protocol, shared through ``repro.profile.trace``).
+Rep counts come from tuner knobs (``results/tuning.json``) unless the
+``REPRO_BENCH_*_REPS`` environment pins them.
 """
 from __future__ import annotations
 
@@ -10,18 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import bench_reps, csv_row, interleaved_min_us
 from repro.kernels import ref
 from repro.models.attention import blockwise_attention
-
-
-def _time(fn, *args, n=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(n):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / n * 1e6
 
 
 def bench_attention():
@@ -32,10 +29,13 @@ def bench_attention():
     v = jnp.asarray(rng.normal(size=(B, S, Kv, D)), jnp.float32)
     blockwise = jax.jit(lambda q, k, v: blockwise_attention(q, k, v, causal=True, block_kv=256))
     naive = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
-    t_block = _time(blockwise, q, k, v)
-    t_naive = _time(naive, q, k, v)
-    print(csv_row("attention_blockwise_1k", t_block, f"naive_us={t_naive:.1f}"))
-    return t_block, t_naive
+    t = interleaved_min_us({"block": lambda: blockwise(q, k, v),
+                            "naive": lambda: naive(q, k, v)},
+                           reps=bench_reps("REPRO_BENCH_MICRO_REPS",
+                                           "bench.micro_reps"))
+    print(csv_row("attention_blockwise_1k", t["block"],
+                  f"naive_us={t['naive']:.1f}"))
+    return t["block"], t["naive"]
 
 
 def bench_rnnt_joint():
@@ -52,14 +52,16 @@ def bench_rnnt_joint():
 
     chunked = jax.jit(lambda *a: _joint_ref_chunked(*a))
     naive = jax.jit(lambda e, g, w, b, l: ref.rnnt_joint_ref(e, g, w, b, l))
-    t_c = _time(chunked, e, g, w, b, lbl)
-    t_n = _time(naive, e, g, w, b, lbl)
+    t = interleaved_min_us({"chunked": lambda: chunked(e, g, w, b, lbl),
+                            "naive": lambda: naive(e, g, w, b, lbl)},
+                           reps=bench_reps("REPRO_BENCH_MICRO_REPS",
+                                           "bench.micro_reps"))
     # memory derived: naive materializes B*T*U1*V f32
     naive_bytes = B * T * U1 * V * 4
     chunk_bytes = B * T * 8 * V * 4
-    print(csv_row("rnnt_joint_chunked", t_c,
-                  f"naive_us={t_n:.1f};mem_ratio={naive_bytes/chunk_bytes:.0f}x"))
-    return t_c, t_n
+    print(csv_row("rnnt_joint_chunked", t["chunked"],
+                  f"naive_us={t['naive']:.1f};mem_ratio={naive_bytes/chunk_bytes:.0f}x"))
+    return t["chunked"], t["naive"]
 
 
 def _fed_round_setup():
@@ -138,7 +140,6 @@ def bench_fed_round():
     the paired-measurement noise floor; the raw median ratios are
     printed in the derived column and persisted next to the flags).
     """
-    import os
     import statistics
 
     from repro.core import client_wire_bytes, init_server_state, make_round_step
@@ -153,7 +154,7 @@ def bench_fed_round():
                                               jax.random.PRNGKey(1)))
         states[name], m = steps[name](states[name], batch)       # compile
         jax.block_until_ready(m["loss"])
-    reps = max(1, int(os.environ.get("REPRO_BENCH_FED_REPS", "5")))
+    reps = bench_reps("REPRO_BENCH_FED_REPS", "bench.fed_reps")
     cycle_times = {name: [] for name, _ in variants}
 
     def step_once(name):
@@ -172,7 +173,8 @@ def bench_fed_round():
     # steps, so host-steal drift has ~one round step to move instead of
     # a whole cycle), median of the pair ratios.
     flags = {}
-    pair_reps = max(3, int(os.environ.get("REPRO_BENCH_FED_PAIR_REPS", "6")))
+    pair_reps = max(3, bench_reps("REPRO_BENCH_FED_PAIR_REPS",
+                                  "bench.fed_pair_reps"))
     for tag, name in [("int8", "fed_round_tiny_rnnt_int8"),
                       ("int4_packed", "fed_round_tiny_rnnt_int4_packed")]:
         ratios = []
@@ -249,16 +251,11 @@ def bench_wire_plane():
                                              n_k, pmask, {}, key))
         fast = jax.jit(lambda tr, c=cfg: code_domain_aggregate(
             c, tr, n_k, pmask, ckeys))
-        jax.block_until_ready(slow(tree))                 # compile both
-        jax.block_until_ready(fast(tree))
-        t_slow = t_fast = float("inf")
-        for _ in range(12):
-            t0 = time.perf_counter()
-            jax.block_until_ready(slow(tree))
-            t_slow = min(t_slow, (time.perf_counter() - t0) * 1e6)
-            t0 = time.perf_counter()
-            jax.block_until_ready(fast(tree))
-            t_fast = min(t_fast, (time.perf_counter() - t0) * 1e6)
+        t = interleaved_min_us({"slow": lambda: slow(tree),
+                                "fast": lambda: fast(tree)},
+                               reps=bench_reps("REPRO_BENCH_WIRE_REPS",
+                                               "bench.wire_reps"))
+        t_slow, t_fast = t["slow"], t["fast"]
         speedup = t_slow / max(t_fast, 1e-9)
         times[f"wire_plane_{tag}"] = t_fast
         speedups[f"{tag}_speedup"] = round(speedup, 2)
@@ -267,12 +264,13 @@ def bench_wire_plane():
     return times, speedups
 
 
-def main() -> tuple[dict, dict]:
+def main(trace_path: str = "results/trace_kernels.json") -> tuple[dict, dict]:
     """Runs every micro-bench; returns (times, extra): {bench_name:
     us_per_call} plus the extra gated sections — the never-flip
     code-fast-path pass flags and the wire-plane fast-vs-slow speedups
     — so the harness can persist all of it for the CI regression
-    gate."""
+    gate. Per-kernel timings also land in a profiling-plane trace
+    (``trace_path``; empty string disables)."""
     times = {}
     times["attention_blockwise_1k"], _ = bench_attention()
     times["rnnt_joint_chunked"], _ = bench_rnnt_joint()
@@ -280,6 +278,12 @@ def main() -> tuple[dict, dict]:
     times.update(plane_times)
     round_times, flags = bench_fed_round()
     times.update(round_times)
+    if trace_path:
+        from repro.profile.trace import write_trace
+
+        write_trace(trace_path, "kernels", kernels=times,
+                    meta={"wire_plane": plane_speedups})
+        print(f"[trace] {trace_path}")
     return times, {"code_fast_path": flags, "wire_plane": plane_speedups}
 
 

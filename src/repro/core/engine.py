@@ -26,6 +26,7 @@ way the drivers consume an engine:
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable, NamedTuple, Optional
 
@@ -106,6 +107,23 @@ def engine_structural_key(plan: FederatedPlan) -> tuple:
     elif lat.enabled:
         key += (True, lat.tier_speeds, lat.tier_probs)
     return key
+
+
+def structural_key_str(key) -> str:
+    """Canonical string form of a structural key (or any facet of one)
+    — the trace-JSON join identity. ``structural_key`` tuples contain
+    frozen config dataclasses whose repr is deterministic, but raw
+    reprs are noisy; this flattens to a compact slug so trace records
+    keyed on two machines compare equal for equal graphs."""
+    if isinstance(key, tuple):
+        return "|".join(structural_key_str(k) for k in key)
+    if dataclasses.is_dataclass(key) and not isinstance(key, type):
+        fields = ",".join(
+            f"{f.name}={structural_key_str(getattr(key, f.name))}"
+            for f in dataclasses.fields(key)
+        )
+        return f"{type(key).__name__}({fields})"
+    return str(key)
 
 
 def build_round_engine(plan: FederatedPlan, loss_fn: Callable, base_key=None) -> RoundEngine:

@@ -320,37 +320,62 @@ def topk_unpack_segmented_pallas(values, idx, n: int, *, seg: int = 2048, interp
 # ---------------------------------------------------- public auto-dispatch
 # Pallas on TPU; the jnp oracle is the CPU production path (interpret
 # mode is for tests only — same convention as repro.kernels.ops).
+# Every dispatch constant lives in the tuning registry
+# (repro.profile.tuner): 'wire_pack.dispatch' overrides the
+# backend choice per device, 'wire_pack.topk_seg_min_n' /
+# 'wire_pack.topk_seg_size' are the PR 5 segmented-scatter thresholds,
+# re-measurable on this machine via `python -m repro.profile.tuner
+# --autotune topk`. The lazy import keeps the kernel layer free of any
+# import-order coupling (tuner is stdlib-only at module level).
+
+
+def _dispatch() -> tuple:
+    """(use_ref, interpret) for this call site, honoring the tuning
+    registry's measured per-device override."""
+    from repro.profile.tuner import get_knob
+
+    mode = get_knob("wire_pack.dispatch")
+    if mode == "ref":
+        return True, False
+    if mode == "pallas":
+        return False, _on_cpu()
+    return _on_cpu(), False
 
 
 def nibble_pack(codes):
-    if _on_cpu():
+    use_ref, interpret = _dispatch()
+    if use_ref:
         return ref.nibble_pack_ref(codes)
-    return nibble_pack_pallas(codes)
+    return nibble_pack_pallas(codes, interpret=interpret)
 
 
 def nibble_unpack(packed, n: int):
-    if _on_cpu():
+    use_ref, interpret = _dispatch()
+    if use_ref:
         return ref.nibble_unpack_ref(packed, n)
-    return nibble_unpack_pallas(packed, n)
+    return nibble_unpack_pallas(packed, n, interpret=interpret)
 
 
 def dequantize(codes, scale):
-    if _on_cpu():
+    use_ref, interpret = _dispatch()
+    if use_ref:
         return ref.dequantize_ref(codes, scale)
-    return dequantize_pallas(codes, jnp.asarray(scale, jnp.float32))
-
-
-# Below this many output elements the serial kernel's single block is
-# cheaper than sorting the payload + a multi-cell grid.
-_SEG_MIN_N = 4096
+    return dequantize_pallas(codes, jnp.asarray(scale, jnp.float32), interpret=interpret)
 
 
 def topk_unpack(values, idx, n: int):
-    if _on_cpu():
+    from repro.profile.tuner import get_knob
+
+    use_ref, interpret = _dispatch()
+    if use_ref:
         return ref.topk_unpack_ref(values, idx, n)
-    if n < _SEG_MIN_N:
-        return topk_unpack_pallas(values, idx, n)
-    return topk_unpack_segmented_pallas(values, idx, n)
+    # below the measured crossover the serial kernel's single block is
+    # cheaper than sorting the payload + a multi-cell grid
+    if n < int(get_knob("wire_pack.topk_seg_min_n")):
+        return topk_unpack_pallas(values, idx, n, interpret=interpret)
+    return topk_unpack_segmented_pallas(
+        values, idx, n, seg=int(get_knob("wire_pack.topk_seg_size")), interpret=interpret
+    )
 
 
 def quantize_with_scale(x, scale, u, bits: int):
@@ -359,12 +384,15 @@ def quantize_with_scale(x, scale, u, bits: int):
     field (x-shaped; None = nearest). Bit-identical to the historical
     quantize_codes math for the same key — ``u < frac`` IS
     jax.random.bernoulli's draw."""
-    if _on_cpu():
+    use_ref, interpret = _dispatch()
+    if use_ref:
         levels = 2.0 ** (bits - 1) - 1.0
         return ref.quantize_codes_with_scale_ref(x, scale, u, levels)
     flat = x.reshape(-1)
     uf = None if u is None else u.reshape(-1)
-    out = quantize_with_scale_pallas(flat, jnp.asarray(scale, jnp.float32), uf, bits)
+    out = quantize_with_scale_pallas(
+        flat, jnp.asarray(scale, jnp.float32), uf, bits, interpret=interpret
+    )
     return out.reshape(jnp.shape(x))
 
 
@@ -372,8 +400,11 @@ def quantize_pack(x, scale, u, bits: int):
     """Fused uplink client kernel: (n,) f32 -> the intN wire buffer
     (int8: the codes; int4: nibble-packed bytes), quantized against a
     caller-supplied (shared or per-tensor) scale in one pass."""
-    if _on_cpu():
+    use_ref, interpret = _dispatch()
+    if use_ref:
         return ref.quantize_pack_ref(x, scale, u, bits)
     if bits == 4:
-        return quantize_pack4_pallas(x, jnp.asarray(scale, jnp.float32), u)
-    return quantize_with_scale_pallas(x, jnp.asarray(scale, jnp.float32), u, bits)
+        return quantize_pack4_pallas(x, jnp.asarray(scale, jnp.float32), u, interpret=interpret)
+    return quantize_with_scale_pallas(
+        x, jnp.asarray(scale, jnp.float32), u, bits, interpret=interpret
+    )

@@ -17,7 +17,15 @@ walks the optimized post-SPMD HLO text instead:
 
 Shapes in post-SPMD HLO are per-device shards, so every number is
 per-chip — divide by per-chip peaks for roofline terms.
+
+Robustness: HLO text evolves across XLA releases (dynamic ``<=N``
+bounded dims, new narrow dtypes, opcode syntax we have never seen).
+Instructions this parser cannot price degrade to a counted
+``unparsed_ops`` field on :class:`CostSummary` instead of raising
+mid-parse, so the profiling plane's predictor keeps working on newer
+jax HLO text — consumers decide how much unparsed mass they tolerate.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -25,32 +33,94 @@ import math
 import re
 
 _DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
-    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
-    "token": 0, "opaque": 0,
+    "pred": 1,
+    "s4": 1,
+    "u4": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "f16": 2,
+    "bf16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1,
+    "f8e4m3": 1,
+    "f8e5m2fnuz": 1,
+    "token": 0,
+    "opaque": 0,
 }
 
-_NO_BYTES = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
-             "after-all", "partition-id", "replica-id"}
+_NO_BYTES = {
+    "parameter",
+    "constant",
+    "tuple",
+    "get-tuple-element",
+    "bitcast",
+    "after-all",
+    "partition-id",
+    "replica-id",
+}
 _NO_FLOPS = _NO_BYTES | {
-    "copy", "reshape", "broadcast", "transpose", "slice", "dynamic-slice",
-    "dynamic-update-slice", "concatenate", "gather", "iota", "convert",
-    "reverse", "pad", "reduce", "while", "fusion", "call", "conditional",
-    "custom-call", "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-    "collective-permute", "select", "compare", "rng-bit-generator", "dot",
-    "scatter", "sort", "optimization-barrier", "convolution", "copy-start",
-    "copy-done", "send", "recv", "send-done", "recv-done", "infeed", "outfeed",
+    "copy",
+    "reshape",
+    "broadcast",
+    "transpose",
+    "slice",
+    "dynamic-slice",
+    "dynamic-update-slice",
+    "concatenate",
+    "gather",
+    "iota",
+    "convert",
+    "reverse",
+    "pad",
+    "reduce",
+    "while",
+    "fusion",
+    "call",
+    "conditional",
+    "custom-call",
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "select",
+    "compare",
+    "rng-bit-generator",
+    "dot",
+    "scatter",
+    "sort",
+    "optimization-barrier",
+    "convolution",
+    "copy-start",
+    "copy-done",
+    "send",
+    "recv",
+    "send-done",
+    "recv-done",
+    "infeed",
+    "outfeed",
 }
 
-COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-               "collective-permute")
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)\(")
+# every bracketed shape token, including dims this parser cannot price
+# (dynamic "<=128", "?", ...) — the delta vs _SHAPE_RE is what degrades
+# to unparsed_ops instead of raising.
+_ANY_SHAPE_RE = re.compile(r"(\w+)\[([^\]]*)\]")
+_DIMS_OK_RE = re.compile(r"^[\d,]*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)\(")
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
 
 
@@ -78,6 +148,22 @@ def shape_elems(type_str: str) -> int:
     return total
 
 
+def shape_unparsed(type_str: str) -> int:
+    """Count array tokens in ``type_str`` this parser cannot price:
+    non-literal dims (``f32[<=128]``) or dtypes missing from the byte
+    table (``u2[64]``). Zero for every shape the cost model fully
+    understands."""
+    bad = 0
+    for dtype, dims in _ANY_SHAPE_RE.findall(type_str):
+        if not _DIMS_OK_RE.match(dims):
+            bad += 1
+        elif dtype not in _DTYPE_BYTES and not dtype.isdigit():
+            # pure-digit "tokens" are layout minor-to-major annotations
+            # ({1,0:T(8,128)} fragments), not dtypes
+            bad += 1
+    return bad
+
+
 def _first_array_dims(type_str: str):
     m = _SHAPE_RE.search(type_str)
     if not m:
@@ -97,8 +183,9 @@ class Instr:
 class CostSummary:
     flops: float = 0.0
     bytes: float = 0.0
-    collective_bytes: float = 0.0        # raw payload bytes
-    link_bytes: float = 0.0              # ring-model link traffic
+    collective_bytes: float = 0.0  # raw payload bytes
+    link_bytes: float = 0.0  # ring-model link traffic
+    unparsed_ops: float = 0.0  # instructions priced best-effort (or not at all)
     collectives: dict = dataclasses.field(default_factory=dict)
 
     def add(self, other: "CostSummary", mult: float = 1.0):
@@ -106,12 +193,15 @@ class CostSummary:
         self.bytes += mult * other.bytes
         self.collective_bytes += mult * other.collective_bytes
         self.link_bytes += mult * other.link_bytes
+        self.unparsed_ops += mult * other.unparsed_ops
         for k, v in other.collectives.items():
             cur = self.collectives.get(k, {"count": 0.0, "bytes": 0.0, "link_bytes": 0.0})
+            # tolerate partially-populated entries (older trace JSON,
+            # hand-built summaries): missing keys count as zero
             self.collectives[k] = {
-                "count": cur["count"] + mult * v["count"],
-                "bytes": cur["bytes"] + mult * v["bytes"],
-                "link_bytes": cur["link_bytes"] + mult * v["link_bytes"],
+                "count": cur.get("count", 0.0) + mult * v.get("count", 0.0),
+                "bytes": cur.get("bytes", 0.0) + mult * v.get("bytes", 0.0),
+                "link_bytes": cur.get("link_bytes", 0.0) + mult * v.get("link_bytes", 0.0),
             }
 
 
@@ -129,7 +219,11 @@ class HloCostModel:
             if not stripped:
                 continue
             if stripped.endswith("{") and "->" in stripped:
-                if "=" not in stripped.split("->")[0]:
+                # "=" before "->" means an instruction, not a header —
+                # but ignore "=" inside shape brackets (dynamic "<=N"
+                # bounded dims appear in newer XLA signatures)
+                head = re.sub(r"\[[^\]]*\]", "", stripped.split("->")[0])
+                if "=" not in head:
                     mc = _COMP_RE.match(stripped)
                     if mc:
                         cur = mc.group(1)
@@ -143,7 +237,8 @@ class HloCostModel:
             mi = _INSTR_RE.match(stripped)
             if mi:
                 self.computations[cur].append(
-                    Instr(mi.group(1), mi.group(2), mi.group(3), stripped))
+                    Instr(mi.group(1), mi.group(2), mi.group(3), stripped)
+                )
 
     # ---------------------------------------------------------- helpers
 
@@ -179,11 +274,11 @@ class HloCostModel:
             return 0.0
         rhs = _first_array_dims(ops[1])
         out_elems = shape_elems(instr.type_str)
-        k = math.prod(rhs[:-1]) if rhs else 1   # rough: kernel elems / out_features
+        k = math.prod(rhs[:-1]) if rhs else 1  # rough: kernel elems / out_features
         return 2.0 * out_elems * k
 
     def _trip_count(self, instr: Instr) -> float:
-        m = re.search(r'known_trip_count[^\d]*(\d+)', instr.line)
+        m = re.search(r"known_trip_count[^\d]*(\d+)", instr.line)
         if m:
             return float(m.group(1))
         return 1.0
@@ -223,7 +318,7 @@ class HloCostModel:
                 if len(ops_) > 1:
                     upd_total += shape_bytes(ops_[1])
         # also count the fusion result matching each updated buffer
-        bufs = {k: v * 2 for k, v in bufs.items()}   # operand + result slot
+        bufs = {k: v * 2 for k, v in bufs.items()}  # operand + result slot
         self._dus_memo[comp_name] = (bufs, upd_total)
         return bufs, upd_total
 
@@ -252,9 +347,90 @@ class HloCostModel:
             return in_b, ring * in_b
         if instr.opcode == "all-to-all":
             return out_b, ring * out_b
-        return out_b, float(out_b)      # collective-permute
+        return out_b, float(out_b)  # collective-permute
 
     # ---------------------------------------------------------- cost
+
+    def _accumulate(self, ins: Instr, symbols: dict, total: CostSummary) -> None:
+        """Price one instruction into ``total``. May raise on HLO text
+        this parser has never seen — cost() catches and counts it."""
+        op = ins.opcode
+        if op == "while":
+            trips = self._trip_count(ins)
+            body = self._called(ins, "body")
+            cond = self._called(ins, "condition")
+            if body:
+                total.add(self.cost(body), trips)
+            if cond:
+                total.add(self.cost(cond), trips)
+            return
+        if op == "fusion":
+            called = self._called(ins, "calls")
+            dus_bufs, dus_updates = {}, 0
+            if called:
+                sub = self.cost(called)
+                total.flops += sub.flops  # interior flops only
+                total.unparsed_ops += sub.unparsed_ops
+                dus_bufs, dus_updates = self._dus_signature(called)
+            # HBM traffic: operands + result of the fusion itself —
+            # EXCEPT buffers updated in place by an interior
+            # dynamic-update-slice: those cost the slice, not the
+            # full buffer (scan carries would otherwise be charged
+            # thousands of times their real traffic).
+            io = [shape_bytes(ins.type_str)]
+            io += [shape_bytes(o) for o in self._operands(ins, symbols)]
+            remaining = dict(dus_bufs)
+            for b in io:
+                if remaining.get(b, 0) > 0:
+                    remaining[b] -= 1
+                else:
+                    total.bytes += b
+            total.bytes += 2 * dus_updates  # slice read-modify-write
+            return
+        if op == "dynamic-update-slice":
+            ops_ = self._operands(ins, symbols)
+            upd = shape_bytes(ops_[1]) if len(ops_) > 1 else 0
+            total.bytes += 2 * upd
+            return
+        if op == "call":
+            called = self._called(ins, "to_apply")
+            if called:
+                total.add(self.cost(called))
+            return
+        if op == "conditional":
+            branches = [self.cost(b) for b in self._branches(ins)]
+            if branches:
+                worst = max(branches, key=lambda c: c.flops + c.bytes)
+                total.add(worst)
+            return
+        base_op = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done") and base_op[:-5] in COLLECTIVES:
+            return
+        if base_op in COLLECTIVES:
+            payload, link = self._collective_traffic(ins, symbols)
+            total.collective_bytes += payload
+            total.link_bytes += link
+            key = base_op
+            cur = total.collectives.get(key, {"count": 0.0, "bytes": 0.0, "link_bytes": 0.0})
+            total.collectives[key] = {
+                "count": cur["count"] + 1,
+                "bytes": cur["bytes"] + payload,
+                "link_bytes": cur["link_bytes"] + link,
+            }
+            total.bytes += shape_bytes(ins.type_str)
+            return
+        # plain op
+        if op not in _NO_BYTES:
+            total.bytes += shape_bytes(ins.type_str)
+            total.bytes += sum(shape_bytes(o) for o in self._operands(ins, symbols))
+        if op == "dot":
+            total.flops += self._dot_flops(ins, symbols)
+        elif op == "convolution":
+            total.flops += self._conv_flops(ins, symbols)
+        elif op in ("reduce", "scatter", "select"):
+            total.flops += shape_elems(ins.type_str)
+        elif op not in _NO_FLOPS:
+            total.flops += shape_elems(ins.type_str)
 
     def cost(self, comp_name: str) -> CostSummary:
         if comp_name in self._memo:
@@ -263,82 +439,14 @@ class HloCostModel:
         instrs = self.computations.get(comp_name, [])
         symbols = self._symbols(instrs)
         for ins in instrs:
-            op = ins.opcode
-            if op == "while":
-                trips = self._trip_count(ins)
-                body = self._called(ins, "body")
-                cond = self._called(ins, "condition")
-                if body:
-                    total.add(self.cost(body), trips)
-                if cond:
-                    total.add(self.cost(cond), trips)
-                continue
-            if op == "fusion":
-                called = self._called(ins, "calls")
-                dus_bufs, dus_updates = {}, 0
-                if called:
-                    sub = self.cost(called)
-                    total.flops += sub.flops           # interior flops only
-                    dus_bufs, dus_updates = self._dus_signature(called)
-                # HBM traffic: operands + result of the fusion itself —
-                # EXCEPT buffers updated in place by an interior
-                # dynamic-update-slice: those cost the slice, not the
-                # full buffer (scan carries would otherwise be charged
-                # thousands of times their real traffic).
-                io = [shape_bytes(ins.type_str)]
-                io += [shape_bytes(o) for o in self._operands(ins, symbols)]
-                remaining = dict(dus_bufs)
-                for b in io:
-                    if remaining.get(b, 0) > 0:
-                        remaining[b] -= 1
-                    else:
-                        total.bytes += b
-                total.bytes += 2 * dus_updates         # slice read-modify-write
-                continue
-            if op == "dynamic-update-slice":
-                ops_ = self._operands(ins, symbols)
-                upd = shape_bytes(ops_[1]) if len(ops_) > 1 else 0
-                total.bytes += 2 * upd
-                continue
-            if op == "call":
-                called = self._called(ins, "to_apply")
-                if called:
-                    total.add(self.cost(called))
-                continue
-            if op == "conditional":
-                branches = [self.cost(b) for b in self._branches(ins)]
-                if branches:
-                    worst = max(branches, key=lambda c: c.flops + c.bytes)
-                    total.add(worst)
-                continue
-            base_op = op[:-6] if op.endswith("-start") else op
-            if op.endswith("-done") and base_op[:-5] in COLLECTIVES:
-                continue
-            if base_op in COLLECTIVES:
-                payload, link = self._collective_traffic(ins, symbols)
-                total.collective_bytes += payload
-                total.link_bytes += link
-                key = base_op
-                cur = total.collectives.get(key, {"count": 0.0, "bytes": 0.0, "link_bytes": 0.0})
-                total.collectives[key] = {
-                    "count": cur["count"] + 1,
-                    "bytes": cur["bytes"] + payload,
-                    "link_bytes": cur["link_bytes"] + link,
-                }
-                total.bytes += shape_bytes(ins.type_str)
-                continue
-            # plain op
-            if op not in _NO_BYTES:
-                total.bytes += shape_bytes(ins.type_str)
-                total.bytes += sum(shape_bytes(o) for o in self._operands(ins, symbols))
-            if op == "dot":
-                total.flops += self._dot_flops(ins, symbols)
-            elif op == "convolution":
-                total.flops += self._conv_flops(ins, symbols)
-            elif op in ("reduce", "scatter", "select"):
-                total.flops += shape_elems(ins.type_str)
-            elif op not in _NO_FLOPS:
-                total.flops += shape_elems(ins.type_str)
+            try:
+                self._accumulate(ins, symbols, total)
+                if shape_unparsed(ins.type_str):
+                    # priced best-effort: the parsable fraction of the
+                    # result shape is in the totals, the rest is not
+                    total.unparsed_ops += 1.0
+            except Exception:
+                total.unparsed_ops += 1.0
         self._memo[comp_name] = total
         return total
 
@@ -347,6 +455,8 @@ class HloCostModel:
         # ENTRY is usually last, and _COMP_RE tagged it; find by name "main"
         # or fall back to the computation with max cost reachability.
         names = list(self.computations)
+        if not names:
+            return CostSummary()
         called = set()
         for comp, instrs in self.computations.items():
             for ins in instrs:
@@ -375,5 +485,6 @@ def analyze(hlo_text: str) -> dict:
         "bytes": c.bytes,
         "collective_bytes": c.collective_bytes,
         "link_bytes": c.link_bytes,
+        "unparsed_ops": c.unparsed_ops,
         "collectives": c.collectives,
     }

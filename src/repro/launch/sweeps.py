@@ -115,7 +115,7 @@ class SweepRunner:
 
     def __init__(self, cfg=None, corpus=None, seed: int = 0,
                  eval_examples: int = 64, prefetch: bool = True,
-                 pad_steps: bool = False):
+                 pad_steps: bool = False, trace_dir: Optional[str] = None):
         if cfg is None or corpus is None:
             from repro.launch.train import tiny_asr_setup
 
@@ -125,6 +125,11 @@ class SweepRunner:
         self.eval_examples = eval_examples
         self.prefetch = prefetch
         self.pad_steps = pad_steps
+        # when set, run_point emits one trace JSON per point through
+        # the profiling plane's single writer (repro.profile.trace):
+        # host pack / round-step / eval section timers plus the
+        # predictor's static features — the calibration corpus
+        self.trace_dir = trace_dir
         self._bundles: Dict[float, object] = {}
         self._jit_cache: Dict[tuple, Callable] = {}
 
@@ -206,20 +211,26 @@ class SweepRunner:
                                 else 0.0))
         rng = np.random.default_rng(point.seed)
 
+        from repro.profile.trace import TraceRecorder
+
+        rec = TraceRecorder()
+
         def host_batches():
             for _ in range(point.rounds):
-                if point.iid:
-                    pool = self.corpus.iid_pool()
-                    idx = rng.permutation(pool["labels"].shape[0])
-                    pool = {k: v[idx] for k, v in pool.items()}
-                    # pack at the plan's native steps, then zero-pad to
-                    # the grid shape — pad_steps must stay a no-op, not
-                    # extra weight-1 recycled examples
-                    rb = pack_round(pool, plan.clients_per_round, native,
-                                    plan.local_batch_size).pad_steps(S)
-                else:
-                    rb = sampler.next_round()
-                yield rb.engine_batch()
+                with rec.section("pack"):
+                    if point.iid:
+                        pool = self.corpus.iid_pool()
+                        idx = rng.permutation(pool["labels"].shape[0])
+                        pool = {k: v[idx] for k, v in pool.items()}
+                        # pack at the plan's native steps, then zero-pad
+                        # to the grid shape — pad_steps must stay a
+                        # no-op, not extra weight-1 recycled examples
+                        rb = pack_round(pool, plan.clients_per_round, native,
+                                        plan.local_batch_size).pad_steps(S)
+                    else:
+                        rb = sampler.next_round()
+                    batch = rb.engine_batch()
+                yield batch
 
         t0 = time.time()
         losses = []
@@ -233,8 +244,13 @@ class SweepRunner:
                             host_batches()))
         try:
             for batch in batches:
-                state, metrics = round_fn(state, batch, hypers, base_key)
-                losses.append(float(metrics["loss"]))
+                # the float() pulls synchronize, so the section times
+                # dispatch + device compute (round 1 includes compile;
+                # min_s is the steady-state round — what calibration
+                # consumes)
+                with rec.section("round"):
+                    state, metrics = round_fn(state, batch, hypers, base_key)
+                    losses.append(float(metrics["loss"]))
                 participants.append(float(metrics["participants"]))
                 corrupted.append(float(metrics["corrupted"]))
                 sim_times.append(float(metrics["sim_time_s"]))
@@ -250,8 +266,9 @@ class SweepRunner:
 
         from repro.launch.train import evaluate_wer
 
-        wers = evaluate_wer(cfg, bundle, state.params, self.corpus,
-                            self.eval_examples)
+        with rec.section("eval"):
+            wers = evaluate_wer(cfg, bundle, state.params, self.corpus,
+                                self.eval_examples)
         # wire-accurate payload: per-client byte counts are exact ints
         # over the param shapes; participants come from the round
         # metrics, so partial participation shrinks measured uplink.
@@ -301,6 +318,27 @@ class SweepRunner:
         log(f"  {point.id:>10s}: loss={row['final_loss']:.3f} "
             f"wer={row['wer']:.3f} cfmq={row['cfmq_tb']:.5f}TB "
             f"({row['wall_s']:.0f}s)")
+        if self.trace_dir:
+            from repro.core.engine import structural_key_str
+            from repro.profile.predict import plan_round_features
+            from repro.profile.trace import write_trace
+
+            path = os.path.join(self.trace_dir,
+                                f"trace_sweep_{point.id}.json")
+            write_trace(
+                path, "sweep",
+                structural_key=structural_key_str(engine.structural_key),
+                sections=rec,
+                counters={"rounds": point.rounds, "n_params": n_params,
+                          "local_steps": native, "padded_steps": S},
+                # the predictor's static features for THIS point: each
+                # traced sweep row is a (features, measured round_s)
+                # calibration sample — min_s of "round" is the
+                # steady-state round, free of round-1 compile
+                features=plan_round_features(plan, params, native),
+                meta={"id": point.id, "wall_s": row["wall_s"]},
+            )
+            log(f"  [trace] {path}")
         return row
 
     def run(self, points, log=print) -> list[dict]:
@@ -731,9 +769,31 @@ def mark_pareto(rows: list[dict], cost="cfmq_tb", quality="wer") -> list[dict]:
     return rows
 
 
+def predict_grid_costs(runner: SweepRunner, points, axis: str = "cfmq_tb",
+                       coeffs: Optional[dict] = None) -> Dict[str, float]:
+    """Per-point predicted cost on ``axis`` (``cfmq_tb`` | ``seconds``)
+    WITHOUT running anything: features come from ``jax.eval_shape``
+    abstract params, so no device allocation or compilation happens."""
+    from repro.profile.predict import abstract_params, predict_point
+    from repro.profile.tuner import registry
+
+    if coeffs is None and axis == "seconds":
+        coeffs = registry().get_coefficients("analytic")
+    predicted = {}
+    for p in points:
+        _, bundle = runner._bundle(p.specaug_scale)
+        params = abstract_params(bundle, seed=p.seed)
+        pred = predict_point(p.plan, params, steps=runner.native_steps(p.plan),
+                             rounds=p.rounds, coeffs=coeffs)
+        predicted[p.id] = pred["cfmq_tb" if axis == "cfmq_tb" else "point_s"]
+    return predicted
+
+
 def run_grid(grid: str, rounds: Optional[int] = None, smoke: bool = False,
              seed: int = 0, out: Optional[str] = None, runner: Optional[SweepRunner] = None,
              pad_steps: Optional[bool] = None, check: bool = False,
+             prune_budget: Optional[float] = None, prune_axis: str = "cfmq_tb",
+             trace_dir: Optional[str] = None,
              log=print, **grid_kwargs) -> dict:
     """Run a named grid and write one quality/cost frontier JSON.
 
@@ -741,6 +801,12 @@ def run_grid(grid: str, rounds: Optional[int] = None, smoke: bool = False,
     compile time dominates, so padding every point to one shape (one
     compilation for the whole grid) wins; at full budgets the padded
     no-op steps cost more than the extra per-shape retraces save.
+
+    ``prune_budget`` turns on the planner: points whose *predicted*
+    cost on ``prune_axis`` exceeds the budget are skipped before any
+    compilation. Under ``--check`` the FULL grid runs anyway and
+    ``repro.profile.tuner.check_prune`` asserts the pruner would have
+    dropped >= 1 point without touching the measured pareto frontier.
     """
     make_points = GRIDS[grid]
     kwargs = dict(grid_kwargs, smoke=smoke, seed=seed)
@@ -750,7 +816,25 @@ def run_grid(grid: str, rounds: Optional[int] = None, smoke: bool = False,
     if runner is None:
         runner = SweepRunner(seed=seed,
                              eval_examples=24 if smoke else 64,
-                             pad_steps=smoke if pad_steps is None else pad_steps)
+                             pad_steps=smoke if pad_steps is None else pad_steps,
+                             trace_dir=trace_dir)
+    prune = None
+    if prune_budget is not None:
+        from repro.profile.tuner import prune_report
+
+        predicted = predict_grid_costs(runner, points, axis=prune_axis)
+        prune = prune_report(predicted, prune_budget, prune_axis)
+        dropped = sorted(pid for pid, d in prune.items() if not d.keep)
+        if check:
+            # run everything: --check's job is to PROVE the skip list
+            # would have been safe, which needs the measured rows
+            log(f"[sweeps] prune(--check): would drop {dropped} "
+                f"(predicted {prune_axis} > {prune_budget:g}); running "
+                "full grid to verify the frontier survives")
+        else:
+            points = [p for p in points if prune[p.id].keep]
+            log(f"[sweeps] prune: dropped {dropped} of {len(prune)} "
+                f"points (predicted {prune_axis} > {prune_budget:g})")
     t0 = time.time()
     log(f"[sweeps] grid={grid} points={len(points)} "
         f"rounds={[p.rounds for p in points]}")
@@ -760,6 +844,8 @@ def run_grid(grid: str, rounds: Optional[int] = None, smoke: bool = False,
         "n_points": len(rows), "wall_s": time.time() - t0,
         "points": rows,
     }
+    if prune is not None:
+        frontier["prune"] = {pid: d.as_dict() for pid, d in prune.items()}
     out = out or f"results/sweep_{grid}.json"
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out, "w") as f:
@@ -767,10 +853,14 @@ def run_grid(grid: str, rounds: Optional[int] = None, smoke: bool = False,
     log(f"[sweeps] frontier ({sum(r['pareto'] for r in rows)} pareto points) "
         f"-> {out} [{frontier['wall_s']:.0f}s]")
     if check:
+        if prune is not None:
+            from repro.profile.tuner import check_prune
+
+            check_prune(rows, prune, log=log)
         checker = GRID_CHECKS.get(grid)
-        if checker is None:
+        if checker is None and prune is None:
             log(f"[sweeps] no --check defined for grid {grid!r}; skipping")
-        else:
+        elif checker is not None:
             checker(frontier, log=log)
     return frontier
 
@@ -790,10 +880,24 @@ def main():
     ap.add_argument("--check", action="store_true",
                     help="assert the grid's qualitative claim after the "
                          "run (e.g. robustness: trimmed_mean beats "
-                         "weighted_mean under sign_flip@0.3)")
+                         "weighted_mean under sign_flip@0.3); with "
+                         "--prune-budget, also prove the pruner never "
+                         "drops a measured-pareto point")
+    ap.add_argument("--prune-budget", type=float, default=None,
+                    help="skip points whose PREDICTED cost on "
+                         "--prune-axis exceeds this budget, before "
+                         "anything compiles (repro.profile planner)")
+    ap.add_argument("--prune-axis", default="cfmq_tb",
+                    choices=("cfmq_tb", "seconds"))
+    ap.add_argument("--trace-dir", default=None,
+                    help="emit one trace JSON per point (pack/round/eval "
+                         "section timers + predictor features) into this "
+                         "directory")
     args = ap.parse_args()
     run_grid(args.grid, rounds=args.rounds, smoke=args.smoke, seed=args.seed,
-             out=args.out, pad_steps=args.pad_steps, check=args.check)
+             out=args.out, pad_steps=args.pad_steps, check=args.check,
+             prune_budget=args.prune_budget, prune_axis=args.prune_axis,
+             trace_dir=args.trace_dir)
 
 
 if __name__ == "__main__":

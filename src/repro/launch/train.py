@@ -86,8 +86,13 @@ def run_federated_asr(
     log=print,
     ckpt_dir: str | None = None,
     prefetch: bool = True,
+    trace_path: str | None = None,
 ):
-    """Returns history dict with per-round losses + final WERs + CFMQ."""
+    """Returns history dict with per-round losses + final WERs + CFMQ.
+
+    ``trace_path`` routes pack/round/eval section timers through the
+    profiling plane's single writer (``repro.profile.trace``), keyed by
+    the engine's structural key — the train-side calibration feed."""
     if iid and plan.corruption.kind == "label_shuffle":
         raise ValueError(
             "label_shuffle corrupts labels inside the FederatedSampler, but "
@@ -121,20 +126,26 @@ def run_federated_asr(
     rng = np.random.default_rng(seed)
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
 
+    from repro.profile.trace import TraceRecorder
+
+    rec = TraceRecorder()
+
     def host_batches():
         """Host packing stream — runs on the prefetch worker thread so
         round r+1 packs (and transfers) while the device runs round r."""
         for _ in range(rounds):
-            if iid:
-                # fresh IID shuffle each round
-                pool = corpus.iid_pool()
-                idx = rng.permutation(pool["labels"].shape[0])
-                pool = {k: v[idx] for k, v in pool.items()}
-                rb = pack_round(pool, plan.clients_per_round, sampler.steps,
-                                plan.local_batch_size)
-            else:
-                rb = sampler.next_round()
-            yield rb.engine_batch()
+            with rec.section("pack"):
+                if iid:
+                    # fresh IID shuffle each round
+                    pool = corpus.iid_pool()
+                    idx = rng.permutation(pool["labels"].shape[0])
+                    pool = {k: v[idx] for k, v in pool.items()}
+                    rb = pack_round(pool, plan.clients_per_round, sampler.steps,
+                                    plan.local_batch_size)
+                else:
+                    rb = sampler.next_round()
+                batch = rb.engine_batch()
+            yield batch
 
     # wire accounting: exact per-client byte counts over the param
     # shapes, accumulated as host-side Python ints — the in-graph f32
@@ -153,8 +164,11 @@ def run_federated_asr(
                else map(lambda b: jax.tree.map(jnp.asarray, b), host_batches()))
     try:
         for r, batch in enumerate(batches):
-            state, metrics = round_step(state, batch)
-            losses.append(float(metrics["loss"]))
+            # float() blocks, so the section covers dispatch + device
+            # compute; round 1 includes compile — min_s is steady-state
+            with rec.section("round"):
+                state, metrics = round_step(state, batch)
+                losses.append(float(metrics["loss"]))
             participants.append(float(metrics["participants"]))
             corrupted.append(float(metrics["corrupted"]))
             sim_times.append(float(metrics["sim_time_s"]))
@@ -175,7 +189,8 @@ def run_federated_asr(
             batches.close()
 
     train_time_s = time.time() - t0
-    wers = evaluate_wer(cfg, bundle, state.params, corpus, eval_examples)
+    with rec.section("eval"):
+        wers = evaluate_wer(cfg, bundle, state.params, corpus, eval_examples)
     mu = plan.local_epochs * (plan.data_limit or sampler.steps * plan.local_batch_size)
     payload = measured_payload(plan, params, float(np.mean(participants)))
     terms = cfmq(
@@ -215,6 +230,21 @@ def run_federated_asr(
             "train_time_s": train_time_s,
         },
     )
+    if trace_path:
+        from repro.core.engine import structural_key_str
+        from repro.profile.predict import plan_round_features
+        from repro.profile.trace import write_trace
+
+        write_trace(
+            trace_path, "round",
+            structural_key=structural_key_str(engine.structural_key),
+            sections=rec,
+            counters={"rounds": rounds, "n_params": n_params,
+                      "local_steps": sampler.steps},
+            features=plan_round_features(plan, params, sampler.steps),
+            meta={"wall_s": train_time_s, "final_loss": history["final_loss"]},
+        )
+        log(f"[trace] {trace_path}")
     return state, history
 
 
@@ -312,6 +342,10 @@ def main():
                     help="disable the async host->device prefetch")
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a profiling-plane trace JSON (pack/round/"
+                         "eval section timers, keyed by the engine's "
+                         "structural key + device fingerprint)")
     args = ap.parse_args()
 
     if args.preset == "tiny":
@@ -350,7 +384,8 @@ def main():
     )
     _, hist = run_federated_asr(cfg, corpus, plan, args.rounds, iid=args.iid,
                                 eval_every=args.eval_every,
-                                prefetch=not args.no_prefetch)
+                                prefetch=not args.no_prefetch,
+                                trace_path=args.trace)
     print(json.dumps({k: v for k, v in hist.items() if k != "loss"}, indent=1))
     if args.out:
         with open(args.out, "w") as f:

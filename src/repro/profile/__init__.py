@@ -1,0 +1,36 @@
+"""Profiling plane: trace capture, fed-round cost prediction, and the
+autotuning planner.
+
+Three layers (see each module's docstring):
+
+- ``repro.profile.trace`` — versioned trace JSON from real runs; one
+  writer for train / sweeps / bench, keyed by the RoundEngine
+  structural key + a device fingerprint.
+- ``repro.profile.predict`` — static FLOP/byte features x per-device
+  least-squares coefficients: price any FederatedPlan without running
+  it.
+- ``repro.profile.tuner`` — the registry that owns kernel dispatch
+  thresholds (measured overrides persist to results/tuning.json) and
+  the predicted-cost sweep-grid pruner.
+
+Submodules are imported lazily: the kernel layer reads tuner knobs
+from its dispatch path, so this package must be importable mid-way
+through ``repro.core`` / ``repro.kernels`` imports without touching
+them back.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_SUBMODULES = ("predict", "trace", "tuner")
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.profile.{name}")
+    raise AttributeError(f"module 'repro.profile' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_SUBMODULES))

@@ -1,0 +1,401 @@
+"""Autotuning planner: the registry that owns every kernel dispatch
+threshold, with measured-on-this-device overrides, plus the sweep-grid
+pruner.
+
+Before this module, dispatch constants (the 4096-element
+``topk_unpack`` serial-vs-segmented cutoff, bench interleave rep
+counts, the Pallas-vs-ref backend choice) were hard-coded from one
+machine's benchmarks. Here every such constant is a named *knob* with
+a documented default; call sites read them through :func:`get_knob`,
+and per-device measured overrides persist to ``results/tuning.json``
+keyed by the trace plane's device fingerprint — so a new backend tunes
+itself once and every later run picks the measured value up.
+
+The same JSON document stores the cost predictor's calibrated
+per-device coefficients (see ``repro.profile.predict``), which is what
+lets ``sweeps.py --prune-budget`` drop grid points whose *predicted*
+cost exceeds a budget before anything compiles. ``check_prune`` is the
+safety property behind ``--check``: pruning must never drop a row the
+measured run marked pareto.
+
+This module is import-light on purpose (stdlib only at module level):
+``repro.kernels.wire_pack`` reads knobs from the hot dispatch path, so
+nothing here may import jax, the kernels, or the core planes at import
+time.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.profile.tuner --show
+    PYTHONPATH=src python -m repro.profile.tuner --set wire_pack.topk_seg_min_n 8192
+    PYTHONPATH=src python -m repro.profile.tuner --autotune topk
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Optional
+
+TUNING_SCHEMA_VERSION = 1
+DEFAULT_PATH = os.path.join("results", "tuning.json")
+ENV_PATH = "REPRO_TUNING_JSON"
+
+
+@dataclasses.dataclass(frozen=True)
+class Knob:
+    default: object
+    doc: str
+    choices: Optional[tuple] = None
+
+
+KNOBS: dict[str, Knob] = {
+    "wire_pack.topk_seg_min_n": Knob(
+        4096,
+        "Output elements above which topk_unpack dispatches the segmented "
+        "grid-parallel scatter instead of the serial single-block kernel "
+        "(PR 5 measured the crossover at 4096 on one TPU host).",
+    ),
+    "wire_pack.topk_seg_size": Knob(
+        2048,
+        "Segment length of the segmented top-k scatter (one grid cell "
+        "owns one segment of the output).",
+    ),
+    "wire_pack.dispatch": Knob(
+        "auto",
+        "Pallas-vs-ref backend choice for the wire kernels: 'auto' picks "
+        "Pallas off-CPU and the jnp oracle on CPU; 'ref' forces the "
+        "oracle everywhere (a measured escape hatch for backends where "
+        "Pallas lowering regresses); 'pallas' forces Pallas kernels "
+        "(interpret mode on CPU — test/debug only).",
+        choices=("auto", "pallas", "ref"),
+    ),
+    "bench.fed_reps": Knob(
+        5,
+        "Interleaved order-rotating cycles for the fed_round bench "
+        "(min per variant over this many visits).",
+    ),
+    "bench.fed_pair_reps": Knob(
+        6,
+        "Adjacent fp32-vs-variant A/B pairs per fed_round ratio "
+        "(median over pairs).",
+    ),
+    "bench.wire_reps": Knob(
+        12,
+        "Interleaved min reps for the wire-plane micro benches "
+        "(pack/unpack kernels).",
+    ),
+    "bench.micro_reps": Knob(
+        5,
+        "Interleaved min reps for the remaining micro benches "
+        "(attention, RNN-T joint).",
+    ),
+    "bench.pack_reps": Knob(
+        30,
+        "Interleaved min reps for the host round-packing bench "
+        "(fed_pack_vectorized; host-side, cheap, so many reps).",
+    ),
+}
+
+
+def _coerce(name: str, value):
+    knob = KNOBS[name]
+    if knob.choices is not None:
+        if value not in knob.choices:
+            raise ValueError(f"{name}: {value!r} not in {knob.choices}")
+        return value
+    kind = type(knob.default)
+    out = kind(value)
+    if isinstance(out, (int, float)) and out <= 0:
+        raise ValueError(f"{name}: must be positive, got {out}")
+    return out
+
+
+class TuningRegistry:
+    """``results/tuning.json`` facade: knob overrides + predictor
+    coefficients, both keyed by device fingerprint so one file serves a
+    fleet of heterogeneous machines."""
+
+    def __init__(self, path: Optional[str] = None, device_key: Optional[str] = None):
+        self.path = path or os.environ.get(ENV_PATH, DEFAULT_PATH)
+        self._device_key = device_key
+        self._doc = self._load()
+
+    # ------------------------------------------------------------ store
+
+    def _load(self) -> dict:
+        doc = {"schema_version": TUNING_SCHEMA_VERSION, "devices": {}}
+        try:
+            with open(self.path) as f:
+                on_disk = json.load(f)
+            if on_disk.get("schema_version") == TUNING_SCHEMA_VERSION:
+                doc = on_disk
+                doc.setdefault("devices", {})
+        except FileNotFoundError:
+            pass
+        except (json.JSONDecodeError, OSError, AttributeError):
+            # a corrupt tuning file must never brick the dispatch path;
+            # defaults are always safe
+            pass
+        return doc
+
+    @property
+    def device_key(self) -> str:
+        if self._device_key is None:
+            from repro.profile.trace import device_key
+
+            self._device_key = device_key()
+        return self._device_key
+
+    def _device_entry(self, create: bool = False) -> dict:
+        devices = self._doc["devices"]
+        if create and self.device_key not in devices:
+            from repro.profile.trace import device_fingerprint
+
+            devices[self.device_key] = {
+                "fingerprint": device_fingerprint(),
+                "overrides": {},
+                "coefficients": {},
+            }
+        return devices.get(self.device_key, {})
+
+    def save(self) -> str:
+        self._doc["updated_unix"] = time.time()
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._doc, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+        return self.path
+
+    # ------------------------------------------------------------ knobs
+
+    def get(self, name: str):
+        if name not in KNOBS:
+            raise KeyError(f"unknown tuning knob {name!r}; known: {sorted(KNOBS)}")
+        overrides = self._device_entry().get("overrides", {})
+        if name in overrides:
+            return _coerce(name, overrides[name])
+        return KNOBS[name].default
+
+    def overrides(self) -> dict:
+        return dict(self._device_entry().get("overrides", {}))
+
+    def set_override(self, name: str, value, persist: bool = False):
+        if name not in KNOBS:
+            raise KeyError(f"unknown tuning knob {name!r}; known: {sorted(KNOBS)}")
+        value = _coerce(name, value)
+        self._device_entry(create=True)["overrides"][name] = value
+        if persist:
+            self.save()
+        return value
+
+    def clear_override(self, name: str, persist: bool = False):
+        self._device_entry().get("overrides", {}).pop(name, None)
+        if persist:
+            self.save()
+
+    # ----------------------------------------------- predictor coeffs
+
+    def set_coefficients(self, source: str, coeffs: dict, persist: bool = False):
+        entry = self._device_entry(create=True)
+        entry.setdefault("coefficients", {})[source] = {k: float(v) for k, v in coeffs.items()}
+        if persist:
+            self.save()
+
+    def get_coefficients(self, source: str) -> Optional[dict]:
+        got = self._device_entry().get("coefficients", {}).get(source)
+        return dict(got) if got is not None else None
+
+
+_ACTIVE: Optional[TuningRegistry] = None
+
+
+def registry() -> TuningRegistry:
+    """The process-wide registry (created lazily from $REPRO_TUNING_JSON
+    or results/tuning.json)."""
+    global _ACTIVE
+    if _ACTIVE is None:
+        _ACTIVE = TuningRegistry()
+    return _ACTIVE
+
+
+def set_registry(reg: Optional[TuningRegistry]) -> None:
+    """Install (or with None: reset) the process-wide registry — tests
+    point it at a tmp path."""
+    global _ACTIVE
+    _ACTIVE = reg
+
+
+def get_knob(name: str):
+    """Hot-path accessor used by kernel dispatchers and the bench
+    harness; resolves override-else-default for this device."""
+    return registry().get(name)
+
+
+# ----------------------------------------------------------------------
+# Autotune: measure the dispatch candidates on THIS device and persist
+# the observed crossover as an override.
+# ----------------------------------------------------------------------
+
+
+def autotune_topk_dispatch(
+    reg: Optional[TuningRegistry] = None,
+    sizes=(1024, 2048, 4096, 8192, 16384, 32768),
+    frac: float = 0.05,
+    reps: int = 5,
+    persist: bool = True,
+    log=print,
+) -> int:
+    """Measure serial vs segmented ``topk_unpack`` Pallas kernels over
+    ``sizes`` and persist the first size where the segmented scatter
+    wins as ``wire_pack.topk_seg_min_n``.
+
+    On CPU both candidates run in interpret mode, so the measured
+    crossover validates the machinery rather than the production
+    dispatch (CPU dispatch always takes the jnp oracle); on TPU this is
+    the real PR 5 threshold, re-measured for the local chip.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import wire_pack
+    from repro.profile.trace import measure_interleaved_min
+
+    reg = reg or registry()
+    interpret = jax.default_backend() == "cpu"
+    crossover = None
+    for n in sizes:
+        k = max(1, int(frac * n))
+        key = jax.random.PRNGKey(n)
+        values = jax.random.normal(key, (k,), jnp.float32)
+        idx = jnp.arange(k, dtype=jnp.int32) * (n // k)
+        serial = jax.jit(
+            lambda v, i: wire_pack.topk_unpack_pallas(v, i, n, interpret=interpret)
+        )
+        seg = jax.jit(
+            lambda v, i: wire_pack.topk_unpack_segmented_pallas(
+                v, i, n, seg=reg.get("wire_pack.topk_seg_size"), interpret=interpret
+            )
+        )
+        t = measure_interleaved_min(
+            {"serial": lambda: serial(values, idx), "segmented": lambda: seg(values, idx)},
+            reps=reps,
+        )
+        log(
+            f"[tuner] topk_unpack n={n}: serial {t['serial'] * 1e6:.1f}us "
+            f"segmented {t['segmented'] * 1e6:.1f}us"
+        )
+        if crossover is None and t["segmented"] < t["serial"]:
+            crossover = n
+    chosen = crossover if crossover is not None else max(sizes) * 2
+    reg.set_override("wire_pack.topk_seg_min_n", chosen, persist=persist)
+    log(f"[tuner] wire_pack.topk_seg_min_n <- {chosen} (device {reg.device_key})")
+    return chosen
+
+
+AUTOTUNERS: dict[str, Callable] = {
+    "topk": autotune_topk_dispatch,
+}
+
+
+# ----------------------------------------------------------------------
+# Sweep-grid pruner: drop points whose predicted cost exceeds a budget
+# BEFORE anything compiles; --check proves the frontier survives.
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneDecision:
+    point_id: str
+    axis: str
+    predicted: float
+    budget: float
+
+    @property
+    def keep(self) -> bool:
+        return self.predicted <= self.budget
+
+    def as_dict(self) -> dict:
+        return {
+            "point_id": self.point_id,
+            "axis": self.axis,
+            "predicted": self.predicted,
+            "budget": self.budget,
+            "keep": self.keep,
+        }
+
+
+def prune_report(predicted: dict[str, float], budget: float, axis: str) -> dict:
+    """{point_id: PruneDecision} over per-point predicted costs."""
+    return {
+        pid: PruneDecision(point_id=pid, axis=axis, predicted=float(cost), budget=float(budget))
+        for pid, cost in predicted.items()
+    }
+
+
+def check_prune(rows: list[dict], report: dict, *, rtol: float = 0.05, log=print) -> int:
+    """The pruner-never-drops-pareto property, asserted against a full
+    measured run: (a) the budget must actually drop >= 1 point, (b) no
+    measured-pareto row may be dropped, (c) where the budget axis is a
+    measured row column (cfmq_tb), prediction must agree with the
+    measurement within ``rtol``. Returns the dropped count."""
+    dropped = [d.point_id for d in report.values() if not d.keep]
+    if not dropped:
+        raise AssertionError(
+            f"--prune-budget dropped nothing: every predicted cost is under "
+            f"{next(iter(report.values())).budget if report else float('nan')}"
+        )
+    for row in rows:
+        pid = row.get("id")
+        if pid not in report:
+            raise AssertionError(f"measured row {pid!r} has no prune decision")
+        d = report[pid]
+        if row.get("pareto") and not d.keep:
+            raise AssertionError(
+                f"prune budget {d.budget} would drop PARETO point {pid!r} "
+                f"(predicted {d.axis}={d.predicted:.6g}) — raise the budget"
+            )
+        if d.axis in row:
+            measured = float(row[d.axis])
+            err = abs(d.predicted - measured) / max(abs(measured), 1e-12)
+            if err > rtol:
+                raise AssertionError(
+                    f"{pid!r}: predicted {d.axis}={d.predicted:.6g} vs measured "
+                    f"{measured:.6g} (rel err {err:.3f} > {rtol})"
+                )
+    log(
+        f"[tuner] prune check OK: {len(dropped)}/{len(report)} points over "
+        f"budget ({', '.join(sorted(dropped))}), pareto frontier intact"
+    )
+    return len(dropped)
+
+
+# ------------------------------------------------------------------ CLI
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--path", default=None, help="tuning JSON (default results/tuning.json)")
+    ap.add_argument("--show", action="store_true", help="print knobs + overrides for this device")
+    ap.add_argument("--set", nargs=2, metavar=("NAME", "VALUE"), action="append", default=[])
+    ap.add_argument("--autotune", choices=sorted(AUTOTUNERS), action="append", default=[])
+    args = ap.parse_args(argv)
+    reg = TuningRegistry(path=args.path)
+    for name, value in args.set:
+        reg.set_override(name, value, persist=True)
+        print(f"{name} <- {reg.get(name)!r}")
+    for target in args.autotune:
+        AUTOTUNERS[target](reg)
+    if args.show or not (args.set or args.autotune):
+        overrides = reg.overrides()
+        print(f"# device {reg.device_key} ({reg.path})")
+        for name in sorted(KNOBS):
+            src = "override" if name in overrides else "default"
+            print(f"{name:32s} = {reg.get(name)!r:10} [{src}] {KNOBS[name].doc.split('.')[0]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,8 @@ from benchmarks.check_regression import classify, flatten, make_parser, run_gate
 BASE = {
     "smoke": True,
     "kernels": {"us_per_call": {"fed_round_tiny_rnnt": 100.0}},
-    "data": {"pack_speedup": 6.0, "pack_us": 50.0, "pass": True},
+    "data": {"pack_speedup": 6.0, "pack_us": 50.0, "prefetch_us": 50.0,
+             "pass": True},
     "t1": {"pass": True, "final_loss": {"E0": 2.0, "E1": 2.5}},
 }
 
@@ -48,9 +49,13 @@ def test_classify_paths():
     assert classify("t1.pass") == "bool"
     assert classify("kernels.us_per_call.fed_round_tiny_rnnt") == "fed_time"
     assert classify("kernels.us_per_call.fed_round_tiny_rnnt_int4_packed") == "fed_time"
-    assert classify("kernels.us_per_call.attention_blockwise_1k") == "time"
-    assert classify("kernels.us_per_call.wire_plane_int8") == "time"
-    assert classify("data.pack_us") == "time"
+    # every us_per_call leaf + pack_us is min-over-interleaved-reps
+    # now, so the whole family shares the tightened fed_time class
+    assert classify("kernels.us_per_call.attention_blockwise_1k") == "fed_time"
+    assert classify("kernels.us_per_call.wire_plane_int8") == "fed_time"
+    assert classify("data.pack_us") == "fed_time"
+    # the sleep-mean prefetch bench keeps the generous generic bound
+    assert classify("data.prefetch_us") == "time"
     assert classify("data.pack_speedup") == "speedup"
     # a speedup ratio keeps its direction even under a timing-ish path
     assert classify("kernels.us_per_call.wire_plane_int8_speedup") == "speedup"
@@ -73,11 +78,14 @@ def test_time_regression_fails_at_ratio():
     rows, failed = gate(fresh_copy(**{"kernels.us_per_call.fed_round_tiny_rnnt": 201.0}))
     assert failed
     assert failed_paths(rows) == {"kernels.us_per_call.fed_round_tiny_rnnt"}
-    # generic kernel timings keep the generous 3x ceiling
-    rows, failed = gate(fresh_copy(**{"data.pack_us": 149.0}))
-    assert not failed
-    rows, failed = gate(fresh_copy(**{"data.pack_us": 151.0}))
+    # pack_us rides the same tightened 2x class
+    rows, failed = gate(fresh_copy(**{"data.pack_us": 101.0}))
     assert failed and failed_paths(rows) == {"data.pack_us"}
+    # the sleep-mean prefetch number keeps the generous 3x ceiling
+    rows, failed = gate(fresh_copy(**{"data.prefetch_us": 149.0}))
+    assert not failed
+    rows, failed = gate(fresh_copy(**{"data.prefetch_us": 151.0}))
+    assert failed and failed_paths(rows) == {"data.prefetch_us"}
 
 
 def test_time_improvement_never_fails():
@@ -130,7 +138,7 @@ def test_knobs_are_tunable():
     assert failed
     _, failed = gate(f, fed_time_ratio=2.0)
     assert not failed
-    f = fresh_copy(**{"data.pack_us": 100.0})
+    f = fresh_copy(**{"data.prefetch_us": 100.0})
     _, failed = gate(f, time_ratio=1.5)
     assert failed
     _, failed = gate(f, time_ratio=2.5)
