@@ -83,7 +83,7 @@ def _fed_round_setup():
 def _round_variants(base):
     from repro.core import AsyncConfig, CompressionConfig, FederatedPlan
 
-    return [
+    variants = [
         ("fed_round_tiny_rnnt", FederatedPlan(**base)),
         # buffered-async engine: same client compute, plus the arrival
         # scan + staleness-discounted buffer flushes (B=5 of K=8, the
@@ -113,6 +113,19 @@ def _round_variants(base):
         ("fed_round_tiny_rnnt_top5_ef",
          FederatedPlan(**base, compression=CompressionConfig(
              kind="topk", topk_frac=0.05, error_feedback=True))),
+    ]
+    # uniform triples: (name, plan, client_sharding). The sharded
+    # variants run the SAME plans through the shard_map body on a
+    # 1-device `clients` mesh — the pure dispatch/partitioner overhead
+    # of the sharded lowering, gated by the sharded_le_fp32 flag.
+    from repro.core.fedavg import ClientSharding
+    from repro.launch.mesh import make_federated_mesh
+
+    sh = ClientSharding(make_federated_mesh(1))
+    return [(n, p, None) for n, p in variants] + [
+        ("fed_round_tiny_rnnt_sharded", FederatedPlan(**base), sh),
+        ("fed_round_tiny_rnnt_sharded_int8",
+         FederatedPlan(**base, compression=CompressionConfig(kind="int8")), sh),
     ]
 
 
@@ -148,14 +161,15 @@ def bench_fed_round():
     base = dict(clients_per_round=8, local_batch_size=4, client_lr=0.3)
     variants = _round_variants(base)
     steps, states = {}, {}
-    for name, plan in variants:
+    for name, plan, sharding in variants:
         states[name] = init_server_state(plan, params)
         steps[name] = jax.jit(make_round_step(bundle.loss_fn, plan,
-                                              jax.random.PRNGKey(1)))
+                                              jax.random.PRNGKey(1),
+                                              client_sharding=sharding))
         states[name], m = steps[name](states[name], batch)       # compile
         jax.block_until_ready(m["loss"])
     reps = bench_reps("REPRO_BENCH_FED_REPS", "bench.fed_reps")
-    cycle_times = {name: [] for name, _ in variants}
+    cycle_times = {name: [] for name, _, _ in variants}
 
     def step_once(name):
         t0 = time.perf_counter()
@@ -167,7 +181,7 @@ def bench_fed_round():
 
     for rep in range(reps):
         order = variants[rep % len(variants):] + variants[:rep % len(variants)]
-        for name, _ in order:
+        for name, _, _ in order:
             step_once(name)
     # The ordering flags: ADJACENT fp32<->variant pairs (back-to-back
     # steps, so host-steal drift has ~one round step to move instead of
@@ -175,8 +189,14 @@ def bench_fed_round():
     flags = {}
     pair_reps = max(3, bench_reps("REPRO_BENCH_FED_PAIR_REPS",
                                   "bench.fed_pair_reps"))
+    # sharded_le_fp32 is the never-flip floor on the shard_map lowering
+    # itself: a 1-device `clients` mesh must stay within the noise
+    # margin (<= 1.1x) of the plain vmap round — the sharded body adds
+    # dispatch/partitioning, never a second copy of the compute.
     for tag, name in [("int8", "fed_round_tiny_rnnt_int8"),
-                      ("int4_packed", "fed_round_tiny_rnnt_int4_packed")]:
+                      ("int4_packed", "fed_round_tiny_rnnt_int4_packed"),
+                      ("sharded", "fed_round_tiny_rnnt_sharded"),
+                      ("sharded_int8", "fed_round_tiny_rnnt_sharded_int8")]:
         ratios = []
         for _ in range(pair_reps):
             f = step_once("fed_round_tiny_rnnt")
@@ -188,16 +208,17 @@ def bench_fed_round():
             "vs_fp32_ratio": round(r, 4),
         }
     times = {name: min(ts) for name, ts in cycle_times.items()}
-    ratio = {name: flags[tag]["vs_fp32_ratio"]
-             for tag, name in [("int8_le_fp32", "fed_round_tiny_rnnt_int8"),
-                               ("int4_packed_le_fp32",
-                                "fed_round_tiny_rnnt_int4_packed")]}
-    for name, plan in variants:
+    ratio = {name: flags[f"{tag}_le_fp32"]["vs_fp32_ratio"]
+             for tag, name in [("int8", "fed_round_tiny_rnnt_int8"),
+                               ("int4_packed", "fed_round_tiny_rnnt_int4_packed"),
+                               ("sharded", "fed_round_tiny_rnnt_sharded"),
+                               ("sharded_int8", "fed_round_tiny_rnnt_sharded_int8")]}
+    for name, plan, sharding in variants:
         up = 8 * client_wire_bytes(plan.compression, params)
-        if plan.compression.kind == "none":
-            derived = "clients=8"
-        elif name in ratio:
+        if name in ratio:
             derived = f"vs_fp32_ratio={ratio[name]};uplink_B_round={up}"
+        elif plan.compression.kind == "none":
+            derived = "clients=8"
         else:
             derived = f"uplink_B_round={up}"
         print(csv_row(name, times[name], derived))

@@ -71,7 +71,7 @@ from repro.core.fedavg import (
     _apply_cohort,
     _client_axis_zeros,
     _client_key_fanout,
-    _client_update,
+    _client_update_stage,
     _delta_payload_stage,
     _latency_key,
     _plane_keys,
@@ -129,21 +129,26 @@ def _async_round_body(
     latency_fn: Callable,
     buffer_size: int,
     beta,
+    sharding=None,
 ):
     """One wave of the buffered-async engine (one jitted graph):
     client deltas -> cohort -> payload pipeline -> time-ordered arrival
-    stream -> buffer inserts -> staleness-discounted flushes."""
+    stream -> buffer inserts -> staleness-discounted flushes.
+
+    With ``sharding`` only the client-update stage shards (the heavy
+    per-client local training); the arrival stream is inherently
+    sequential server-side state and stays on the gathered global axis,
+    so the sharded wave is bit-for-bit the vmap wave."""
     B = buffer_size
     K = jax.tree.leaves(round_batch)[0].shape[0]
     ckey, qkey, akey, xkey = _plane_keys(base_key, state.round_idx)
 
     round_batch, pmask = _apply_cohort(plane, ckey, round_batch)
 
-    deltas, losses, n_k = jax.vmap(
-        lambda cb, ci: _client_update(
-            loss_fn, client_opt, sigma_fn, base_key, state.params, cb, ci, state.round_idx
-        )
-    )(round_batch, jnp.arange(K))
+    deltas, losses, n_k = _client_update_stage(
+        loss_fn, client_opt, sigma_fn, base_key, state.params, round_batch,
+        state.round_idx, sharding,
+    )
 
     ckeys = _client_key_fanout(plane, qkey, K)
     deltas, ef, cmask, stale = _delta_payload_stage(
@@ -245,6 +250,7 @@ def make_async_round(
     loss_fn: Callable,
     plan: FederatedPlan,
     base_key,
+    client_sharding=None,
 ) -> Callable[[ServerState, PyTree], tuple[ServerState, dict]]:
     """Returns round_step(state, round_batch) -> (state, metrics) for
     plan.engine == "async". round_batch layout matches the fedavg
@@ -260,11 +266,13 @@ def make_async_round(
     latency_fn = make_latency_fn(plan.latency)
     buffer_size = plan.asynchrony.resolve_buffer(plan.clients_per_round)
     beta = plan.asynchrony.staleness_beta
+    if client_sharding is not None:
+        client_sharding.check_clients(plan.clients_per_round)
 
     def round_step(state: ServerState, round_batch: PyTree):
         return _async_round_body(
             loss_fn, client_opt, server_opt, sigma_fn, base_key, state, round_batch,
-            plane, latency_fn, buffer_size, beta,
+            plane, latency_fn, buffer_size, beta, client_sharding,
         )
 
     return round_step

@@ -270,7 +270,7 @@ def packed_leaf_bytes(payload) -> int:
     return sum(int(a.size) * jnp.dtype(a.dtype).itemsize for a in payload)
 
 
-def sum_packed_codes(cfg: CompressionConfig, data, size: int, weights=None):
+def sum_packed_codes(cfg: CompressionConfig, data, size: int, weights=None, axis=None):
     """All-reduce a stack of intN payload buffers *in the code domain*:
     (K, nbytes) payload -> (size,) int32 code sums. ``data`` is the
     wire buffer of ``cfg`` — nibble-packed bytes for a packed int4
@@ -291,6 +291,12 @@ def sum_packed_codes(cfg: CompressionConfig, data, size: int, weights=None):
     accumulation is exact up to sum(n_k) < 2**31 / 127 = 16,909,320
     examples (clients) per round, int4 up to 2**31 / 7 ~= 306M — far
     above any real cohort; past that, widen to int64 before the psum.
+
+    With ``axis`` (a named mesh axis inside ``shard_map``) the local
+    per-shard code sum is followed by a literal ``jax.lax.psum`` over
+    that axis — int32 addition is associative and commutative, so the
+    sharded total is bit-identical to the single-device reduction and
+    the overflow bound above applies to the *global* cohort unchanged.
     """
     from repro.kernels import wire_pack
 
@@ -305,8 +311,12 @@ def sum_packed_codes(cfg: CompressionConfig, data, size: int, weights=None):
         codes = data
     wide = codes.astype(jnp.int32)
     if weights is None:
-        return wide.sum(axis=0)
-    return jnp.tensordot(weights.astype(jnp.int32), wide, axes=(0, 0))
+        total = wide.sum(axis=0)
+    else:
+        total = jnp.tensordot(weights.astype(jnp.int32), wide, axes=(0, 0))
+    if axis is not None:
+        total = jax.lax.psum(total, axis)
+    return total
 
 
 # ----------------------------------------------------------------------
@@ -318,16 +328,22 @@ def sum_packed_codes(cfg: CompressionConfig, data, size: int, weights=None):
 # ----------------------------------------------------------------------
 
 
-def shared_leaf_scale(d, pmask, bits: int):
+def shared_leaf_scale(d, pmask, bits: int, axis=None):
     """Negotiate one scale for a (K, ...) client-stacked leaf: each
     client's absmax (masked by participation — dropped clients transmit
     nothing, so they must not coarsen the grid), max-reduced over the
-    client axis. Under pjit with the K axis sharded this lowers to an
-    all-reduce over 4-byte scalars — the cheap half of the negotiation
-    that makes the code sums below exact."""
+    client axis. With ``axis`` (a named mesh axis inside ``shard_map``,
+    where ``d``/``pmask`` hold only this shard's clients) the local max
+    is followed by ``jax.lax.pmax`` over that axis — an all-reduce over
+    a 4-byte scalar, the cheap half of the negotiation that makes the
+    code sums exact. max is associative/commutative and exact in f32,
+    so the sharded scale is bit-identical to the single-device one."""
     levels = 2.0 ** (bits - 1) - 1.0
     am = jnp.max(jnp.abs(d.astype(jnp.float32).reshape(d.shape[0], -1)), axis=1)
-    scale = jnp.max(am * (pmask > 0)) / levels
+    m = jnp.max(am * (pmask > 0))
+    if axis is not None:
+        m = jax.lax.pmax(m, axis)
+    scale = m / levels
     return jnp.where(scale > 0, scale, 1.0)
 
 
@@ -338,7 +354,9 @@ def fastpath_leaf_keys(ckeys, leaf_idx: int):
     return jax.vmap(lambda ck: jax.random.fold_in(ck, leaf_idx))(ckeys)
 
 
-def code_domain_aggregate(cfg: CompressionConfig, deltas: PyTree, n_k, pmask, ckeys) -> PyTree:
+def code_domain_aggregate(
+    cfg: CompressionConfig, deltas: PyTree, n_k, pmask, ckeys, axis=None
+) -> PyTree:
     """Example-weighted mean of K quantized client deltas without ever
     rematerializing fp32 per-client tensors:
 
@@ -355,19 +373,30 @@ def code_domain_aggregate(cfg: CompressionConfig, deltas: PyTree, n_k, pmask, ck
     untouched: the payload per client is byte-identical to
     ``pack_leaf`` (codes against a shared scale instead of its own —
     same buffer shapes, same ``leaf_wire_bytes``).
+
+    With ``axis`` (called inside ``shard_map`` where ``deltas``/``n_k``/
+    ``pmask``/``ckeys`` hold only this shard's slice of the cohort) the
+    scale negotiation pmax-es, the code sum psum-s, and ``n`` psum-s
+    over that axis — each reduction is exact (f32 max; int32 add; f32
+    add of integer-valued example counts, exact below 2**24), so the
+    sharded aggregate is bit-identical to the single-device one and
+    every shard returns the same replicated ``wbar``.
     """
     from repro.kernels import wire_pack
 
     bits = _BITS[cfg.kind]
     leaves, treedef = jax.tree_util.tree_flatten(deltas)
-    n = jnp.maximum(n_k.sum(), 1.0)
+    n_total = n_k.sum()
+    if axis is not None:
+        n_total = jax.lax.psum(n_total, axis)
+    n = jnp.maximum(n_total, 1.0)
     w_int = jnp.round(n_k).astype(jnp.int32)
     out = []
     for li, d in enumerate(leaves):
         K = d.shape[0]
         flat = d.astype(jnp.float32).reshape(K, -1)
         size = flat.shape[1]
-        scale = shared_leaf_scale(d, pmask, bits)
+        scale = shared_leaf_scale(d, pmask, bits, axis=axis)
         lkeys = fastpath_leaf_keys(ckeys, li)
 
         def client(x, k, scale=scale):
@@ -377,7 +406,7 @@ def code_domain_aggregate(cfg: CompressionConfig, deltas: PyTree, n_k, pmask, ck
             return wire_pack.quantize_with_scale(x, scale, u, bits)
 
         payload = jax.vmap(client)(flat, lkeys)
-        csum = sum_packed_codes(cfg, payload, size, weights=w_int)
+        csum = sum_packed_codes(cfg, payload, size, weights=w_int, axis=axis)
         out.append((csum.astype(jnp.float32) * (scale / n)).reshape(d.shape[1:]))
     return jax.tree_util.tree_unflatten(treedef, out)
 

@@ -22,6 +22,14 @@ way the drivers consume an engine:
   keys on.
 - ``init_state`` / ``state_specs`` / ``hypers``: state construction,
   pjit PartitionSpecs, and the plan's traced-scalar dict.
+
+``client_sharding`` (a ``fedavg.ClientSharding`` over a mesh with a
+named ``clients`` axis, see ``launch.mesh.make_federated_mesh``) is a
+construction-time capability like everything else: it is validated
+here (fedsgd has no client axis; K must divide over the shards), both
+``step`` and ``hyper_step`` select the sharded bodies, and the axis
+name + shard count fold into ``structural_key`` — a sharded and an
+unsharded engine never collide in a jit cache.
 """
 
 from __future__ import annotations
@@ -31,9 +39,11 @@ import functools
 from typing import Callable, NamedTuple, Optional
 
 from repro.core.fedavg import (
+    ClientSharding,
     _check_fedsgd_aggregator,
     _check_fedsgd_compression,
     _check_fedsgd_corruption,
+    _check_sharding_engine,
     init_server_state,
     make_hyper_round_step,
     make_round_step,
@@ -126,12 +136,22 @@ def structural_key_str(key) -> str:
     return str(key)
 
 
-def build_round_engine(plan: FederatedPlan, loss_fn: Callable, base_key=None) -> RoundEngine:
+def build_round_engine(
+    plan: FederatedPlan,
+    loss_fn: Callable,
+    base_key=None,
+    client_sharding: Optional[ClientSharding] = None,
+) -> RoundEngine:
     """THE engine factory: validate the plan, then wire every consumer
     surface of the selected engine. ``base_key`` is only needed for the
     plan-constant ``step`` (train/bench); sweep-style callers that only
-    use ``hyper_step`` may omit it."""
+    use ``hyper_step`` may omit it. ``client_sharding`` runs the
+    per-client stage under ``shard_map`` over its mesh's ``clients``
+    axis (bit-for-bit the vmap round on a 1-device mesh)."""
     validate_plan(plan)
+    if client_sharding is not None:
+        _check_sharding_engine(plan.engine, client_sharding)
+        client_sharding.check_clients(plan.clients_per_round)
     latency = plan.latency if (plan.engine == "async" or plan.latency.enabled) else None
     buffer_size = None
     if plan.engine == "async":
@@ -145,12 +165,20 @@ def build_round_engine(plan: FederatedPlan, loss_fn: Callable, base_key=None) ->
         corruption=_graph_corruption_kind(plan),
         latency=latency,
         buffer_size=buffer_size,
+        client_sharding=client_sharding,
     )
-    step = make_round_step(loss_fn, plan, base_key) if base_key is not None else None
+    step = (
+        make_round_step(loss_fn, plan, base_key, client_sharding)
+        if base_key is not None
+        else None
+    )
+    structural_key = engine_structural_key(plan)
+    if client_sharding is not None:
+        structural_key += (client_sharding.structural(),)
     return RoundEngine(
         name=plan.engine,
         plan=plan,
-        structural_key=engine_structural_key(plan),
+        structural_key=structural_key,
         init_state=functools.partial(init_server_state, plan),
         hyper_step=hyper_step,
         hypers=functools.partial(plan_hypers, plan),

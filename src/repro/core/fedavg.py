@@ -69,6 +69,20 @@ deltas): its rate and magnitude are traced ``HYPER_KEYS`` scalars, so
 an adversary grid shares one compilation per (aggregator, kind), and a
 corrupted client still pays its full uplink bytes — the wire metrics
 count participants, not honesty.
+
+With a ``ClientSharding`` (a mesh with a named ``clients`` axis,
+threaded through ``build_round_engine``), the per-client stage runs
+under ``shard_map``: each shard owns K/shards clients of the round
+batch and the local-steps scan runs unchanged per client, so the
+sharded round is bit-for-bit the vmap round on a 1-device mesh. The
+code-domain fast path additionally keeps its whole aggregate inside
+the shard_map — the shared-scale negotiation becomes a ``lax.pmax``
+over 4-byte scalars and ``sum_packed_codes`` becomes a literal
+``lax.psum`` of int32 partial code sums (exact integer arithmetic, so
+the single-server-dequant semantics and the int32 overflow bound carry
+over unchanged). The slow path (EF / robust aggregators / delta
+adversaries) shards the client compute only and aggregates on the
+gathered global axis.
 """
 
 from __future__ import annotations
@@ -93,6 +107,41 @@ from repro.core.plan import FederatedPlan, make_server_optimizer
 from repro.optim import Optimizer, apply_updates, sgd
 
 PyTree = Any
+
+
+class ClientSharding(NamedTuple):
+    """Construction-time capability: run a round's per-client stage
+    under ``shard_map`` over a named mesh axis, each shard owning
+    K/num_shards clients of the round batch.
+
+    The mesh axis name and size are compile-time structure (they shape
+    the lowered collectives), so engines fold ``structural()`` into
+    their jit-cache identity; the concrete device assignment is not —
+    the same program lowers on any mesh of the same shape."""
+
+    mesh: Any  # jax.sharding.Mesh with ``axis`` in its axis names
+    axis: str = "clients"
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def structural(self) -> tuple:
+        return ("clients_sharded", self.axis, self.num_shards)
+
+    def check_clients(self, clients: int) -> None:
+        if self.axis not in self.mesh.shape:
+            raise ValueError(
+                f"client sharding axis {self.axis!r} is not on the mesh "
+                f"(axes: {tuple(self.mesh.shape)}) — build it with "
+                "launch.mesh.make_federated_mesh"
+            )
+        if clients % self.num_shards:
+            raise ValueError(
+                f"clients_per_round={clients} does not divide over the "
+                f"{self.num_shards}-way {self.axis!r} mesh axis — each "
+                "shard owns an equal slice of the round batch"
+            )
 
 
 class ServerState(NamedTuple):
@@ -368,6 +417,84 @@ def _client_key_fanout(plane: ServerPlane, qkey, K: int):
     return jax.vmap(lambda i: jax.random.fold_in(qkey, i))(jnp.arange(K))
 
 
+def _client_update_stage(
+    loss_fn, client_opt, sigma_fn, base_key, params, round_batch, round_idx,
+    sharding: Optional[ClientSharding] = None,
+):
+    """The round's per-client compute — vmap over the K axis wrapping
+    the local-steps scan — optionally shard_mapped over ``sharding``'s
+    mesh axis. Each shard runs the identical per-client arithmetic on
+    its K/num_shards slice (client indices stay global through the
+    sharded arange, so the FVN/RNG streams are untouched), which is
+    what makes the sharded round bit-for-bit the vmap round on a
+    1-device mesh. Returns (deltas, losses, n_k) with a global leading
+    K axis either way."""
+    K = jax.tree.leaves(round_batch)[0].shape[0]
+
+    def stage(p, batch, cidx, bkey, ridx):
+        return jax.vmap(
+            lambda cb, ci: _client_update(loss_fn, client_opt, sigma_fn, bkey, p, cb, ci, ridx)
+        )(batch, cidx)
+
+    args = (params, round_batch, jnp.arange(K), base_key, round_idx)
+    if sharding is None:
+        return stage(*args)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    sharding.check_clients(K)
+    ax = sharding.axis
+    return shard_map(
+        stage,
+        mesh=sharding.mesh,
+        in_specs=(P(), P(ax), P(ax), P(), P()),
+        out_specs=(P(ax), P(ax), P(ax)),
+        check_rep=False,
+    )(*args)
+
+
+def _sharded_code_fastpath(
+    plane: ServerPlane,
+    loss_fn,
+    client_opt,
+    sigma_fn,
+    base_key,
+    params,
+    round_batch,
+    round_idx,
+    pmask,
+    ckeys,
+    sharding: ClientSharding,
+):
+    """Client compute AND the code-domain aggregate in ONE shard_map:
+    local deltas never leave their shard — the scale negotiation is a
+    ``lax.pmax`` over 4-byte scalars and the code reduction a literal
+    ``lax.psum`` of int32 partial sums (exact, order-independent), so
+    ``wbar`` replicates bit-for-bit what the unsharded fast path
+    computes. Returns (wbar replicated, losses (K,), n_k (K,))."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    K = jax.tree.leaves(round_batch)[0].shape[0]
+    sharding.check_clients(K)
+    ax = sharding.axis
+
+    def stage(p, batch, cidx, pm, cks, bkey, ridx):
+        deltas, losses, n_k = jax.vmap(
+            lambda cb, ci: _client_update(loss_fn, client_opt, sigma_fn, bkey, p, cb, ci, ridx)
+        )(batch, cidx)
+        wbar = code_domain_aggregate(plane.compression, deltas, n_k, pm, cks, axis=ax)
+        return wbar, losses, n_k
+
+    return shard_map(
+        stage,
+        mesh=sharding.mesh,
+        in_specs=(P(), P(ax), P(ax), P(ax), P(ax), P(), P()),
+        out_specs=(P(), P(ax), P(ax)),
+        check_rep=False,
+    )(params, round_batch, jnp.arange(K), pmask, ckeys, base_key, round_idx)
+
+
 def _delta_payload_stage(plane: ServerPlane, deltas, ef, pmask, ckeys, xkey, stale):
     """The generic per-client payload pipeline — (EF-)compression then
     the delta-domain adversary — shared by the sync slow path and the
@@ -408,6 +535,7 @@ def _fedavg_round_body(
     round_batch: PyTree,
     plane: Optional[ServerPlane] = None,
     latency_fn=None,
+    sharding: Optional[ClientSharding] = None,
 ):
     """One FedAvg round: client deltas -> cohort -> compression ->
     corruption -> aggregator -> server optimizer (one jitted graph)."""
@@ -416,27 +544,38 @@ def _fedavg_round_body(
     ckey, qkey, akey, xkey = _plane_keys(base_key, state.round_idx)
 
     round_batch, pmask = _apply_cohort(plane, ckey, round_batch)
-
-    deltas, losses, n_k = jax.vmap(
-        lambda cb, ci: _client_update(
-            loss_fn, client_opt, sigma_fn, base_key, state.params, cb, ci, state.round_idx
-        )
-    )(round_batch, jnp.arange(K))
-
     ckeys = _client_key_fanout(plane, qkey, K)
 
     ef = state.ef
-    if _code_fast_path(plane):
+    if _code_fast_path(plane) and sharding is not None:
+        # Sharded code-domain fast path: client compute and the int32
+        # code-sum psum live in one shard_map — per-client deltas never
+        # leave their shard (see _sharded_code_fastpath).
+        wbar, losses, n_k = _sharded_code_fastpath(
+            plane, loss_fn, client_opt, sigma_fn, base_key, state.params,
+            round_batch, state.round_idx, pmask, ckeys, sharding,
+        )
+        cmask = jnp.zeros((K,), jnp.float32)
+        stale = state.stale
+    elif _code_fast_path(plane):
         # Code-domain fast path: shared-scale negotiation + in-graph
         # int32 code-sum reduction, ONE server dequant — per-client
         # fp32 deltas are never rematerialized. Statically selected, so
         # every other configuration keeps its existing graph. The
         # corruption stage here is the honest identity (delta
         # adversaries force the slow path), matching its cmask = 0.
+        deltas, losses, n_k = _client_update_stage(
+            loss_fn, client_opt, sigma_fn, base_key, state.params, round_batch,
+            state.round_idx,
+        )
         wbar = code_domain_aggregate(plane.compression, deltas, n_k, pmask, ckeys)
         cmask = jnp.zeros((K,), jnp.float32)
         stale = state.stale
     else:
+        deltas, losses, n_k = _client_update_stage(
+            loss_fn, client_opt, sigma_fn, base_key, state.params, round_batch,
+            state.round_idx, sharding,
+        )
         deltas, ef, cmask, stale = _delta_payload_stage(
             plane, deltas, ef, pmask, ckeys, xkey, state.stale
         )
@@ -460,6 +599,7 @@ def make_fedavg_round(
     loss_fn: Callable,
     plan: FederatedPlan,
     base_key,
+    client_sharding: Optional[ClientSharding] = None,
 ) -> Callable[[ServerState, PyTree], tuple[ServerState, dict]]:
     """Returns round_step(state, round_batch) -> (state, metrics).
 
@@ -471,11 +611,13 @@ def make_fedavg_round(
     sigma_fn = (lambda r: fvn_lib.fvn_sigma(plan.fvn, r)) if plan.fvn.enabled else None
     plane = plan_server_plane(plan)
     latency_fn = make_latency_fn(plan.latency) if plan.latency.enabled else None
+    if client_sharding is not None:
+        client_sharding.check_clients(plan.clients_per_round)
 
     def round_step(state: ServerState, round_batch: PyTree):
         return _fedavg_round_body(
             loss_fn, client_opt, server_opt, sigma_fn, base_key, state, round_batch, plane,
-            latency_fn,
+            latency_fn, client_sharding,
         )
 
     return round_step
@@ -591,14 +733,25 @@ def _fedsgd_round_body(
     ), metrics
 
 
-def make_round_step(loss_fn, plan: FederatedPlan, base_key):
+def _check_sharding_engine(engine: str, client_sharding) -> None:
+    if client_sharding is not None and engine == "fedsgd":
+        raise ValueError(
+            "fedsgd collapses clients into one weighted forward/backward — "
+            "there is no per-client axis to shard; use the fedavg or async "
+            "engine with client sharding (fedsgd weights shard over the "
+            "model axes instead, see launch.sharding)"
+        )
+
+
+def make_round_step(loss_fn, plan: FederatedPlan, base_key, client_sharding=None):
+    _check_sharding_engine(plan.engine, client_sharding)
     if plan.engine == "async":
         from repro.core.async_engine import make_async_round
 
-        return make_async_round(loss_fn, plan, base_key)
+        return make_async_round(loss_fn, plan, base_key, client_sharding)
     if plan.engine == "fedsgd":
         return make_fedsgd_round(loss_fn, plan, base_key)
-    return make_fedavg_round(loss_fn, plan, base_key)
+    return make_fedavg_round(loss_fn, plan, base_key, client_sharding)
 
 
 # ----------------------------------------------------------------------
@@ -699,6 +852,7 @@ def make_hyper_round_step(
     corruption: str = "none",
     latency: Optional[LatencyConfig] = None,
     buffer_size: Optional[int] = None,
+    client_sharding: Optional[ClientSharding] = None,
 ):
     """Returns round_step(state, round_batch, hypers, base_key).
 
@@ -730,6 +884,7 @@ def make_hyper_round_step(
         "yogi": optim.yogi,
     }
     make_server = server_opt_fns[server_optimizer]
+    _check_sharding_engine(engine, client_sharding)
     if engine == "fedsgd":
         _check_fedsgd_aggregator(aggregator)
         _check_fedsgd_compression(compression)
@@ -773,11 +928,11 @@ def make_hyper_round_step(
 
             return _async_round_body(
                 loss_fn, client_opt, server_opt, sigma_fn, base_key, state, round_batch,
-                plane, latency_fn, buffer_size, hypers["async_beta"],
+                plane, latency_fn, buffer_size, hypers["async_beta"], client_sharding,
             )
         return _fedavg_round_body(
             loss_fn, client_opt, server_opt, sigma_fn, base_key, state, round_batch, plane,
-            latency_fn,
+            latency_fn, client_sharding,
         )
 
     return round_step

@@ -1,5 +1,5 @@
 """Data substrate: synthetic speaker-split corpora + federated round batching."""
-from repro.data.corpus import SpeakerCorpus, CorpusConfig, make_speaker_corpus
+from repro.data.corpus import SpeakerCorpus, CorpusConfig, VirtualPopulation, make_speaker_corpus
 from repro.data.pipeline import (
     RoundBatch,
     FederatedSampler,
@@ -12,6 +12,7 @@ from repro.data.synthetic import label_shuffle, synthetic_lm_clients, synthetic_
 __all__ = [
     "SpeakerCorpus",
     "CorpusConfig",
+    "VirtualPopulation",
     "make_speaker_corpus",
     "RoundBatch",
     "FederatedSampler",

@@ -157,5 +157,79 @@ class SpeakerCorpus:
         return dict(features=feats, labels=labels, label_len=label_len, frame_len=frame_len)
 
 
+class VirtualPopulation:
+    """N virtual clients (millions) over a P-speaker base corpus,
+    without EVER materializing an N-sized array.
+
+    The paper's deployment is millions of phones; the synthetic corpus
+    materializes P speakers of real example data. This layer maps
+    virtual client ``v`` onto base speaker ``v % P`` — clone ``j`` of
+    speaker ``s`` is ``v = s + j * P`` — so every virtual client has a
+    real local dataset (its base speaker's arena row) while keeping its
+    OWN sampling identity: the federated sampler keys cursors and
+    shuffle orders by the *virtual* id (lazily, only for visited
+    clients), so two clones of one speaker traverse their shared data
+    in independent orders, exactly like two phones holding similar
+    data. Memory is O(P + visited), fully decoupled from N.
+
+    Everything a strategy needs is histogram-shaped: ``base_counts``
+    (P,) per-speaker example counts and ``clone_counts()`` (P,) virtual
+    clients per speaker (``N // P`` + 1 for the first ``N % P``
+    speakers). Strategies detect a virtual population by exactly these
+    two attributes and switch to O(K log P) histogram draws.
+
+    Deliberately NOT provided: ``.speakers`` / ``.counts`` /
+    ``.utterance_histogram`` — any consumer that would iterate
+    per-client state must go through the histogram API or it would
+    reintroduce the O(N) scan this layer exists to remove.
+    """
+
+    def __init__(self, base: SpeakerCorpus, num_clients: int):
+        P = base.num_speakers
+        if num_clients < P:
+            raise ValueError(
+                f"virtual population ({num_clients}) smaller than the base "
+                f"corpus ({P} speakers) — shrink the corpus instead"
+            )
+        self.base = base
+        self.num_clients = int(num_clients)
+        self.base_counts = np.asarray(base.counts, np.int64)
+        # arena + shape surface: identical layout, indexed by BASE ids
+        # (the sampler maps virtual -> base via base_of before gathers)
+        self.cfg = base.cfg
+        self.n_max = base.n_max
+        self.t_max = base.t_max
+        self.u_max = base.u_max
+        self.arena_features = base.arena_features
+        self.arena_labels = base.arena_labels
+        self.arena_label_len = base.arena_label_len
+        self.arena_frame_len = base.arena_frame_len
+
+    @property
+    def num_speakers(self) -> int:
+        """The sampling universe: strategies draw from N virtual ids."""
+        return self.num_clients
+
+    def base_of(self, ids):
+        """Virtual client ids -> base speaker rows (vectorized)."""
+        return np.asarray(ids, np.int64) % self.base.num_speakers
+
+    def count_of(self, ids):
+        """Per-virtual-client example counts, by histogram lookup."""
+        return self.base_counts[self.base_of(ids)]
+
+    def clone_counts(self) -> np.ndarray:
+        """(P,) virtual clients per base speaker; sums to N."""
+        P = self.base.num_speakers
+        q, r = divmod(self.num_clients, P)
+        return q + (np.arange(P) < r).astype(np.int64)
+
+    def iid_pool(self):
+        return self.base.iid_pool()
+
+    def eval_split(self, num_examples: int, seed: int = 1234, hard: bool = False):
+        return self.base.eval_split(num_examples, seed=seed, hard=hard)
+
+
 def make_speaker_corpus(**kwargs) -> SpeakerCorpus:
     return SpeakerCorpus(CorpusConfig(**kwargs))

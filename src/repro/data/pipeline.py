@@ -98,13 +98,20 @@ class FederatedSampler:
         self.label_shuffle_rate = float(label_shuffle_rate)
         self._corrupt_rng = np.random.default_rng((seed + 1) * 0xC0FFEE)
         self.corrupted_counts: list = []
-        # Per-client cursors so data-limited rounds still traverse all data.
-        self._cursors = np.zeros(corpus.num_speakers, np.int64)
-        self._counts = np.array([s["n"] for s in corpus.speakers], np.int64)
-        self._orders = [
-            np.random.default_rng(seed + 7 * i).permutation(s["n"])
-            for i, s in enumerate(corpus.speakers)
-        ]
+        # Per-client cursors so data-limited rounds still traverse all
+        # data. LAZY dicts keyed by client id: under a VirtualPopulation
+        # N >> K and only visited clients may cost memory (each order is
+        # seeded by its own id, so lazy creation is bit-identical to the
+        # historical eager list for plain corpora).
+        self._seed = seed
+        self._cursors: dict = {}
+        self._orders: dict = {}
+        self._base_counts, self._base_of = self._corpus_counts(corpus)
+        if legacy and self._base_of is not None:
+            raise ValueError(
+                "the legacy per-example packer is the plain-corpus parity "
+                "oracle; virtual populations use the vectorized path"
+            )
         # Fixed max local steps for jit-stable shapes. ``steps`` forces
         # an exact S (sweep runners pad every point to one shape so a
         # single compiled round fn serves the whole grid).
@@ -113,6 +120,19 @@ class FederatedSampler:
                                          data_limit=data_limit,
                                          local_epochs=local_epochs,
                                          max_steps=max_steps))
+
+    @staticmethod
+    def _corpus_counts(corpus):
+        """(counts histogram, virtual->base map or None). The histogram
+        is indexed by BASE speaker row; plain corpora are their own
+        base (identity, ``base_of`` None)."""
+        base_of = getattr(corpus, "base_of", None)
+        counts = getattr(corpus, "base_counts", None)
+        if counts is None:
+            counts = getattr(corpus, "counts", None)
+        if counts is None:
+            counts = np.array([s["n"] for s in corpus.speakers], np.int64)
+        return np.asarray(counts, np.int64), base_of
 
     @staticmethod
     def natural_steps(corpus, local_batch_size: int,
@@ -124,32 +144,51 @@ class FederatedSampler:
         if data_limit is not None:
             n_max = data_limit
         else:
-            n_max = int(max(s["n"] for s in corpus.speakers))
+            counts, _ = FederatedSampler._corpus_counts(corpus)
+            n_max = int(counts.max())
         steps = max(1, int(np.ceil(local_epochs * n_max / local_batch_size)))
         if max_steps is not None:
             steps = min(steps, max_steps)
         return steps
 
+    def _count(self, cid: int) -> int:
+        """Example count of one client (virtual ids map to their base
+        speaker's histogram slot — a clone holds the same data)."""
+        base = cid % len(self._base_counts) if self._base_of is not None else cid
+        return int(self._base_counts[base])
+
+    def _order(self, cid: int) -> np.ndarray:
+        """The client's live shuffle order, created on first visit from
+        its id-seeded generator (clones of one speaker get independent
+        orders; plain corpora get the historical eager order bitwise)."""
+        o = self._orders.get(cid)
+        if o is None:
+            o = np.random.default_rng(self._seed + 7 * cid).permutation(self._count(cid))
+            self._orders[cid] = o
+        return o
+
     def _client_indices(self, cid: int) -> np.ndarray:
         """This round's example indices for one client (length = limit),
         advancing the cursor with a reshuffle at each full pass. Loops
         over *passes* (segments), never over examples."""
-        n = int(self._counts[cid])
+        n = self._count(cid)
         limit = min(self.data_limit, n) if self.data_limit is not None else n
-        c = int(self._cursors[cid])
+        c = int(self._cursors.get(cid, 0))
+        order = self._order(cid)
         pos = c % n
         if limit <= n - pos and not (pos == 0 and c > 0):
             # fast path: the whole contribution sits inside the current
             # pass — return a view of the live order, no copies
             self._cursors[cid] = c + limit
-            return self._orders[cid][pos:pos + limit]
+            return order[pos:pos + limit]
         out = np.empty(limit, np.int64)
         filled = 0
         while filled < limit:
             if c % n == 0 and c > 0:
-                self._orders[cid] = self.rng.permutation(n)
+                order = self.rng.permutation(n)
+                self._orders[cid] = order
             take = min(n - c % n, limit - filled)
-            out[filled:filled + take] = self._orders[cid][c % n:c % n + take]
+            out[filled:filled + take] = order[c % n:c % n + take]
             filled += take
             c += take
         self._cursors[cid] = c
@@ -204,7 +243,10 @@ class FederatedSampler:
         ex, n_k = self._gather_indices(chosen)
         pad = ex < 0
         np.copyto(ex, 0, where=pad)                  # safe gather index
-        rows = chosen[:, None]                       # (K, 1) client ids
+        # (K, 1) arena rows: virtual client ids gather their base
+        # speaker's row — the only O(K) touch of the population
+        base = self._base_of(chosen) if self._base_of is not None else chosen
+        rows = np.asarray(base, np.int64)[:, None]
         c = self.corpus
         # fancy-indexing copies, so padded slots can be zeroed in place
         feats = c.arena_features[rows, ex]           # (K, S*b, T, F)
@@ -233,19 +275,18 @@ class FederatedSampler:
     # ------------------------------------------------------------------
 
     def _client_examples(self, cid: int):
-        sp = self.corpus.speakers[cid]
-        n = sp["n"]
-        order = self._orders[cid]
+        n = self._count(cid)
+        order = self._order(cid)
         limit = min(self.data_limit, n) if self.data_limit is not None else n
         idx = []
         for _ in range(limit):
-            c = self._cursors[cid]
+            c = self._cursors.get(cid, 0)
             if c % n == 0 and c > 0:
                 # reshuffle each full pass
                 self._orders[cid] = self.rng.permutation(n)
                 order = self._orders[cid]
             idx.append(order[c % n])
-            self._cursors[cid] += 1
+            self._cursors[cid] = c + 1
         return np.asarray(idx, np.int64)
 
     def _next_round_legacy(self, chosen) -> RoundBatch:

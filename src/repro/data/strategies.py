@@ -15,7 +15,17 @@ This registry opens the dial on that second non-IID axis:
 
 A strategy is ``fn(rng, corpus, k) -> (k,) int64`` of distinct client
 ids. Register new ones with ``@register_strategy("name")``.
+
+Virtual populations (``corpus.VirtualPopulation``, N clients over a
+P-speaker base) are detected by their ``base_counts``/``clone_counts``
+histogram API, and every strategy switches to a draw that touches
+O(K log P) state — never an N-sized array: clone counts of one base
+speaker are equal, so "draw a virtual client by weight" factors into
+"draw a base speaker from the P-bin histogram, then a clone uniformly".
+Plain corpora keep the historical draws byte-for-byte (same RNG
+consumption), so existing fixed-seed runs are unchanged.
 """
+
 from __future__ import annotations
 
 from typing import Callable, Dict
@@ -25,6 +35,10 @@ import numpy as np
 Strategy = Callable[[np.random.Generator, object, int], np.ndarray]
 
 _STRATEGIES: Dict[str, Strategy] = {}
+
+# A virtual population must dwarf the round for rejection-style distinct
+# draws to be cheap; below this margin the plain O(N) draw is fine.
+_VIRTUAL_MARGIN = 8
 
 
 def register_strategy(name: str):
@@ -40,8 +54,8 @@ def get_strategy(name: str) -> Strategy:
         return _STRATEGIES[name]
     except KeyError:
         raise KeyError(
-            f"unknown client sampling strategy {name!r}; "
-            f"available: {sorted(_STRATEGIES)}") from None
+            f"unknown client sampling strategy {name!r}; available: {sorted(_STRATEGIES)}"
+        ) from None
 
 
 def available_strategies() -> list[str]:
@@ -55,21 +69,109 @@ def _counts(corpus) -> np.ndarray:
     return c if c is not None else corpus.utterance_histogram()
 
 
+def _virtual(corpus):
+    """The corpus if it speaks the virtual-population histogram API
+    (``base_counts`` + ``clone_counts``) AND is large enough that the
+    O(K log P) draws are worth their rejection loop, else None."""
+    if hasattr(corpus, "base_counts") and hasattr(corpus, "clone_counts"):
+        return corpus
+    return None
+
+
+def _use_virtual(corpus, k: int):
+    vp = _virtual(corpus)
+    if vp is not None and corpus.num_speakers >= _VIRTUAL_MARGIN * k:
+        return vp
+    return None
+
+
+def _distinct(rng, draw, k: int) -> np.ndarray:
+    """k DISTINCT ids from a batched sampler ``draw(size) -> (size,)``
+    by rejection: keep first occurrences in draw order (deterministic
+    for a fixed rng stream), redraw until k survive. With the
+    population >= _VIRTUAL_MARGIN * k the expected number of rounds is
+    ~1, so the cost is O(k log k) sorting — independent of N."""
+    chosen = np.empty(0, np.int64)
+    while chosen.size < k:
+        cand = np.concatenate([chosen, np.asarray(draw(2 * (k - chosen.size)), np.int64)])
+        _, first = np.unique(cand, return_index=True)
+        chosen = cand[np.sort(first)]
+    return chosen[:k]
+
+
 @register_strategy("uniform")
 def uniform(rng: np.random.Generator, corpus, k: int) -> np.ndarray:
-    return rng.choice(corpus.num_speakers, size=k, replace=False)
+    vp = _use_virtual(corpus, k)
+    if vp is None:
+        return rng.choice(corpus.num_speakers, size=k, replace=False)
+    n = corpus.num_speakers
+    return _distinct(rng, lambda size: rng.integers(0, n, size=size), k)
 
 
 @register_strategy("weighted-by-examples")
 def weighted_by_examples(rng: np.random.Generator, corpus, k: int) -> np.ndarray:
-    counts = _counts(corpus).astype(np.float64)
-    p = counts / counts.sum()
-    return rng.choice(corpus.num_speakers, size=k, replace=False, p=p)
+    vp = _use_virtual(corpus, k)
+    if vp is None:
+        counts = _counts(corpus).astype(np.float64)
+        p = counts / counts.sum()
+        return rng.choice(corpus.num_speakers, size=k, replace=False, p=p)
+    # Factored draw: base speaker s with prob ∝ base_counts[s] *
+    # clone_counts[s] (total example mass of s's clones), then a clone
+    # uniformly — every virtual client v lands with prob ∝ count_of(v),
+    # via one P-bin categorical + one bounded integer draw.
+    base_counts = vp.base_counts.astype(np.float64)
+    clones = vp.clone_counts()
+    P = len(base_counts)
+    w = base_counts * clones
+    p = w / w.sum()
+
+    def draw(size):
+        s = rng.choice(P, size=size, p=p)
+        return s + P * rng.integers(0, clones[s])
+
+    return _distinct(rng, draw, k)
+
+
+def _stratified_virtual(rng, vp, k: int) -> np.ndarray:
+    """Round-robin over count-quantile strata of the VIRTUAL population
+    without materializing it: sort the P base speakers by count, take
+    the clone-weighted cumsum (each speaker contributes clone_counts[s]
+    virtual clients, all with the same count), cut it into near-equal
+    strata of virtual mass, and turn a uniform integer in a stratum's
+    cumsum range back into a (speaker, clone) pair by binary search —
+    O(log P) per draw."""
+    base_counts = vp.base_counts
+    clones = vp.clone_counts()
+    P = len(base_counts)
+    order = np.argsort(base_counts, kind="stable")
+    cum = np.cumsum(clones[order])
+    total = int(cum[-1])
+    n_strata = int(min(4, k, total))
+    bounds = np.linspace(0, total, n_strata + 1).astype(np.int64)
+    chosen: list = []
+    seen: set = set()
+    i = 0
+    while len(chosen) < k and i < 64 * k * n_strata:
+        lo, hi = bounds[i % n_strata], bounds[i % n_strata + 1]
+        i += 1
+        if hi <= lo:
+            continue
+        r = int(rng.integers(lo, hi))
+        j = int(np.searchsorted(cum, r, side="right"))
+        clone_idx = r - (int(cum[j - 1]) if j > 0 else 0)
+        v = int(order[j]) + P * clone_idx
+        if v not in seen:
+            seen.add(v)
+            chosen.append(v)
+    return np.asarray(chosen[:k], np.int64)
 
 
 @register_strategy("stratified")
 def stratified(rng: np.random.Generator, corpus, k: int) -> np.ndarray:
     """Round-robin over utterance-count quantile strata (Fig. 2 skew)."""
+    vp = _use_virtual(corpus, k)
+    if vp is not None:
+        return _stratified_virtual(rng, vp, k)
     counts = _counts(corpus)
     n_strata = int(min(4, k, corpus.num_speakers))
     # speakers sorted by count, split into n_strata near-equal bins

@@ -15,8 +15,7 @@ def compat_make_mesh(shape, axes):
     default every axis to Auto anyway."""
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is not None:
-        return jax.make_mesh(shape, axes,
-                             axis_types=(axis_type.Auto,) * len(axes))
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
     return jax.make_mesh(shape, axes)
 
 
@@ -30,6 +29,26 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """1-device mesh for CPU smoke runs of the pjit code paths."""
     return compat_make_mesh((1, 1), ("data", "model"))
+
+
+def make_federated_mesh(clients: int = 1):
+    """1-D mesh whose single ``clients`` axis shards the federated
+    round's client dimension (see ``core.fedavg.ClientSharding``): each
+    of the ``clients`` devices owns K/clients participants of a round.
+    On CPU, smoke-test multi-shard rounds with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (must be set
+    before jax first initializes)."""
+    if clients < 1:
+        raise ValueError(f"mesh needs >= 1 client shard, got {clients}")
+    avail = jax.device_count()
+    if clients > avail:
+        raise ValueError(
+            f"make_federated_mesh({clients}) needs {clients} devices but "
+            f"only {avail} are visible — on CPU, export "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={clients} "
+            "before jax initializes"
+        )
+    return compat_make_mesh((clients,), ("clients",))
 
 
 # TPU v5e hardware constants for the roofline (per chip).

@@ -95,8 +95,13 @@ def sanitize_specs(params: PyTree, specs: PyTree, mesh: Mesh) -> PyTree:
     return jax.tree.map(fix, params, specs)
 
 
-def fsdpify(params: PyTree, specs: PyTree, mesh: Mesh,
-            fsdp_axes=("pod", "data"), min_size: int = 1 << 16) -> PyTree:
+def fsdpify(
+    params: PyTree,
+    specs: PyTree,
+    mesh: Mesh,
+    fsdp_axes=("pod", "data"),
+    min_size: int = 1 << 16,
+) -> PyTree:
     """Add the FSDP axis on the last unsharded, divisible dim of each
     big leaf (fedsgd engine). Iterating last-to-first keeps the axis
     off leading layer-stack dims. Leaves < min_size stay put."""
@@ -121,8 +126,11 @@ def fsdpify(params: PyTree, specs: PyTree, mesh: Mesh,
 
 
 def named(mesh: Mesh, specs: PyTree) -> PyTree:
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
-                        is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
 
 
 def batch_axes(mesh: Mesh):

@@ -12,7 +12,15 @@ vs CFMQ cost (Fig. 3). This module expresses those grids as lists of
   hyper input (see ``repro.core.fedavg.make_hyper_round_step``), and
   all points are padded to a common local-step count, so the whole grid
   shares one compilation;
-- async host->device prefetch (``repro.data.prefetch``) per point.
+- async host->device prefetch (``repro.data.prefetch``) per point;
+- optional point-level mesh parallelism (``--mesh-clients N``): grid
+  points that share a compiled round fn stack along a leading axis
+  sharded over the ``clients`` mesh, so N whole points advance per
+  round step — one jit(vmap(hyper_step)) per grid, rows identical to
+  the sequential path (each point keeps its own host sampler/RNG);
+- optional ``--population N``: the corpus wrapped in a
+  ``VirtualPopulation`` of N clients (see ``repro.data.corpus``), so
+  sampling draws from millions of virtual clients in O(K log P).
 
 Grids:
 - ``noniid_fvn``: data-limit x FVN cross — the Fig. 3 quality/cost
@@ -115,7 +123,8 @@ class SweepRunner:
 
     def __init__(self, cfg=None, corpus=None, seed: int = 0,
                  eval_examples: int = 64, prefetch: bool = True,
-                 pad_steps: bool = False, trace_dir: Optional[str] = None):
+                 pad_steps: bool = False, trace_dir: Optional[str] = None,
+                 mesh_clients: int = 0):
         if cfg is None or corpus is None:
             from repro.launch.train import tiny_asr_setup
 
@@ -130,6 +139,12 @@ class SweepRunner:
         # host pack / round-step / eval section timers plus the
         # predictor's static features — the calibration corpus
         self.trace_dir = trace_dir
+        # mesh_clients > 1: run() shards embarrassingly-parallel grid
+        # points over the `clients` mesh (see _run_sharded) — grids are
+        # the one driver where whole independent rounds, not a round's
+        # client axis, are the natural unit of data parallelism
+        self.mesh_clients = mesh_clients
+        self._mesh_obj = None
         self._bundles: Dict[float, object] = {}
         self._jit_cache: Dict[tuple, Callable] = {}
 
@@ -166,6 +181,39 @@ class SweepRunner:
         if key not in self._jit_cache:
             self._jit_cache[key] = jax.jit(engine.hyper_step)
         return self._jit_cache[key]
+
+    def _mesh(self):
+        if self._mesh_obj is None:
+            from repro.launch.mesh import make_federated_mesh
+
+            self._mesh_obj = make_federated_mesh(self.mesh_clients)
+        return self._mesh_obj
+
+    def _point_sharding(self):
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        return NamedSharding(self._mesh(), PartitionSpec("clients"))
+
+    def _stacked_fn(self, engine, specaug_scale: float):
+        """jit(vmap(hyper_step)) — one compiled fn per structural key,
+        exactly like _round_fn but with a leading grid-point axis that
+        the caller shards over the `clients` mesh."""
+        key = (("stacked", self.mesh_clients) + engine.structural_key
+               + (float(specaug_scale),))
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(jax.vmap(engine.hyper_step))
+        return self._jit_cache[key]
+
+    def _stack_key(self, point: SweepPoint, steps: Optional[int]) -> tuple:
+        """Points stack into one vmapped round fn only when they share
+        compile structure (structural_key + specaug), round batch shape
+        (K, S, b) and round budget; everything else is traced."""
+        plan = point.plan
+        engine = self._engine(plan, point.specaug_scale)
+        S = steps if steps is not None else self.native_steps(plan)
+        return (engine.structural_key, float(point.specaug_scale),
+                point.rounds, plan.clients_per_round,
+                plan.local_batch_size, S)
 
     def native_steps(self, plan: FederatedPlan) -> int:
         """The local-step count the plan would get on its own (the
@@ -269,6 +317,41 @@ class SweepRunner:
         with rec.section("eval"):
             wers = evaluate_wer(cfg, bundle, state.params, self.corpus,
                                 self.eval_examples)
+        row = self._finish_row(point, params, n_params, native, losses,
+                               participants, corrupted, sim_times,
+                               server_steps, staleness, wers,
+                               time.time() - t0, log=log)
+        if self.trace_dir:
+            from repro.core.engine import structural_key_str
+            from repro.profile.predict import plan_round_features
+            from repro.profile.trace import write_trace
+
+            path = os.path.join(self.trace_dir,
+                                f"trace_sweep_{point.id}.json")
+            write_trace(
+                path, "sweep",
+                structural_key=structural_key_str(engine.structural_key),
+                sections=rec,
+                counters={"rounds": point.rounds, "n_params": n_params,
+                          "local_steps": native, "padded_steps": S},
+                # the predictor's static features for THIS point: each
+                # traced sweep row is a (features, measured round_s)
+                # calibration sample — min_s of "round" is the
+                # steady-state round, free of round-1 compile
+                features=plan_round_features(plan, params, native),
+                meta={"id": point.id, "wall_s": row["wall_s"]},
+            )
+            log(f"  [trace] {path}")
+        return row
+
+    def _finish_row(self, point: SweepPoint, params, n_params: int,
+                    native: int, losses, participants, corrupted, sim_times,
+                    server_steps, staleness, wers, wall_s: float,
+                    log=print) -> dict:
+        """Per-point metric lists -> one frontier row. Shared by the
+        sequential and mesh-stacked paths, so both emit identical
+        schemas with identical accounting."""
+        plan = point.plan
         # wire-accurate payload: per-client byte counts are exact ints
         # over the param shapes; participants come from the round
         # metrics, so partial participation shrinks measured uplink.
@@ -307,7 +390,7 @@ class SweepRunner:
             sim_time_s=sum(sim_times),
             server_steps_total=steps_total,
             staleness_mean=stale_mean,
-            wall_s=time.time() - t0,
+            wall_s=wall_s,
             extras={
                 "id": point.id,
                 "loss_curve": losses[::curve_stride],
@@ -318,34 +401,129 @@ class SweepRunner:
         log(f"  {point.id:>10s}: loss={row['final_loss']:.3f} "
             f"wer={row['wer']:.3f} cfmq={row['cfmq_tb']:.5f}TB "
             f"({row['wall_s']:.0f}s)")
-        if self.trace_dir:
-            from repro.core.engine import structural_key_str
-            from repro.profile.predict import plan_round_features
-            from repro.profile.trace import write_trace
-
-            path = os.path.join(self.trace_dir,
-                                f"trace_sweep_{point.id}.json")
-            write_trace(
-                path, "sweep",
-                structural_key=structural_key_str(engine.structural_key),
-                sections=rec,
-                counters={"rounds": point.rounds, "n_params": n_params,
-                          "local_steps": native, "padded_steps": S},
-                # the predictor's static features for THIS point: each
-                # traced sweep row is a (features, measured round_s)
-                # calibration sample — min_s of "round" is the
-                # steady-state round, free of round-1 compile
-                features=plan_round_features(plan, params, native),
-                meta={"id": point.id, "wall_s": row["wall_s"]},
-            )
-            log(f"  [trace] {path}")
         return row
+
+    def _run_chunk(self, chunk, steps: Optional[int], n_real: Optional[int] = None,
+                   log=print) -> list[dict]:
+        """Run len(chunk) == mesh_clients points in lockstep: states,
+        hypers and round batches gain a leading point axis sharded over
+        the `clients` mesh, and ONE jit(vmap(hyper_step)) advances every
+        point per round — whole grid points are embarrassingly parallel,
+        so each lives on its own device. Host-side sampling stays one
+        independent sampler/RNG per point: rounds are bit-identical to
+        the sequential path's draws."""
+        import jax.numpy as jnp
+
+        m = len(chunk)
+        first = chunk[0]
+        cfg, bundle = self._bundle(first.specaug_scale)
+        engines = [self._engine(p.plan, p.specaug_scale) for p in chunk]
+        natives = [self.native_steps(p.plan) for p in chunk]
+        S = steps if steps is not None else natives[0]
+        params0 = [bundle.init(jax.random.PRNGKey(p.seed)) for p in chunk]
+        n_params = bundle.param_count(params0[0])
+
+        def stack(trees):
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+        shard = self._point_sharding()
+        state = jax.device_put(
+            stack([e.init_state(pr) for e, pr in zip(engines, params0)]), shard)
+        hypers = jax.device_put(stack([e.hypers() for e in engines]), shard)
+        keys = jax.device_put(
+            jnp.stack([jax.random.PRNGKey(p.seed + 1) for p in chunk]), shard)
+        round_fn = self._stacked_fn(engines[0], first.specaug_scale)
+        samplers = [
+            FederatedSampler(
+                self.corpus, clients_per_round=p.plan.clients_per_round,
+                local_batch_size=p.plan.local_batch_size,
+                data_limit=p.plan.data_limit, local_epochs=p.plan.local_epochs,
+                seed=p.seed, steps=S, strategy=p.plan.client_sampling,
+                label_shuffle_rate=(p.plan.corruption.rate
+                                    if p.plan.corruption.kind == "label_shuffle"
+                                    else 0.0))
+            for p in chunk
+        ]
+
+        def host_batches():
+            for _ in range(first.rounds):
+                rbs = [s.next_round().engine_batch() for s in samplers]
+                yield jax.tree.map(lambda *xs: np.stack(xs), *rbs)
+
+        t0 = time.time()
+        series = {k: [[] for _ in range(m)]
+                  for k in ("loss", "participants", "corrupted",
+                            "sim_time_s", "server_steps", "staleness_mean")}
+        batches = (PrefetchIterator(host_batches(), depth=2, device_put=False,
+                                    transform=lambda b: jax.device_put(b, shard))
+                   if self.prefetch
+                   else map(lambda b: jax.device_put(b, shard), host_batches()))
+        try:
+            for batch in batches:
+                state, metrics = round_fn(state, batch, hypers, keys)
+                for k, per_point in series.items():
+                    vals = np.asarray(metrics[k])
+                    for i in range(m):
+                        per_point[i].append(float(vals[i]))
+        finally:
+            if self.prefetch:
+                batches.close()
+
+        from repro.launch.train import evaluate_wer
+
+        wall = time.time() - t0
+        rows = []
+        for i, p in enumerate(chunk[:n_real]):
+            corrupted = series["corrupted"][i]
+            if p.plan.corruption.kind == "label_shuffle":
+                corrupted = [float(c) for c in samplers[i].corrupted_counts]
+            params_i = jax.tree.map(lambda x: np.asarray(x[i]), state.params)
+            wers = evaluate_wer(cfg, bundle, params_i, self.corpus,
+                                self.eval_examples)
+            rows.append(self._finish_row(
+                p, params_i, n_params, natives[i], series["loss"][i],
+                series["participants"][i], corrupted, series["sim_time_s"][i],
+                series["server_steps"][i], series["staleness_mean"][i], wers,
+                wall, log=log))
+        return rows
+
+    def _run_sharded(self, points, steps: Optional[int], log=print) -> list[dict]:
+        """Group stackable points, run them in mesh-sized chunks (the
+        last chunk pads by repeating its final point — duplicate rows
+        are dropped), and fall back to run_point for singletons and IID
+        points (whose host pipeline bypasses the sampler)."""
+        m = self.mesh_clients
+        groups: Dict[tuple, list] = {}
+        for i, p in enumerate(points):
+            if not p.iid:
+                groups.setdefault(self._stack_key(p, steps), []).append(i)
+        rows: Dict[int, dict] = {}
+        for key, idxs in groups.items():
+            if len(idxs) < 2:
+                continue
+            log(f"[sweeps] mesh: {len(idxs)} points sharded over "
+                f"{m} devices ({[points[i].id for i in idxs]})")
+            for lo in range(0, len(idxs), m):
+                chunk_idx = idxs[lo:lo + m]
+                pad = m - len(chunk_idx)
+                chunk = [points[i] for i in chunk_idx] + \
+                        [points[chunk_idx[-1]]] * pad
+                chunk_rows = self._run_chunk(chunk, steps,
+                                             n_real=len(chunk_idx), log=log)
+                for i, row in zip(chunk_idx, chunk_rows):
+                    rows[i] = row
+        return [rows[i] if i in rows else self.run_point(p, steps=steps, log=log)
+                for i, p in enumerate(points)]
 
     def run(self, points, log=print) -> list[dict]:
         steps = self.common_steps(points)
         if steps is not None:
             log(f"[sweeps] {len(points)} points padded to S={steps} local "
                 f"steps -> one compiled round fn per engine/optimizer")
+        if self.mesh_clients > 1 and not self.trace_dir:
+            # trace calibration needs per-point section timers, which
+            # the lockstep path cannot attribute — sequential wins there
+            return self._run_sharded(points, steps, log=log)
         return [self.run_point(p, steps=steps, log=log) for p in points]
 
 
@@ -793,8 +971,8 @@ def run_grid(grid: str, rounds: Optional[int] = None, smoke: bool = False,
              seed: int = 0, out: Optional[str] = None, runner: Optional[SweepRunner] = None,
              pad_steps: Optional[bool] = None, check: bool = False,
              prune_budget: Optional[float] = None, prune_axis: str = "cfmq_tb",
-             trace_dir: Optional[str] = None,
-             log=print, **grid_kwargs) -> dict:
+             trace_dir: Optional[str] = None, mesh_clients: int = 0,
+             population: int = 0, log=print, **grid_kwargs) -> dict:
     """Run a named grid and write one quality/cost frontier JSON.
 
     ``pad_steps`` defaults to the smoke flag: with tiny round budgets
@@ -814,10 +992,17 @@ def run_grid(grid: str, rounds: Optional[int] = None, smoke: bool = False,
         kwargs["rounds"] = rounds
     points = make_points(**kwargs)
     if runner is None:
-        runner = SweepRunner(seed=seed,
+        cfg = corpus = None
+        if population:
+            from repro.data import VirtualPopulation
+            from repro.launch.train import tiny_asr_setup
+
+            cfg, corpus = tiny_asr_setup(seed)
+            corpus = VirtualPopulation(corpus, population)
+        runner = SweepRunner(cfg=cfg, corpus=corpus, seed=seed,
                              eval_examples=24 if smoke else 64,
                              pad_steps=smoke if pad_steps is None else pad_steps,
-                             trace_dir=trace_dir)
+                             trace_dir=trace_dir, mesh_clients=mesh_clients)
     prune = None
     if prune_budget is not None:
         from repro.profile.tuner import prune_report
@@ -893,11 +1078,20 @@ def main():
                     help="emit one trace JSON per point (pack/round/eval "
                          "section timers + predictor features) into this "
                          "directory")
+    ap.add_argument("--mesh-clients", type=int, default=0,
+                    help="shard stackable grid points over a `clients` "
+                         "mesh of this many devices (CPU: export "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--population", type=int, default=0,
+                    help="wrap the corpus in a VirtualPopulation of this "
+                         "many clients (clones of the base speakers; "
+                         "sampling stays O(K log P))")
     args = ap.parse_args()
     run_grid(args.grid, rounds=args.rounds, smoke=args.smoke, seed=args.seed,
              out=args.out, pad_steps=args.pad_steps, check=args.check,
              prune_budget=args.prune_budget, prune_axis=args.prune_axis,
-             trace_dir=args.trace_dir)
+             trace_dir=args.trace_dir, mesh_clients=args.mesh_clients,
+             population=args.population)
 
 
 if __name__ == "__main__":

@@ -87,12 +87,16 @@ def run_federated_asr(
     ckpt_dir: str | None = None,
     prefetch: bool = True,
     trace_path: str | None = None,
+    mesh_clients: int = 0,
 ):
     """Returns history dict with per-round losses + final WERs + CFMQ.
 
     ``trace_path`` routes pack/round/eval section timers through the
     profiling plane's single writer (``repro.profile.trace``), keyed by
-    the engine's structural key — the train-side calibration feed."""
+    the engine's structural key — the train-side calibration feed.
+    ``mesh_clients`` > 0 shards the round's client axis over a
+    ``clients`` mesh of that many devices (bit-for-bit the vmap round
+    on 1 device; see ``core.fedavg.ClientSharding``)."""
     if iid and plan.corruption.kind == "label_shuffle":
         raise ValueError(
             "label_shuffle corrupts labels inside the FederatedSampler, but "
@@ -110,8 +114,15 @@ def run_federated_asr(
     key = jax.random.PRNGKey(seed)
     params = bundle.init(key)
     n_params = bundle.param_count(params)
+    client_sharding = None
+    if mesh_clients:
+        from repro.core.fedavg import ClientSharding
+        from repro.launch.mesh import make_federated_mesh
+
+        client_sharding = ClientSharding(make_federated_mesh(mesh_clients))
     engine = build_round_engine(plan, bundle.loss_fn,
-                                base_key=jax.random.PRNGKey(seed + 1))
+                                base_key=jax.random.PRNGKey(seed + 1),
+                                client_sharding=client_sharding)
     state = engine.init_state(params)
     round_step = jax.jit(engine.step)
 
@@ -241,7 +252,8 @@ def run_federated_asr(
             sections=rec,
             counters={"rounds": rounds, "n_params": n_params,
                       "local_steps": sampler.steps},
-            features=plan_round_features(plan, params, sampler.steps),
+            features=plan_round_features(plan, params, sampler.steps,
+                                         client_shards=mesh_clients or 1),
             meta={"wall_s": train_time_s, "final_loss": history["final_loss"]},
         )
         log(f"[trace] {trace_path}")
@@ -285,6 +297,17 @@ def main():
     ap.add_argument("--client-lr", type=float, default=0.05)
     ap.add_argument("--client-sampling", default="uniform",
                     choices=available_strategies())
+    # population-scale rounds: virtual clients + client-axis sharding
+    pop = ap.add_argument_group("population scale")
+    pop.add_argument("--population", type=int, default=0,
+                     help="simulate this many VIRTUAL clients over the "
+                          "corpus (sampling sees N clients; host memory "
+                          "stays O(corpus + K); 0 = plain corpus)")
+    pop.add_argument("--mesh-clients", type=int, default=0,
+                     help="shard the round's client axis over this many "
+                          "devices (clients mesh axis; CPU smoke via "
+                          "XLA_FLAGS=--xla_force_host_platform_device_"
+                          "count=N; 0 = unsharded vmap)")
     # round engine: sync barrier vs buffered-async streaming server
     eng = ap.add_argument_group("round engine")
     eng.add_argument("--engine", default="fedavg",
@@ -353,6 +376,10 @@ def main():
     else:
         cfg = get_arch(args.arch).make_smoke_config()
         _, corpus = tiny_asr_setup()
+    if args.population:
+        from repro.data import VirtualPopulation
+
+        corpus = VirtualPopulation(corpus, args.population)
 
     plan = FederatedPlan(
         clients_per_round=args.clients, local_batch_size=args.batch,
@@ -385,7 +412,8 @@ def main():
     _, hist = run_federated_asr(cfg, corpus, plan, args.rounds, iid=args.iid,
                                 eval_every=args.eval_every,
                                 prefetch=not args.no_prefetch,
-                                trace_path=args.trace)
+                                trace_path=args.trace,
+                                mesh_clients=args.mesh_clients)
     print(json.dumps({k: v for k, v in hist.items() if k != "loss"}, indent=1))
     if args.out:
         with open(args.out, "w") as f:

@@ -36,7 +36,7 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
-FEATURE_KEYS = ("flops", "hbm_bytes", "wire_bytes", "server_steps", "overhead")
+FEATURE_KEYS = ("flops", "hbm_bytes", "wire_bytes", "ici_bytes", "server_steps", "overhead")
 
 # Documented tolerance for predicted-vs-measured round seconds on the
 # calibration plans (asserted by tests and the roofline --strict path).
@@ -55,6 +55,7 @@ DEFAULT_COEFFS = {
     "flops": 2e-10,
     "hbm_bytes": 5e-11,
     "wire_bytes": 1e-9,
+    "ici_bytes": 2e-11,  # ~ICI_BW magnitude; 0 on 1-device layouts
     "server_steps": 1e-3,
     "overhead": 5e-3,
 }
@@ -80,7 +81,7 @@ def expected_server_steps(plan) -> float:
     return max(1.0, k * plan.cohort.participation / buffer)
 
 
-def plan_round_features(plan, params, steps: int) -> dict:
+def plan_round_features(plan, params, steps: int, client_shards: int = 1) -> dict:
     """Closed-form static cost features for one round — no compilation.
 
     ``flops`` uses the 6*N*examples fwd+bwd rule of thumb and
@@ -88,35 +89,55 @@ def plan_round_features(plan, params, steps: int) -> dict:
     both are proportional, not exact — the per-device coefficients
     absorb the constants, the features only need to scale correctly
     across plans. ``wire_bytes`` IS exact (same accounting the CFMQ
-    axis uses)."""
+    axis uses).
+
+    With ``client_shards`` > 1 (the round's client axis sharded over a
+    ``clients`` mesh, see ``core.fedavg.ClientSharding``) the compute
+    features become PER-SHARD (the critical path is one shard's
+    K/shards clients) and ``ici_bytes`` prices the collectives the
+    sharded round adds: a ring all-reduce moves ``2*(S-1)/S`` of the
+    payload per device, and the round's reductions (code-sum psum /
+    delta gather + scale pmax) are params-tree-sized, so ``4*n_params``
+    stands in for the payload. On 1 device the column is exactly 0 —
+    unsharded calibration zeroes its NNLS coefficient and every
+    unsharded prediction is untouched."""
     from repro.core.cfmq import plan_wire_accounting
 
     n_params = _n_params(params)
+    shards = max(1, int(client_shards))
     k = plan.clients_per_round
     up, down = plan_wire_accounting(plan, params)
     expected_clients = k * plan.cohort.participation
     examples = k * steps * plan.local_batch_size
+    ici = 0.0 if shards == 1 else 2.0 * (shards - 1) / shards * 4.0 * n_params
     return {
-        "flops": 6.0 * n_params * examples,
-        "hbm_bytes": 4.0 * n_params * (3.0 * k * steps + 2.0 * k + 2.0),
+        "flops": 6.0 * n_params * examples / shards,
+        "hbm_bytes": 4.0 * n_params * (3.0 * k * steps + 2.0 * k + 2.0) / shards,
         "wire_bytes": float(down) + float(up) * expected_clients,
+        "ici_bytes": ici,
         "server_steps": expected_server_steps(plan),
         "overhead": 1.0,
     }
 
 
-def hlo_round_features(hlo_analysis: dict, plan, params, steps: int) -> dict:
+def hlo_round_features(
+    hlo_analysis: dict, plan, params, steps: int, client_shards: int = 1
+) -> dict:
     """Same feature shape, with FLOPs/HBM bytes taken from the HLO
     cost model's walk of the compiled round step (``hlo_cost.analyze``
-    output) instead of the closed form."""
-    feats = plan_round_features(plan, params, steps)
+    output) instead of the closed form. The compiled module is already
+    per-shard under a sharded lowering, so only the analytic fallback
+    divides by ``client_shards``."""
+    feats = plan_round_features(plan, params, steps, client_shards)
     feats["flops"] = float(hlo_analysis["flops"])
     feats["hbm_bytes"] = float(hlo_analysis["bytes"])
     return feats
 
 
 def feature_vector(features: dict) -> np.ndarray:
-    return np.array([float(features[k]) for k in FEATURE_KEYS], dtype=np.float64)
+    # Missing keys read as 0 so feature dicts persisted before a key was
+    # added (e.g. pre-sharding traces without ici_bytes) stay loadable.
+    return np.array([float(features.get(k, 0.0)) for k in FEATURE_KEYS], dtype=np.float64)
 
 
 # -------------------------------------------------------- calibration
@@ -161,7 +182,9 @@ def calibrate(samples: list[tuple[dict, float]]) -> dict:
 
 def predict_round_seconds(features: dict, coeffs: Optional[dict] = None) -> float:
     coeffs = coeffs or DEFAULT_COEFFS
-    return float(sum(float(coeffs.get(k, 0.0)) * float(features[k]) for k in FEATURE_KEYS))
+    return float(
+        sum(float(coeffs.get(k, 0.0)) * float(features.get(k, 0.0)) for k in FEATURE_KEYS)
+    )
 
 
 # ------------------------------------------------------- point pricing

@@ -63,8 +63,9 @@ def test_limited_rounds_traverse_all_data(corpus):
     max_n = max(sp["n"] for sp in corpus.speakers)
     for _ in range(max_n):                    # enough rounds for full pass
         s.next_round()
-    assert (s._cursors >= np.array([min(sp["n"], 2) for sp in corpus.speakers])).all()
-    assert s._cursors.sum() >= 12 * 2
+    cursors = np.array([s._cursors.get(i, 0) for i in range(corpus.num_speakers)])
+    assert (cursors >= np.array([min(sp["n"], 2) for sp in corpus.speakers])).all()
+    assert cursors.sum() >= 12 * 2
 
 
 def _check_sampler_shapes(limit, K, b):
