@@ -45,7 +45,9 @@ def ladder_plans() -> dict:
 
 def run_experiment(eid: str, seed: int = 0) -> dict:
     """Run (or fetch cached) experiment eid. Returns history summary."""
-    key = f"{eid}_r{ROUNDS}_L{LIMIT}_s{seed}"
+    # v2: summary rows renamed wer -> quality/quality_metric (FederatedTask
+    # redesign); the suffix invalidates pre-rename cached rows
+    key = f"{eid}_r{ROUNDS}_L{LIMIT}_s{seed}_v2"
     if key in _MEM:
         return _MEM[key]
     os.makedirs(CACHE, exist_ok=True)

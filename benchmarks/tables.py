@@ -10,8 +10,9 @@ from benchmarks.common import run_experiment
 
 
 def _row(r):
-    return (f"{r['id']:>4s}  loss={r['final_loss']:.3f}  wer={r['wer']:.3f}  "
-            f"wer_hard={r['wer_hard']:.3f}  cfmq={r['cfmq_tb']:.4f}TB")
+    m = r.get("quality_metric", "wer")
+    return (f"{r['id']:>4s}  loss={r['final_loss']:.3f}  {m}={r['quality']:.3f}  "
+            f"{m}_hard={r['quality_hard']:.3f}  cfmq={r['cfmq_tb']:.4f}TB")
 
 
 def table1_noniid_gap():
@@ -21,7 +22,7 @@ def table1_noniid_gap():
     print("\n== Table 1: quality degradation with non-IID training ==")
     print(_row(e0))
     print(_row(e1))
-    rel = (e1["wer_hard"] - e0["wer_hard"]) / max(e0["wer_hard"], 1e-9)
+    rel = (e1["quality_hard"] - e0["quality_hard"]) / max(e0["quality_hard"], 1e-9)
     ok = e1["final_loss"] >= e0["final_loss"] * 0.98
     print(f"paper: E1 worse than E0 (+42% rel WER). here: rel dWER_hard={rel:+.1%} "
           f"dloss={(e1['final_loss']-e0['final_loss']):+.3f} -> "

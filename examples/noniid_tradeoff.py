@@ -26,7 +26,7 @@ def main():
         fvn_opts=(False, True) if args.fvn else (False,))
     for r in frontier["points"]:
         print(f"limit={str(r['limit']):>4s} fvn={r['fvn']}: "
-              f"loss={r['final_loss']:.3f} wer={r['wer']:.3f} "
+              f"loss={r['final_loss']:.3f} wer={r['quality']:.3f} "
               f"cfmq={r['cfmq_tb']:.5f}TB{'  <- pareto' if r['pareto'] else ''}")
     print("\nsmaller limit -> closer to IID (better quality per round) but "
           "more rounds/bytes per example — the paper's §2.2 trade-off.")

@@ -25,8 +25,8 @@ def main():
     )
     state, hist = run_federated_asr(cfg, corpus, plan, rounds=30, seed=0,
                                     eval_every=10, eval_examples=32)
-    print(f"\nfinal loss {hist['final_loss']:.3f}  WER {hist['wer']:.3f} "
-          f"(hard {hist['wer_hard']:.3f})")
+    print(f"\nfinal loss {hist['final_loss']:.3f}  WER {hist['quality']:.3f} "
+          f"(hard {hist['quality_hard']:.3f})")
     print(f"CFMQ for this run: {hist['cfmq_tb']:.5f} TB "
           f"({hist['n_params']/1e6:.2f}M params, Eq. 2)")
 

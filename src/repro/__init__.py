@@ -1,0 +1,69 @@
+"""repro — the paper's quality/cost federated-learning framework.
+
+The stable public surface, re-exported from ``repro.core``:
+
+- ``FederatedPlan`` — the experiment configuration (cohort,
+  compression, aggregation, corruption, engine, schedules);
+- ``FederatedTask`` + the task registry (``get_task`` /
+  ``available_tasks`` / ``task_for_config`` / ``register_task``) —
+  model init, loss, eval and quality metric as one bundle;
+- ``build_round_engine(plan, task)`` — the engine factory over the
+  sync/async round engines (``RoundEngine``);
+- the CFMQ helpers (``cfmq``, ``plan_wire_accounting``,
+  ``measured_payload``, ``accumulate_wire_bytes``,
+  ``seconds_to_target``) — the cost axis;
+- the metrics schema (``summary_row``, ``SUMMARY_KEYS``,
+  ``ROUND_METRIC_KEYS``) and the per-client evaluation plane
+  (``ClientEvalPlane``, ``fairness_spread``).
+
+Anything not re-exported here or from ``repro.core`` is internal and
+may change without notice.
+"""
+
+from repro.core import (
+    ROUND_METRIC_KEYS,
+    SUMMARY_KEYS,
+    CFMQTerms,
+    ClientEvalPlane,
+    FederatedPlan,
+    FederatedTask,
+    RoundEngine,
+    accumulate_wire_bytes,
+    arch_task,
+    available_tasks,
+    build_round_engine,
+    cfmq,
+    fairness_spread,
+    get_task,
+    measured_payload,
+    plan_wire_accounting,
+    register_task,
+    seconds_to_target,
+    summary_row,
+    task_for_config,
+    validate_plan,
+)
+
+__all__ = [
+    "ROUND_METRIC_KEYS",
+    "SUMMARY_KEYS",
+    "CFMQTerms",
+    "ClientEvalPlane",
+    "FederatedPlan",
+    "FederatedTask",
+    "RoundEngine",
+    "accumulate_wire_bytes",
+    "arch_task",
+    "available_tasks",
+    "build_round_engine",
+    "cfmq",
+    "fairness_spread",
+    "get_task",
+    "measured_payload",
+    "plan_wire_accounting",
+    "register_task",
+    "seconds_to_target",
+    "summary_row",
+    "task_for_config",
+    "validate_plan",
+]

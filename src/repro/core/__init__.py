@@ -7,7 +7,10 @@
   engine: staleness-discounted size-B buffer over a simulated
   arrival stream
 - ``engine``  — the unified RoundEngine facade
-  (``build_round_engine(plan, loss_fn)``) over all three engines
+  (``build_round_engine(plan, task)``) over all three engines
+- ``task``    — FederatedTask (model + batch adapter + eval metric)
+  and the zoo-config -> task registry
+- ``clienteval`` — the per-client evaluation plane (fairness spread)
 - ``metrics`` — the single round-metrics / summary-row schema
 - ``cohort``  — partial participation / dropout / straggler masks
 - ``compression`` — uplink delta compression with exact wire bytes
@@ -31,23 +34,32 @@ from repro.core.plan import (
 )
 from repro.core.cohort import LatencyConfig, draw_latencies, make_latency_fn
 from repro.core.fedavg import (
-    ServerPlane,
     ServerState,
     init_server_state,
-    make_fedavg_round,
-    make_fedsgd_round,
     make_hyper_round_step,
     make_round_step,
-    make_server_plane,
     plan_hypers,
-    plan_server_plane,
 )
 from repro.core.async_engine import AsyncBuffer, init_async_buffer, make_async_round
+from repro.core.task import (
+    FederatedTask,
+    arch_task,
+    available_tasks,
+    get_task,
+    register_task,
+    task_for_config,
+)
 from repro.core.engine import (
     RoundEngine,
     build_round_engine,
     engine_structural_key,
+    structural_key_str,
     validate_plan,
+)
+from repro.core.clienteval import (
+    ClientEvalPlane,
+    empty_spread,
+    fairness_spread,
 )
 from repro.core.metrics import ROUND_METRIC_KEYS, SUMMARY_KEYS, summary_row
 from repro.core.aggregation import available_aggregators, get_aggregator, register_aggregator
@@ -68,6 +80,7 @@ from repro.core.cfmq import (
     paper_peak_memory,
     plan_wire_accounting,
     round_wire_bytes,
+    seconds_to_target,
     wire_payload,
 )
 from repro.core import fvn
@@ -76,33 +89,38 @@ __all__ = [
     "AggregatorConfig",
     "AsyncBuffer",
     "AsyncConfig",
+    "ClientEvalPlane",
     "CohortConfig",
     "FederatedPlan",
+    "FederatedTask",
     "FVNConfig",
     "LatencyConfig",
     "ROUND_METRIC_KEYS",
     "RoundEngine",
     "SUMMARY_KEYS",
+    "arch_task",
+    "available_tasks",
     "build_round_engine",
     "draw_latencies",
+    "empty_spread",
     "engine_structural_key",
+    "fairness_spread",
+    "get_task",
     "init_async_buffer",
     "make_async_round",
     "make_latency_fn",
+    "register_task",
+    "structural_key_str",
     "summary_row",
+    "task_for_config",
     "validate_plan",
     "make_server_optimizer",
     "server_lr_schedule",
-    "ServerPlane",
     "ServerState",
     "init_server_state",
-    "make_fedavg_round",
-    "make_fedsgd_round",
     "make_hyper_round_step",
     "make_round_step",
-    "make_server_plane",
     "plan_hypers",
-    "plan_server_plane",
     "available_aggregators",
     "get_aggregator",
     "register_aggregator",
@@ -122,6 +140,7 @@ __all__ = [
     "paper_peak_memory",
     "plan_wire_accounting",
     "round_wire_bytes",
+    "seconds_to_target",
     "wire_payload",
     "fvn",
 ]

@@ -76,7 +76,7 @@ from repro.core.fedavg import (
     _latency_key,
     _plane_keys,
     _wire_metrics,
-    plan_server_plane,
+    _plan_server_plane,
 )
 from repro.core.plan import FederatedPlan, make_server_optimizer
 from repro.optim import apply_updates, sgd
@@ -262,7 +262,7 @@ def make_async_round(
     client_opt = sgd(plan.client_lr)
     server_opt = make_server_optimizer(plan)
     sigma_fn = (lambda r: fvn_lib.fvn_sigma(plan.fvn, r)) if plan.fvn.enabled else None
-    plane = plan_server_plane(plan)
+    plane = _plan_server_plane(plan)
     latency_fn = make_latency_fn(plan.latency)
     buffer_size = plan.asynchrony.resolve_buffer(plan.clients_per_round)
     beta = plan.asynchrony.staleness_beta

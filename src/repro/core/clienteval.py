@@ -1,0 +1,136 @@
+"""Per-client evaluation plane: quality per CLIENT, not just the fleet.
+
+IBM's federated acoustic-modeling study (PAPERS.md, 2102.04429)
+reports that fleet-average WER hides a long tail: under speaker-split
+non-IID data some clients improve far less than the average suggests.
+This plane measures that tail. A ``ClientEvalPlane`` fixes a panel of
+clients at construction, packs each one's FIRST ``n`` arena examples
+once (``repro.data.per_client_eval_batch`` — the same utterances every
+round, so the curves move only because the model moved), and per round
+measures
+
+- ``client_loss``  : (C,) the task loss per tracked client, one jitted
+  ``vmap`` over the client axis — adds a single device call per round;
+- ``client_quality``: (C,) the task's own metric per client (WER for
+  ASR, perplexity for LM, error rate for keyword) via the task's
+  ``client_quality`` hook.
+
+``fairness_spread`` reduces the final round's panel to the shared
+summary-schema fields (p10/p90/gap for loss and quality,
+``clients_tracked``); the per-round curves ride in the emitters'
+``extras["client_eval"]`` so sweep frontier JSON carries both the
+spread columns and the full trajectories.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import per_client_eval_batch
+
+# The summary-schema fields this plane owns (see core.metrics).
+SPREAD_KEYS = (
+    "client_loss_p10",
+    "client_loss_p90",
+    "client_loss_gap",
+    "client_quality_p10",
+    "client_quality_p90",
+    "client_quality_gap",
+    "clients_tracked",
+)
+
+
+def default_panel(corpus, clients: int) -> np.ndarray:
+    """A deterministic panel: client ids evenly spaced over the
+    population, so every ladder point tracks the SAME clients and the
+    fairness spread is comparable across sweep rows."""
+    num = int(getattr(corpus, "num_clients", None) or corpus.num_speakers)
+    clients = min(clients, num)
+    return np.unique(np.linspace(0, num - 1, clients).astype(np.int64))
+
+
+def empty_spread() -> dict:
+    """The schema fields when per-client eval is off (zeros, tracked
+    count 0) — emitters always fill every summary column."""
+    out = {k: 0.0 for k in SPREAD_KEYS}
+    out["clients_tracked"] = 0
+    return out
+
+
+def fairness_spread(client_loss, client_quality) -> dict:
+    """p10/p90/gap over the panel, for loss and for the task metric.
+    The gap (p90 - p10) is the fairness number: how much worse the
+    hardest-served decile of clients has it than the best-served."""
+    loss = np.asarray(client_loss, np.float64)
+    qual = np.asarray(client_quality, np.float64)
+    lo_l, hi_l = np.percentile(loss, [10.0, 90.0])
+    lo_q, hi_q = np.percentile(qual, [10.0, 90.0])
+    return {
+        "client_loss_p10": float(lo_l),
+        "client_loss_p90": float(hi_l),
+        "client_loss_gap": float(hi_l - lo_l),
+        "client_quality_p10": float(lo_q),
+        "client_quality_p90": float(hi_q),
+        "client_quality_gap": float(hi_q - lo_q),
+        "clients_tracked": int(loss.shape[0]),
+    }
+
+
+class ClientEvalPlane:
+    """A fixed client panel measured once per round.
+
+    Usage::
+
+        plane = ClientEvalPlane(task, corpus, clients=6)
+        for r in range(rounds):
+            state, metrics = engine.step(state, batch)
+            plane.measure(state.params)   # appends one round's panel
+        row = summary_row(**plane.spread(), ...)
+        extras = {"client_eval": plane.curves()}
+    """
+
+    def __init__(self, task, corpus, clients: int = 6, n: int = 4, client_ids=None):
+        self.task = task
+        self.client_ids = (
+            np.asarray(client_ids, np.int64)
+            if client_ids is not None
+            else default_panel(corpus, clients)
+        )
+        host = per_client_eval_batch(corpus, self.client_ids, n=n)
+        self.batch = {k: jnp.asarray(v) for k, v in host.items()}
+        self._jloss = jax.jit(
+            jax.vmap(lambda p, b: task.loss_fn(p, b)[0], in_axes=(None, 0))
+        )
+        self.history: list = []
+
+    def measure(self, params) -> dict:
+        """One round's panel: per-client loss + per-client quality."""
+        rec = {
+            "client_loss": np.asarray(self._jloss(params, self.batch), np.float64),
+            "client_quality": np.asarray(
+                self.task.client_quality(params, self.batch), np.float64
+            ),
+        }
+        self.history.append(rec)
+        return rec
+
+    def spread(self) -> dict:
+        """The summary-schema fairness fields from the LAST measured
+        round (the end-of-run panel); ``empty_spread()`` if none ran."""
+        if not self.history:
+            return empty_spread()
+        last = self.history[-1]
+        return fairness_spread(last["client_loss"], last["client_quality"])
+
+    def curves(self) -> dict:
+        """The full per-round per-client trajectories, JSON-ready:
+        {client_ids: (C,), quality_metric, client_loss: (R, C),
+        client_quality: (R, C)}."""
+        return {
+            "client_ids": self.client_ids.tolist(),
+            "quality_metric": self.task.quality_metric,
+            "client_loss": [r["client_loss"].tolist() for r in self.history],
+            "client_quality": [r["client_quality"].tolist() for r in self.history],
+        }

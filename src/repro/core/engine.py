@@ -51,6 +51,7 @@ from repro.core.fedavg import (
     server_state_specs,
 )
 from repro.core.plan import FederatedPlan
+from repro.core.task import FederatedTask
 
 ENGINES = ("fedavg", "fedsgd", "async")
 
@@ -64,6 +65,7 @@ class RoundEngine(NamedTuple):
     hypers: Callable              # () -> plan's traced-scalar dict
     state_specs: Callable         # (param_specs, ...) -> ServerState specs
     step: Optional[Callable] = None   # (state, batch) -> (state, metrics)
+    task: Optional[FederatedTask] = None  # set when built from a FederatedTask
 
 
 def validate_plan(plan: FederatedPlan) -> None:
@@ -138,16 +140,24 @@ def structural_key_str(key) -> str:
 
 def build_round_engine(
     plan: FederatedPlan,
-    loss_fn: Callable,
+    task: Callable | FederatedTask,
     base_key=None,
     client_sharding: Optional[ClientSharding] = None,
 ) -> RoundEngine:
     """THE engine factory: validate the plan, then wire every consumer
-    surface of the selected engine. ``base_key`` is only needed for the
-    plan-constant ``step`` (train/bench); sweep-style callers that only
-    use ``hyper_step`` may omit it. ``client_sharding`` runs the
-    per-client stage under ``shard_map`` over its mesh's ``clients``
-    axis (bit-for-bit the vmap round on a 1-device mesh)."""
+    surface of the selected engine. ``task`` is a ``FederatedTask``
+    (the model + batch adapter + eval contract; its name joins the
+    structural key so tasks never share a jit cache entry) or — the
+    original form, still supported — a bare ``loss_fn`` callable.
+    ``base_key`` is only needed for the plan-constant ``step``
+    (train/bench); sweep-style callers that only use ``hyper_step``
+    may omit it. ``client_sharding`` runs the per-client stage under
+    ``shard_map`` over its mesh's ``clients`` axis (bit-for-bit the
+    vmap round on a 1-device mesh)."""
+    if isinstance(task, FederatedTask):
+        loss_fn = task.loss_fn
+    else:
+        task, loss_fn = None, task
     validate_plan(plan)
     if client_sharding is not None:
         _check_sharding_engine(plan.engine, client_sharding)
@@ -175,6 +185,8 @@ def build_round_engine(
     structural_key = engine_structural_key(plan)
     if client_sharding is not None:
         structural_key += (client_sharding.structural(),)
+    if task is not None:
+        structural_key += (("task", task.name),)
     return RoundEngine(
         name=plan.engine,
         plan=plan,
@@ -184,4 +196,5 @@ def build_round_engine(
         hypers=functools.partial(plan_hypers, plan),
         state_specs=functools.partial(server_state_specs, plan),
         step=step,
+        task=task,
     )

@@ -225,7 +225,7 @@ def _latency_key(base_key, round_idx):
     return jax.random.fold_in(jax.random.fold_in(base_key, round_idx), _LATENCY_TAG)
 
 
-def make_server_plane(
+def _make_server_plane(
     aggregator: str = "weighted_mean",
     compression: Optional[CompressionConfig] = None,
     cohort_knobs: Optional[tuple] = None,  # (participation, frac, keep) or None
@@ -254,12 +254,12 @@ def make_server_plane(
     )
 
 
-def plan_server_plane(plan: FederatedPlan) -> ServerPlane:
+def _plan_server_plane(plan: FederatedPlan) -> ServerPlane:
     """The plan's server plane with all knobs as Python constants."""
     knobs = None
     if not plan.cohort.full:
         knobs = (plan.cohort.participation, plan.cohort.straggler_frac, plan.cohort.straggler_keep)
-    return make_server_plane(
+    return _make_server_plane(
         plan.aggregation.name,
         plan.compression,
         knobs,
@@ -269,7 +269,7 @@ def plan_server_plane(plan: FederatedPlan) -> ServerPlane:
     )
 
 
-_PARITY_PLANE = make_server_plane()
+_PARITY_PLANE = _make_server_plane()
 
 
 def _apply_cohort(plane: ServerPlane, ckey, round_batch: PyTree):
@@ -595,7 +595,7 @@ def _fedavg_round_body(
     return ServerState(params, opt_state, state.round_idx + 1, ef, stale, state.abuf), metrics
 
 
-def make_fedavg_round(
+def _make_fedavg_round(
     loss_fn: Callable,
     plan: FederatedPlan,
     base_key,
@@ -609,7 +609,7 @@ def make_fedavg_round(
     client_opt = sgd(plan.client_lr)
     server_opt = make_server_optimizer(plan)
     sigma_fn = (lambda r: fvn_lib.fvn_sigma(plan.fvn, r)) if plan.fvn.enabled else None
-    plane = plan_server_plane(plan)
+    plane = _plan_server_plane(plan)
     latency_fn = make_latency_fn(plan.latency) if plan.latency.enabled else None
     if client_sharding is not None:
         client_sharding.check_clients(plan.clients_per_round)
@@ -623,7 +623,7 @@ def make_fedavg_round(
     return round_step
 
 
-def make_fedsgd_round(
+def _make_fedsgd_round(
     loss_fn: Callable,
     plan: FederatedPlan,
     base_key,
@@ -641,7 +641,7 @@ def make_fedsgd_round(
     _check_fedsgd_corruption(plan.corruption.kind)
     server_opt = make_server_optimizer(plan)
     sigma_fn = (lambda r: fvn_lib.fvn_sigma(plan.fvn, r)) if plan.fvn.enabled else None
-    plane = plan_server_plane(plan)
+    plane = _plan_server_plane(plan)
     latency_fn = make_latency_fn(plan.latency) if plan.latency.enabled else None
 
     def round_step(state: ServerState, round_batch: PyTree):
@@ -750,8 +750,8 @@ def make_round_step(loss_fn, plan: FederatedPlan, base_key, client_sharding=None
 
         return make_async_round(loss_fn, plan, base_key, client_sharding)
     if plan.engine == "fedsgd":
-        return make_fedsgd_round(loss_fn, plan, base_key)
-    return make_fedavg_round(loss_fn, plan, base_key, client_sharding)
+        return _make_fedsgd_round(loss_fn, plan, base_key)
+    return _make_fedavg_round(loss_fn, plan, base_key, client_sharding)
 
 
 # ----------------------------------------------------------------------
@@ -900,7 +900,7 @@ def make_hyper_round_step(
     def round_step(state: ServerState, round_batch: PyTree, hypers: dict, base_key):
         server_opt = make_server(lambda count: _hyper_server_lr(hypers, count))
         sigma_fn = lambda r: _hyper_fvn_sigma(hypers, r)
-        plane = make_server_plane(
+        plane = _make_server_plane(
             aggregator,
             compression,
             (hypers["participation"], hypers["straggler_frac"], hypers["straggler_keep"]),

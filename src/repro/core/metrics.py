@@ -39,13 +39,33 @@ ROUND_METRIC_KEYS = (
 )
 
 # Keys of one run summary (a sweep row / train history summary / bench
-# table entry). Grouped: quality, CFMQ cost, wire accounting, cohort
-# and adversary tallies, wall-clock axis, run bookkeeping.
+# table entry). Grouped: quality, per-client fairness spread, CFMQ
+# cost, wire accounting, cohort and adversary tallies, wall-clock
+# axis, run bookkeeping.
+#
+# "quality"/"quality_hard" are in the TASK's metric — WER for ASR,
+# perplexity for LM tasks, error rate for keyword spotting —
+# discriminated by "quality_metric" ("wer" | "ppl" | "err"; lower is
+# better for all three). They were named "wer"/"wer_hard" before the
+# FederatedTask redesign made the schema model-agnostic.
+#
+# The client_* sextet is the per-client evaluation plane's fairness
+# spread (repro.core.clienteval): p10/p90/gap over a fixed client
+# panel at the final round. Runs without per-client eval emit zeros
+# with clients_tracked = 0.
 SUMMARY_KEYS = (
     "rounds",
     "final_loss",
-    "wer",
-    "wer_hard",
+    "quality",
+    "quality_hard",
+    "quality_metric",
+    "client_loss_p10",
+    "client_loss_p90",
+    "client_loss_gap",
+    "client_quality_p10",
+    "client_quality_p90",
+    "client_quality_gap",
+    "clients_tracked",
     "cfmq_tb",
     "cfmq_bytes",
     "payload_bytes",

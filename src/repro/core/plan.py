@@ -142,7 +142,8 @@ def _plan_compat_init(self, *args, **kwargs):
             "FederatedPlan's loose aggregator knobs (aggregator, agg_trim_frac, "
             "dp_clip, dp_sigma) moved into AggregatorConfig — pass "
             "aggregation=AggregatorConfig(name=..., trim_frac=..., dp_clip=..., "
-            "dp_sigma=...) instead",
+            "dp_sigma=...) instead. The flat kwargs will be removed in "
+            "repro 0.2.",
             DeprecationWarning,
             stacklevel=2,
         )

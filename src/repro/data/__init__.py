@@ -4,6 +4,7 @@ from repro.data.pipeline import (
     RoundBatch,
     FederatedSampler,
     pack_round,
+    per_client_eval_batch,
 )
 from repro.data.prefetch import PrefetchIterator, round_batches
 from repro.data.strategies import available_strategies, get_strategy, register_strategy
@@ -17,6 +18,7 @@ __all__ = [
     "RoundBatch",
     "FederatedSampler",
     "pack_round",
+    "per_client_eval_batch",
     "PrefetchIterator",
     "round_batches",
     "available_strategies",

@@ -315,6 +315,51 @@ class FederatedSampler:
         return RoundBatch(feats, labels, label_len, frame_len, mask, n_k)
 
 
+def per_client_eval_batch(corpus, client_ids, n: int = 4) -> dict:
+    """A stacked per-client eval batch for the per-client evaluation
+    plane (``repro.core.clienteval``): each tracked client's first
+    ``n`` arena examples, in the engine-batch layout with a leading
+    client axis —
+
+        features : (C, n, T, F)    labels : (C, n, U)
+        frame_len, label_len, weight : (C, n)
+
+    The FIRST examples, not a draw: the panel must measure the same
+    utterances every round so per-client curves move only because the
+    model moved. Clients with fewer than ``n`` examples pad with
+    weight-0 slots (clipped gather, then zeroed). Virtual client ids
+    gather their base speaker's arena row."""
+    ids = np.asarray(client_ids, np.int64)
+    base_of = getattr(corpus, "base_of", None)
+    base = np.asarray(base_of(ids) if base_of is not None else ids, np.int64)
+    counts = np.asarray(
+        getattr(corpus, "base_counts", None)
+        if getattr(corpus, "base_counts", None) is not None
+        else corpus.counts,
+        np.int64,
+    )[base]
+    cols = np.arange(n, dtype=np.int64)[None, :]
+    pad = cols >= counts[:, None]
+    ex = np.minimum(cols, np.maximum(counts[:, None] - 1, 0))
+    rows = base[:, None]
+    feats = corpus.arena_features[rows, ex]
+    labels = corpus.arena_labels[rows, ex]
+    label_len = corpus.arena_label_len[rows, ex]
+    frame_len = corpus.arena_frame_len[rows, ex]
+    if pad.any():
+        feats[pad] = 0.0
+        labels[pad] = 0
+        label_len[pad] = 0
+        frame_len[pad] = 0
+    return {
+        "features": feats,
+        "labels": labels,
+        "frame_len": frame_len,
+        "label_len": label_len,
+        "weight": (~pad).astype(np.float32),
+    }
+
+
 def pack_round(examples: dict, K: int, steps: int, batch: int) -> RoundBatch:
     """Pack a flat example dict into a (K, steps, batch, ...) round —
     used for IID baselines where examples are drawn from the global pool."""

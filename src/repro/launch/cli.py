@@ -1,0 +1,197 @@
+"""Shared argparse builders for the federated-plan knobs.
+
+``launch.train`` and ``launch.sweeps`` expose the same plan surface —
+engine, aggregation, compression, cohort, corruption, population
+scale — and used to copy the flag definitions (and their help text)
+between the two parsers, which is exactly how CLIs drift. The builders
+here are the single source of those flags:
+
+- ``add_plan_args(parser)``: every FederatedPlan-shaping knob
+  (engine/async/latency, aggregation, compression, cohort dynamics,
+  adversarial corruption) as argument groups;
+- ``add_scale_args(parser)``: population scale (``--population``
+  virtual clients, ``--mesh-clients`` client-axis sharding);
+- ``add_client_eval_args(parser)``: the per-client evaluation plane's
+  panel size and per-client example budget;
+- ``plan_kwargs(args)``: the parsed flags as FederatedPlan keyword
+  arguments (the config-dataclass fields, never the deprecated flat
+  kwargs), for drivers to splice with their own schedule/budget knobs.
+
+``tests/test_cli_shared.py`` snapshots the flag inventory of both
+CLIs' ``--help`` against these builders.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core import (
+    AggregatorConfig,
+    AsyncConfig,
+    CohortConfig,
+    CompressionConfig,
+    CorruptionConfig,
+    LatencyConfig,
+    available_aggregators,
+    available_corruptions,
+)
+from repro.core.compression import KINDS
+
+# The flags each builder owns (test_cli_shared snapshots parsers
+# against these, so a flag added to a builder without updating the
+# inventory — or vice versa — fails fast).
+PLAN_FLAGS = (
+    "--engine",
+    "--buffer-size",
+    "--staleness-beta",
+    "--latency",
+    "--latency-base-s",
+    "--latency-spread",
+    "--aggregator",
+    "--trim-frac",
+    "--dp-clip",
+    "--dp-sigma",
+    "--compression",
+    "--topk-frac",
+    "--packed-wire",
+    "--error-feedback",
+    "--participation",
+    "--straggler-frac",
+    "--straggler-keep",
+    "--corrupt-kind",
+    "--corrupt-rate",
+    "--corrupt-scale",
+)
+SCALE_FLAGS = ("--population", "--mesh-clients")
+CLIENT_EVAL_FLAGS = ("--client-eval", "--client-eval-examples")
+
+
+def add_plan_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """The FederatedPlan-shaping knobs, as argument groups."""
+    # round engine: sync barrier vs buffered-async streaming server
+    eng = ap.add_argument_group("round engine")
+    eng.add_argument("--engine", default="fedavg",
+                     choices=["fedavg", "fedsgd", "async"],
+                     help="barrier FedAvg/FedSGD or the buffered-async "
+                          "(FedBuff-style) streaming server")
+    eng.add_argument("--buffer-size", type=int, default=0,
+                     help="async: server steps when this many updates are "
+                          "buffered (0 = clients-per-round)")
+    eng.add_argument("--staleness-beta", type=float, default=0.5,
+                     help="async: discount buffered deltas by 1/(1+s)^beta, "
+                          "s in server versions since download")
+    eng.add_argument("--latency", action="store_true",
+                     help="price sync rounds in simulated seconds too "
+                          "(async always draws arrival times)")
+    eng.add_argument("--latency-base-s", type=float, default=60.0,
+                     help="device-tier latency model: base upload seconds")
+    eng.add_argument("--latency-spread", type=float, default=0.25,
+                     help="device-tier latency model: lognormal jitter std")
+    # server aggregation rule + its knobs (AggregatorConfig)
+    agg = ap.add_argument_group("aggregation")
+    agg.add_argument("--aggregator", default="weighted_mean",
+                     choices=available_aggregators())
+    agg.add_argument("--trim-frac", type=float, default=0.1,
+                     help="trimmed_mean: fraction trimmed per side")
+    agg.add_argument("--dp-clip", type=float, default=1.0,
+                     help="clipped_mean: per-client L2 clip norm")
+    agg.add_argument("--dp-sigma", type=float, default=0.0,
+                     help="clipped_mean: DP Gaussian noise multiplier")
+    # server-plane: compression / cohort dynamics
+    comp = ap.add_argument_group("compression")
+    comp.add_argument("--compression", default="none", choices=list(KINDS),
+                      help="uplink delta compression (exact wire bytes in "
+                           "CFMQ)")
+    comp.add_argument("--topk-frac", type=float, default=0.05)
+    comp.add_argument("--packed-wire", action="store_true",
+                      help="materialize + round-trip the packed uplink "
+                           "payload (wire_pack kernels; bit-identical "
+                           "numerics)")
+    comp.add_argument("--error-feedback", action="store_true",
+                      help="EF21 per-client residual accumulation "
+                           "(compensates top-k/int4 error across rounds; "
+                           "same wire bytes)")
+    coh = ap.add_argument_group("cohort dynamics")
+    coh.add_argument("--participation", type=float, default=1.0,
+                     help="P(sampled client reports back)")
+    coh.add_argument("--straggler-frac", type=float, default=0.0)
+    coh.add_argument("--straggler-keep", type=float, default=0.5,
+                     help="fraction of local steps a straggler completes")
+    # adversarial client corruption (see repro.core.corruption)
+    cor = ap.add_argument_group("corruption")
+    cor.add_argument("--corrupt-kind", default="none",
+                     choices=["none", "label_shuffle"] + available_corruptions(),
+                     help="adversary: delta corruption (sign_flip/gaussian/"
+                          "zero/stale) or the data-plane label_shuffle")
+    cor.add_argument("--corrupt-rate", type=float, default=0.0,
+                     help="P(participating client is corrupted) per round")
+    cor.add_argument("--corrupt-scale", type=float, default=1.0,
+                     help="adversary magnitude (sign_flip/gaussian/stale)")
+    return ap
+
+
+def add_scale_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """Population-scale knobs: virtual clients + client-axis sharding."""
+    pop = ap.add_argument_group("population scale")
+    pop.add_argument("--population", type=int, default=0,
+                     help="simulate this many VIRTUAL clients over the "
+                          "corpus (sampling sees N clients; host memory "
+                          "stays O(corpus + K); 0 = plain corpus)")
+    pop.add_argument("--mesh-clients", type=int, default=0,
+                     help="shard the client axis over this many devices "
+                          "(clients mesh axis; CPU smoke via XLA_FLAGS="
+                          "--xla_force_host_platform_device_count=N; "
+                          "0 = unsharded)")
+    return ap
+
+
+def add_client_eval_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """The per-client evaluation plane (repro.core.clienteval)."""
+    ce = ap.add_argument_group("per-client evaluation")
+    ce.add_argument("--client-eval", type=int, default=0,
+                    help="track this many clients' per-round loss/quality "
+                         "and emit the fairness spread (0 = off)")
+    ce.add_argument("--client-eval-examples", type=int, default=4,
+                    help="eval examples per tracked client (the client's "
+                         "first n utterances, fixed across rounds)")
+    return ap
+
+
+def plan_overrides(args: argparse.Namespace) -> dict:
+    """The subset of ``plan_kwargs`` the user actually moved off its
+    default — the sweep driver's grid-wide override surface: each grid
+    point keeps its own plan except for the groups the command line
+    touched (e.g. ``--grid noniid_fvn --aggregator trimmed_mean`` runs
+    the whole frontier under a robust aggregator)."""
+    ref = plan_kwargs(add_plan_args(
+        argparse.ArgumentParser(add_help=False)).parse_args([]))
+    return {k: v for k, v in plan_kwargs(args).items() if v != ref[k]}
+
+
+def plan_kwargs(args: argparse.Namespace) -> dict:
+    """The ``add_plan_args`` flags as FederatedPlan keyword arguments
+    (always the config dataclasses — never the deprecated flat agg
+    kwargs). Drivers splice these with their own budget/schedule
+    fields: ``FederatedPlan(clients_per_round=..., **plan_kwargs(a))``."""
+    return dict(
+        engine=args.engine,
+        asynchrony=AsyncConfig(buffer_size=args.buffer_size,
+                               staleness_beta=args.staleness_beta),
+        latency=LatencyConfig(enabled=args.latency,
+                              base_s=args.latency_base_s,
+                              spread=args.latency_spread),
+        cohort=CohortConfig(participation=args.participation,
+                            straggler_frac=args.straggler_frac,
+                            straggler_keep=args.straggler_keep),
+        compression=CompressionConfig(kind=args.compression,
+                                      topk_frac=args.topk_frac,
+                                      packed=args.packed_wire,
+                                      error_feedback=args.error_feedback),
+        aggregation=AggregatorConfig(name=args.aggregator,
+                                     trim_frac=args.trim_frac,
+                                     dp_clip=args.dp_clip,
+                                     dp_sigma=args.dp_sigma),
+        corruption=CorruptionConfig(kind=args.corrupt_kind,
+                                    rate=args.corrupt_rate,
+                                    scale=args.corrupt_scale),
+    )

@@ -45,7 +45,16 @@ Grids:
   ``repro.core.async_engine``) vs the sync barrier at matched CFMQ
   across the non-IID ladder — moves the *wall-clock* cost axis
   (``sim_time_s`` under a shared device-tier latency model) while the
-  byte axes stay pair-identical.
+  byte axes stay pair-identical;
+- ``client_eval``: the non-IID ladder with the per-client evaluation
+  plane on (``repro.core.clienteval``) — per-round per-client
+  loss/quality curves in each row's extras and the p10/p90 fairness
+  spread in the schema columns, so the frontier shows WHO pays for a
+  cheap round, not just the fleet mean.
+
+The runner is task-generic: it drives any ``FederatedTask`` (the
+paper's RNN-T by default — quality = WER; LM/keyword tasks report
+perplexity/error through the same ``quality`` columns).
 
 Every row follows ``repro.core.metrics.SUMMARY_KEYS`` (the schema the
 train history and bench summaries share), plus per-grid extras like
@@ -88,13 +97,15 @@ from repro.core import (
     accumulate_wire_bytes,
     build_round_engine,
     cfmq,
+    get_task,
     measured_payload,
     plan_wire_accounting,
+    seconds_to_target,
     summary_row,
+    task_for_config,
 )
-from repro.core.cfmq import seconds_to_target
+from repro.core.clienteval import ClientEvalPlane, empty_spread
 from repro.data import FederatedSampler, PrefetchIterator, pack_round
-from repro.models import build_model
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,16 +135,27 @@ class SweepRunner:
     def __init__(self, cfg=None, corpus=None, seed: int = 0,
                  eval_examples: int = 64, prefetch: bool = True,
                  pad_steps: bool = False, trace_dir: Optional[str] = None,
-                 mesh_clients: int = 0):
-        if cfg is None or corpus is None:
-            from repro.launch.train import tiny_asr_setup
+                 mesh_clients: int = 0, task=None, client_eval: int = 0,
+                 client_eval_examples: int = 4):
+        if task is None:
+            task = (task_for_config(cfg) if cfg is not None
+                    else get_task("asr-rnnt", seed=seed))
+        if corpus is None:
+            from repro.core.task import default_corpus
 
-            cfg, corpus = tiny_asr_setup(seed)
-        self.cfg = cfg
+            corpus = default_corpus(seed)
+        self.task = task
+        self.cfg = task.bundle.config
         self.corpus = corpus
         self.eval_examples = eval_examples
         self.prefetch = prefetch
         self.pad_steps = pad_steps
+        # client_eval > 0: every point tracks this many clients'
+        # per-round loss/quality (repro.core.clienteval) — the
+        # fairness spread joins the row schema, the full curves ride
+        # in extras["client_eval"]
+        self.client_eval = client_eval
+        self.client_eval_examples = client_eval_examples
         # when set, run_point emits one trace JSON per point through
         # the profiling plane's single writer (repro.profile.trace):
         # host pack / round-step / eval section timers plus the
@@ -150,24 +172,28 @@ class SweepRunner:
 
     # -------------------------------------------------------- internals
 
-    def _bundle(self, specaug_scale: float):
+    def _task(self, specaug_scale: float):
+        """The runner's task, rebuilt around a specaug-scaled config
+        when a point asks for one (one task per scale, cached — the
+        task's cached loss_fn is what keys the jit caches)."""
         if specaug_scale not in self._bundles:
-            cfg = self.cfg
-            if specaug_scale != 1.0:
-                sa = cfg.specaug
-                cfg = dataclasses.replace(
-                    cfg, specaug=dataclasses.replace(
-                        sa,
-                        freq_masks=max(1, int(round(sa.freq_masks * specaug_scale))),
-                        time_masks=max(1, int(round(sa.time_masks * specaug_scale)))))
-            self._bundles[specaug_scale] = (cfg, build_model(cfg))
+            if specaug_scale == 1.0:
+                task = self.task
+            else:
+                from repro.launch.train import _scaled_task
+
+                task = _scaled_task(self.task, specaug_scale)
+            self._bundles[specaug_scale] = task
         return self._bundles[specaug_scale]
+
+    def _bundle(self, specaug_scale: float):
+        task = self._task(specaug_scale)
+        return task.bundle.config, task.bundle
 
     def _engine(self, plan: FederatedPlan, specaug_scale: float):
         """The point's RoundEngine (validated at construction). Cheap —
         no tracing happens until the jitted hyper_step is called."""
-        _, bundle = self._bundle(specaug_scale)
-        return build_round_engine(plan, bundle.loss_fn)
+        return build_round_engine(plan, self._task(specaug_scale))
 
     def _round_fn(self, engine, specaug_scale: float):
         # The engine's structural_key IS the compile identity: engine
@@ -238,7 +264,8 @@ class SweepRunner:
                 f"{point.id}: label_shuffle corrupts inside the "
                 "FederatedSampler, which IID points bypass — the adversary "
                 "would silently never fire")
-        cfg, bundle = self._bundle(point.specaug_scale)
+        task = self._task(point.specaug_scale)
+        bundle = task.bundle
         params = bundle.init(jax.random.PRNGKey(point.seed))
         n_params = bundle.param_count(params)
         engine = self._engine(plan, point.specaug_scale)
@@ -246,6 +273,10 @@ class SweepRunner:
         round_fn = self._round_fn(engine, point.specaug_scale)
         hypers = engine.hypers()
         base_key = jax.random.PRNGKey(point.seed + 1)
+        eval_plane = (ClientEvalPlane(task, self.corpus,
+                                      clients=self.client_eval,
+                                      n=self.client_eval_examples)
+                      if self.client_eval > 0 else None)
 
         native = self.native_steps(plan)
         S = steps if steps is not None else native
@@ -304,6 +335,8 @@ class SweepRunner:
                 sim_times.append(float(metrics["sim_time_s"]))
                 server_steps.append(float(metrics["server_steps"]))
                 staleness.append(float(metrics["staleness_mean"]))
+                if eval_plane is not None:
+                    eval_plane.measure(state.params)
         finally:
             if self.prefetch:
                 batches.close()
@@ -312,15 +345,14 @@ class SweepRunner:
             # counts live on the sampler, not in the round metrics
             corrupted = [float(c) for c in sampler.corrupted_counts]
 
-        from repro.launch.train import evaluate_wer
-
         with rec.section("eval"):
-            wers = evaluate_wer(cfg, bundle, state.params, self.corpus,
-                                self.eval_examples)
+            quality = task.evaluate(state.params, self.corpus,
+                                    self.eval_examples)
         row = self._finish_row(point, params, n_params, native, losses,
                                participants, corrupted, sim_times,
-                               server_steps, staleness, wers,
-                               time.time() - t0, log=log)
+                               server_steps, staleness, quality,
+                               time.time() - t0, eval_plane=eval_plane,
+                               log=log)
         if self.trace_dir:
             from repro.core.engine import structural_key_str
             from repro.profile.predict import plan_round_features
@@ -346,8 +378,8 @@ class SweepRunner:
 
     def _finish_row(self, point: SweepPoint, params, n_params: int,
                     native: int, losses, participants, corrupted, sim_times,
-                    server_steps, staleness, wers, wall_s: float,
-                    log=print) -> dict:
+                    server_steps, staleness, quality, wall_s: float,
+                    eval_plane=None, log=print) -> dict:
         """Per-point metric lists -> one frontier row. Shared by the
         sequential and mesh-stacked paths, so both emit identical
         schemas with identical accounting."""
@@ -373,10 +405,22 @@ class SweepRunner:
         stale_mean = (sum(s * w for s, w in zip(staleness, server_steps))
                       / steps_total if steps_total else 0.0)
         curve_stride = max(1, point.rounds // 50)
+        spread = (eval_plane.spread() if eval_plane is not None
+                  else empty_spread())
+        extras = {
+            "id": point.id,
+            "loss_curve": losses[::curve_stride],
+            "sim_time_curve": sim_times[::curve_stride],
+            **point.meta,
+        }
+        if eval_plane is not None:
+            extras["client_eval"] = eval_plane.curves()
         row = summary_row(
             rounds=point.rounds,
             final_loss=float(np.mean(losses[-5:])),
-            wer=wers["wer"], wer_hard=wers["wer_hard"],
+            quality=quality["quality"], quality_hard=quality["quality_hard"],
+            quality_metric=self.task.quality_metric,
+            **spread,
             cfmq_tb=terms.total_terabytes, cfmq_bytes=terms.total_bytes,
             payload_bytes=terms.payload_bytes,
             uplink_bytes_client=up_per_client,
@@ -391,16 +435,11 @@ class SweepRunner:
             server_steps_total=steps_total,
             staleness_mean=stale_mean,
             wall_s=wall_s,
-            extras={
-                "id": point.id,
-                "loss_curve": losses[::curve_stride],
-                "sim_time_curve": sim_times[::curve_stride],
-                **point.meta,
-            },
+            extras=extras,
         )
         log(f"  {point.id:>10s}: loss={row['final_loss']:.3f} "
-            f"wer={row['wer']:.3f} cfmq={row['cfmq_tb']:.5f}TB "
-            f"({row['wall_s']:.0f}s)")
+            f"{row['quality_metric']}={row['quality']:.3f} "
+            f"cfmq={row['cfmq_tb']:.5f}TB ({row['wall_s']:.0f}s)")
         return row
 
     def _run_chunk(self, chunk, steps: Optional[int], n_real: Optional[int] = None,
@@ -416,7 +455,8 @@ class SweepRunner:
 
         m = len(chunk)
         first = chunk[0]
-        cfg, bundle = self._bundle(first.specaug_scale)
+        task = self._task(first.specaug_scale)
+        bundle = task.bundle
         engines = [self._engine(p.plan, p.specaug_scale) for p in chunk]
         natives = [self.native_steps(p.plan) for p in chunk]
         S = steps if steps is not None else natives[0]
@@ -469,8 +509,6 @@ class SweepRunner:
             if self.prefetch:
                 batches.close()
 
-        from repro.launch.train import evaluate_wer
-
         wall = time.time() - t0
         rows = []
         for i, p in enumerate(chunk[:n_real]):
@@ -478,13 +516,12 @@ class SweepRunner:
             if p.plan.corruption.kind == "label_shuffle":
                 corrupted = [float(c) for c in samplers[i].corrupted_counts]
             params_i = jax.tree.map(lambda x: np.asarray(x[i]), state.params)
-            wers = evaluate_wer(cfg, bundle, params_i, self.corpus,
-                                self.eval_examples)
+            quality = task.evaluate(params_i, self.corpus, self.eval_examples)
             rows.append(self._finish_row(
                 p, params_i, n_params, natives[i], series["loss"][i],
                 series["participants"][i], corrupted, series["sim_time_s"][i],
-                series["server_steps"][i], series["staleness_mean"][i], wers,
-                wall, log=log))
+                series["server_steps"][i], series["staleness_mean"][i],
+                quality, wall, log=log))
         return rows
 
     def _run_sharded(self, points, steps: Optional[int], log=print) -> list[dict]:
@@ -520,9 +557,10 @@ class SweepRunner:
         if steps is not None:
             log(f"[sweeps] {len(points)} points padded to S={steps} local "
                 f"steps -> one compiled round fn per engine/optimizer")
-        if self.mesh_clients > 1 and not self.trace_dir:
-            # trace calibration needs per-point section timers, which
-            # the lockstep path cannot attribute — sequential wins there
+        if self.mesh_clients > 1 and not self.trace_dir and not self.client_eval:
+            # trace calibration needs per-point section timers, and the
+            # per-client plane measures after every round — neither fits
+            # the lockstep path, so both force sequential
             return self._run_sharded(points, steps, log=log)
         return [self.run_point(p, steps=steps, log=log) for p in points]
 
@@ -843,6 +881,31 @@ def ladder_points(rounds: int = 100, smoke: bool = False, seed: int = 0,
     return points
 
 
+def client_eval_points(rounds: int = 30, smoke: bool = False, seed: int = 0,
+                       limits=(1, 4, None)) -> list[SweepPoint]:
+    """The non-IID ladder with the per-client evaluation plane on —
+    the fairness axis of the frontier.
+
+    Same dial as ``noniid_fvn`` (the per-client data limit), but the
+    readout is WHO pays: each row carries the p10/p90 client-quality
+    spread and the full per-round per-client curves. ``run_grid``
+    turns the plane on automatically for this grid (panel of 6
+    clients, 4 eval examples each).
+    """
+    if smoke:
+        rounds = min(rounds, 6)
+    points = []
+    for limit in limits:
+        plan = FederatedPlan(
+            clients_per_round=8, local_batch_size=4, data_limit=limit,
+            local_steps=12, client_lr=0.3, server_lr=0.05,
+            server_warmup_rounds=4)
+        points.append(SweepPoint(
+            id=f"L{limit if limit is not None else 'inf'}",
+            plan=plan, rounds=rounds, seed=seed, meta={"limit": limit}))
+    return points
+
+
 GRIDS: Dict[str, Callable[..., list]] = {
     "noniid_fvn": noniid_fvn_points,
     "ladder": ladder_points,
@@ -851,6 +914,7 @@ GRIDS: Dict[str, Callable[..., list]] = {
     "sampling": sampling_points,
     "robustness": robustness_points,
     "async_vs_sync": async_vs_sync_points,
+    "client_eval": client_eval_points,
 }
 
 
@@ -927,9 +991,53 @@ def check_async_vs_sync(frontier: dict, log=print) -> None:
     log("[check] async_vs_sync grid invariants hold")
 
 
+def check_client_eval(frontier: dict, log=print) -> None:
+    """The per-client plane's contract, asserted (the CI smoke gate):
+    every row carries a live fairness spread (clients tracked, finite
+    p10 <= p90 columns) and full per-round per-client curves; and the
+    non-IID ladder orders both axes — more per-round data trains
+    further (final_loss falls monotonically with the limit), and the
+    trained non-IID model serves its clients UNEVENLY: the panel's
+    quality gap at the unlimited rung must exceed the limit-1 rung,
+    where barely-trained clients are uniformly bad (gap ~0). I.e.
+    heterogeneity is what the plane measures, not noise."""
+    from repro.core.clienteval import SPREAD_KEYS
+
+    rows = {r["limit"]: r for r in frontier["points"]}
+    for r in frontier["points"]:
+        assert r["clients_tracked"] > 0, f"{r['id']}: plane never measured"
+        for k in SPREAD_KEYS:
+            assert np.isfinite(r[k]), f"{r['id']}: {k} not finite"
+        assert r["client_loss_p10"] <= r["client_loss_p90"], r["id"]
+        assert r["client_quality_p10"] <= r["client_quality_p90"], r["id"]
+        curves = r["client_eval"]
+        C = r["clients_tracked"]
+        assert len(curves["client_ids"]) == C, r["id"]
+        assert len(curves["client_loss"]) == r["rounds"], r["id"]
+        assert all(len(c) == C for c in curves["client_loss"]), r["id"]
+        assert all(len(c) == C for c in curves["client_quality"]), r["id"]
+        log(f"[check] {r['id']}: gap(loss)={r['client_loss_gap']:.3f} "
+            f"gap({r['quality_metric']})={r['client_quality_gap']:.3f} "
+            f"({C} clients x {r['rounds']} rounds)")
+    near_iid, non_iid = rows[1], rows[None]
+    # endpoints only: adjacent rungs can swap inside smoke budgets,
+    # the ladder's ends never do
+    assert near_iid["final_loss"] > non_iid["final_loss"], (
+        "ladder ordering failed: the limit-1 rung sees 1/24th the data "
+        "per round and must end at a higher loss than the unlimited rung "
+        f"({near_iid['final_loss']:.3f} vs {non_iid['final_loss']:.3f})")
+    assert non_iid["client_quality_gap"] > near_iid["client_quality_gap"], (
+        "ladder ordering failed: the unlimited (most non-IID) rung should "
+        "spread the panel's quality wider than the barely-trained limit-1 "
+        f"rung ({non_iid['client_quality_gap']:.4f} vs "
+        f"{near_iid['client_quality_gap']:.4f})")
+    log("[check] client_eval grid invariants hold")
+
+
 GRID_CHECKS: Dict[str, Callable[..., None]] = {
     "robustness": check_robustness,
     "async_vs_sync": check_async_vs_sync,
+    "client_eval": check_client_eval,
 }
 
 
@@ -937,7 +1045,7 @@ GRID_CHECKS: Dict[str, Callable[..., None]] = {
 # Frontier assembly + CLI
 # ----------------------------------------------------------------------
 
-def mark_pareto(rows: list[dict], cost="cfmq_tb", quality="wer") -> list[dict]:
+def mark_pareto(rows: list[dict], cost="cfmq_tb", quality="quality") -> list[dict]:
     """Flag points on the quality/cost pareto front (min both)."""
     for r in rows:
         r["pareto"] = not any(
@@ -972,7 +1080,9 @@ def run_grid(grid: str, rounds: Optional[int] = None, smoke: bool = False,
              pad_steps: Optional[bool] = None, check: bool = False,
              prune_budget: Optional[float] = None, prune_axis: str = "cfmq_tb",
              trace_dir: Optional[str] = None, mesh_clients: int = 0,
-             population: int = 0, log=print, **grid_kwargs) -> dict:
+             population: int = 0, client_eval: int = 0,
+             plan_overrides: Optional[dict] = None,
+             log=print, **grid_kwargs) -> dict:
     """Run a named grid and write one quality/cost frontier JSON.
 
     ``pad_steps`` defaults to the smoke flag: with tiny round budgets
@@ -991,18 +1101,29 @@ def run_grid(grid: str, rounds: Optional[int] = None, smoke: bool = False,
     if rounds is not None:
         kwargs["rounds"] = rounds
     points = make_points(**kwargs)
+    if plan_overrides:
+        # grid-wide plan overrides (launch.cli.plan_overrides): every
+        # point keeps its own plan except the groups the CLI moved
+        log(f"[sweeps] plan overrides: {sorted(plan_overrides)}")
+        points = [dataclasses.replace(
+            p, plan=dataclasses.replace(p.plan, **plan_overrides))
+            for p in points]
+    if client_eval == 0 and grid == "client_eval":
+        # the grid exists to exercise the per-client plane — default
+        # the panel on rather than silently emitting empty spreads
+        client_eval = 6
     if runner is None:
-        cfg = corpus = None
+        corpus = None
         if population:
+            from repro.core.task import default_corpus
             from repro.data import VirtualPopulation
-            from repro.launch.train import tiny_asr_setup
 
-            cfg, corpus = tiny_asr_setup(seed)
-            corpus = VirtualPopulation(corpus, population)
-        runner = SweepRunner(cfg=cfg, corpus=corpus, seed=seed,
+            corpus = VirtualPopulation(default_corpus(seed), population)
+        runner = SweepRunner(corpus=corpus, seed=seed,
                              eval_examples=24 if smoke else 64,
                              pad_steps=smoke if pad_steps is None else pad_steps,
-                             trace_dir=trace_dir, mesh_clients=mesh_clients)
+                             trace_dir=trace_dir, mesh_clients=mesh_clients,
+                             client_eval=client_eval)
     prune = None
     if prune_budget is not None:
         from repro.profile.tuner import prune_report
@@ -1078,20 +1199,23 @@ def main():
                     help="emit one trace JSON per point (pack/round/eval "
                          "section timers + predictor features) into this "
                          "directory")
-    ap.add_argument("--mesh-clients", type=int, default=0,
-                    help="shard stackable grid points over a `clients` "
-                         "mesh of this many devices (CPU: export "
-                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
-    ap.add_argument("--population", type=int, default=0,
-                    help="wrap the corpus in a VirtualPopulation of this "
-                         "many clients (clones of the base speakers; "
-                         "sampling stays O(K log P))")
+    from repro.launch.cli import (
+        add_client_eval_args,
+        add_plan_args,
+        add_scale_args,
+        plan_overrides,
+    )
+
+    add_scale_args(ap)
+    add_plan_args(ap)
+    add_client_eval_args(ap)
     args = ap.parse_args()
     run_grid(args.grid, rounds=args.rounds, smoke=args.smoke, seed=args.seed,
              out=args.out, pad_steps=args.pad_steps, check=args.check,
              prune_budget=args.prune_budget, prune_axis=args.prune_axis,
              trace_dir=args.trace_dir, mesh_clients=args.mesh_clients,
-             population=args.population)
+             population=args.population, client_eval=args.client_eval,
+             plan_overrides=plan_overrides(args))
 
 
 if __name__ == "__main__":

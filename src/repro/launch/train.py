@@ -1,20 +1,28 @@
 """End-to-end federated training driver (the paper's experiment loop).
 
-Runs FedAvg rounds of the RNN-T (or any registered arch) on the
-synthetic speaker-split corpus, with the paper's knobs — data limit,
-FVN, server LR schedule — and CFMQ accounting per round. On this
-container it runs the reduced configs on CPU; the same driver pjits
-onto the production mesh when one is available.
+Runs federated rounds of any registered ``FederatedTask`` — the
+paper's RNN-T, the enc-dec/LM/MoE/RWKV zoo tasks, or the
+keyword-spotting tiny model — on the synthetic speaker-split corpus,
+with the paper's knobs (data limit, FVN, server LR schedule), CFMQ
+accounting per round, and the optional per-client evaluation plane.
+On this container it runs the reduced configs on CPU; the same driver
+pjits onto the production mesh when one is available.
 
 Usage:
-    PYTHONPATH=src python -m repro.launch.train --preset tiny --rounds 40
+    PYTHONPATH=src python -m repro.launch.train --task asr-rnnt --rounds 40
+    PYTHONPATH=src python -m repro.launch.train --task keyword \
+        --population 1000000 --clients 32
     PYTHONPATH=src python -m repro.launch.train --arch rnnt-librispeech ...
+
+The task carries the model AND its eval contract, so this module has
+no model-specific code: quality is WER, perplexity or error rate
+depending on the task (the ``quality_metric`` summary field says
+which).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import functools
 import json
 import time
 
@@ -22,59 +30,73 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.asr.wer import wer
 from repro.checkpoint import Checkpointer
-from repro.configs import get_arch
 from repro.core import (
-    AggregatorConfig,
-    AsyncConfig,
-    CohortConfig,
-    CompressionConfig,
-    CorruptionConfig,
     FederatedPlan,
+    FederatedTask,
     FVNConfig,
-    LatencyConfig,
-    available_aggregators,
-    available_corruptions,
+    available_tasks,
     build_round_engine,
     cfmq,
+    get_task,
     measured_payload,
     plan_wire_accounting,
     round_wire_bytes,
     summary_row,
+    task_for_config,
 )
-from repro.core.compression import KINDS
+from repro.core.clienteval import ClientEvalPlane, empty_spread
+from repro.core.task import arch_task, default_corpus
 from repro.data import (
     FederatedSampler,
     PrefetchIterator,
     available_strategies,
-    make_speaker_corpus,
     pack_round,
 )
-from repro.models import build_model
-from repro.models.rnnt import greedy_decode
+from repro.launch.cli import (
+    add_client_eval_args,
+    add_plan_args,
+    add_scale_args,
+    plan_kwargs,
+)
 
 
 def tiny_asr_setup(seed: int = 0):
-    """Container-scale RNN-T + corpus (the benchmarks' workhorse)."""
-    from repro.asr.specaugment import SpecAugmentConfig
-    from repro.models.rnnt import RNNTConfig
-
-    cfg = RNNTConfig(
-        name="rnnt-tiny", feat_dim=16, vocab=64,
-        enc_layers=2, enc_hidden=96, pred_layers=1, pred_hidden=96,
-        pred_embed=32, joint_dim=64, time_stride=1,
-        specaug=SpecAugmentConfig(freq_masks=1, freq_mask_width=3,
-                                  time_masks=1, time_mask_frac=0.05),
-        dtype="float32", param_dtype="float32",
-    )
-    corpus = make_speaker_corpus(num_speakers=48, vocab_size=64, feat_dim=16,
-                                 mean_utterances=24.0, seed=seed)
-    return cfg, corpus
+    """Container-scale RNN-T config + corpus (the benchmarks'
+    workhorse) — the 'asr-rnnt' task's pieces, kept as a tuple for the
+    callers that predate FederatedTask."""
+    return get_task("asr-rnnt").bundle.config, default_corpus(seed)
 
 
-def run_federated_asr(
-    cfg,
+def _check_iid_corruption(plan: FederatedPlan, iid: bool) -> None:
+    if iid and plan.corruption.kind == "label_shuffle":
+        raise ValueError(
+            "label_shuffle corrupts labels inside the FederatedSampler, but "
+            "--iid packs rounds from the global pool and bypasses the "
+            "sampler — the adversary would silently never fire. Use a "
+            "non-IID run (or a delta corruption kind, which is engine-side "
+            "and composes with --iid)")
+
+
+def _scaled_task(task: FederatedTask, specaug_scale: float) -> FederatedTask:
+    """Rebuild the task around a specaug-scaled config (E10-style
+    regularization sweeps); only defined for models that carry a
+    ``specaug`` policy."""
+    cfg = task.bundle.config
+    if getattr(cfg, "specaug", None) is None:
+        raise ValueError(
+            f"specaug_scale={specaug_scale} but task {task.name!r} "
+            f"({type(cfg).__name__}) has no specaug policy")
+    sa = cfg.specaug
+    cfg = dataclasses.replace(
+        cfg, specaug=dataclasses.replace(
+            sa, freq_masks=max(1, int(round(sa.freq_masks * specaug_scale))),
+            time_masks=max(1, int(round(sa.time_masks * specaug_scale)))))
+    return task_for_config(cfg, name=task.name)
+
+
+def run_federated(
+    task: FederatedTask,
     corpus,
     plan: FederatedPlan,
     rounds: int,
@@ -88,29 +110,25 @@ def run_federated_asr(
     prefetch: bool = True,
     trace_path: str | None = None,
     mesh_clients: int = 0,
+    client_eval: int = 0,
+    client_eval_examples: int = 4,
 ):
-    """Returns history dict with per-round losses + final WERs + CFMQ.
+    """Returns (state, history): per-round losses + the task's final
+    quality + CFMQ, in the shared ``SUMMARY_KEYS`` schema.
 
     ``trace_path`` routes pack/round/eval section timers through the
     profiling plane's single writer (``repro.profile.trace``), keyed by
     the engine's structural key — the train-side calibration feed.
     ``mesh_clients`` > 0 shards the round's client axis over a
-    ``clients`` mesh of that many devices (bit-for-bit the vmap round
-    on 1 device; see ``core.fedavg.ClientSharding``)."""
-    if iid and plan.corruption.kind == "label_shuffle":
-        raise ValueError(
-            "label_shuffle corrupts labels inside the FederatedSampler, but "
-            "--iid packs rounds from the global pool and bypasses the "
-            "sampler — the adversary would silently never fire. Use a "
-            "non-IID run (or a delta corruption kind, which is engine-side "
-            "and composes with --iid)")
+    ``clients`` mesh (bit-for-bit the vmap round on 1 device).
+    ``client_eval`` > 0 tracks that many clients' per-round
+    loss/quality (``repro.core.clienteval``): the fairness spread
+    joins the summary fields and the full curves ride in
+    ``extras["client_eval"]``."""
+    _check_iid_corruption(plan, iid)
     if specaug_scale != 1.0:
-        sa = cfg.specaug
-        cfg = dataclasses.replace(
-            cfg, specaug=dataclasses.replace(
-                sa, freq_masks=max(1, int(round(sa.freq_masks * specaug_scale))),
-                time_masks=max(1, int(round(sa.time_masks * specaug_scale)))))
-    bundle = build_model(cfg)
+        task = _scaled_task(task, specaug_scale)
+    bundle = task.bundle
     key = jax.random.PRNGKey(seed)
     params = bundle.init(key)
     n_params = bundle.param_count(params)
@@ -120,7 +138,7 @@ def run_federated_asr(
         from repro.launch.mesh import make_federated_mesh
 
         client_sharding = ClientSharding(make_federated_mesh(mesh_clients))
-    engine = build_round_engine(plan, bundle.loss_fn,
+    engine = build_round_engine(plan, task,
                                 base_key=jax.random.PRNGKey(seed + 1),
                                 client_sharding=client_sharding)
     state = engine.init_state(params)
@@ -136,6 +154,9 @@ def run_federated_asr(
                             else 0.0))
     rng = np.random.default_rng(seed)
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+    eval_plane = (ClientEvalPlane(task, corpus, clients=client_eval,
+                                  n=client_eval_examples)
+                  if client_eval > 0 else None)
 
     from repro.profile.trace import TraceRecorder
 
@@ -187,10 +208,13 @@ def run_federated_asr(
             staleness.append(float(metrics["staleness_mean"]))
             wire_total += round_wire_bytes(up_per_client, down_per_round,
                                            participants[-1])
+            if eval_plane is not None:
+                eval_plane.measure(state.params)
             if eval_every and (r + 1) % eval_every == 0:
-                w = evaluate_wer(cfg, bundle, state.params, corpus, eval_examples)
+                q = task.evaluate(state.params, corpus, eval_examples)
                 log(f"round {r+1}: loss={losses[-1]:.4f} "
-                    f"wer={w['wer']:.3f} wer_hard={w['wer_hard']:.3f}")
+                    f"{task.quality_metric}={q['quality']:.3f} "
+                    f"{task.quality_metric}_hard={q['quality_hard']:.3f}")
             if ckpt and (r + 1) % max(1, rounds // 3) == 0:
                 ckpt.save(r + 1, state.params,
                           extra={"wire_bytes": wire_total,
@@ -201,7 +225,7 @@ def run_federated_asr(
 
     train_time_s = time.time() - t0
     with rec.section("eval"):
-        wers = evaluate_wer(cfg, bundle, state.params, corpus, eval_examples)
+        quality = task.evaluate(state.params, corpus, eval_examples)
     mu = plan.local_epochs * (plan.data_limit or sampler.steps * plan.local_batch_size)
     payload = measured_payload(plan, params, float(np.mean(participants)))
     terms = cfmq(
@@ -213,13 +237,23 @@ def run_federated_asr(
         # data-plane adversary: realized counts live on the sampler
         corrupted = [float(c) for c in sampler.corrupted_counts]
     steps_total = sum(server_steps)
+    extras = {
+        "loss": losses,
+        "wire_bytes": wire_total,
+        "train_time_s": train_time_s,
+    }
+    if eval_plane is not None:
+        extras["client_eval"] = eval_plane.curves()
+    spread = eval_plane.spread() if eval_plane is not None else empty_spread()
     # same round-metrics schema as the sweep rows and bench summaries
     # (repro.core.metrics.SUMMARY_KEYS); the loss curve and the legacy
     # "wire_bytes"/"train_time_s" aliases ride along as extras
     history = summary_row(
         rounds=rounds,
         final_loss=float(np.mean(losses[-5:])),
-        wer=wers["wer"], wer_hard=wers["wer_hard"],
+        quality=quality["quality"], quality_hard=quality["quality_hard"],
+        quality_metric=task.quality_metric,
+        **spread,
         cfmq_tb=terms.total_terabytes, cfmq_bytes=terms.total_bytes,
         payload_bytes=terms.payload_bytes,
         uplink_bytes_client=up_per_client,
@@ -235,11 +269,7 @@ def run_federated_asr(
         staleness_mean=(sum(s * w for s, w in zip(staleness, server_steps))
                         / steps_total if steps_total else 0.0),
         wall_s=train_time_s,
-        extras={
-            "loss": losses,
-            "wire_bytes": wire_total,
-            "train_time_s": train_time_s,
-        },
+        extras=extras,
     )
     if trace_path:
         from repro.core.engine import structural_key_str
@@ -260,30 +290,19 @@ def run_federated_asr(
     return state, history
 
 
-@functools.lru_cache(maxsize=None)
-def _jitted_decode(cfg):
-    """One jitted greedy_decode per config; jit's own cache then keys
-    on the eval-batch shapes, so repeated sweep-point evals at the
-    same (cfg, shape) reuse one compilation instead of re-tracing the
-    whole decode scan every call."""
-    return jax.jit(functools.partial(greedy_decode, cfg))
-
-
-def evaluate_wer(cfg, bundle, params, corpus, n: int = 64):
-    decode = _jitted_decode(cfg)
-    out = {}
-    for name, hard in (("wer", False), ("wer_hard", True)):
-        ev = corpus.eval_split(n, hard=hard)
-        hyp = decode(params, jnp.asarray(ev["features"]),
-                     jnp.asarray(ev["frame_len"]))
-        refs = [ev["labels"][i, : ev["label_len"][i]].tolist() for i in range(n)]
-        hyps = [h[h != 0].tolist() for h in np.asarray(hyp)]
-        out[name] = wer(refs, hyps)
-    return out
+def run_federated_asr(cfg, corpus, plan: FederatedPlan, rounds: int, **kwargs):
+    """Config-first compatibility wrapper: the pre-FederatedTask entry
+    point. Builds the task from the model config and delegates to
+    ``run_federated`` (new code should construct the task directly)."""
+    _check_iid_corruption(plan, kwargs.get("iid", False))
+    return run_federated(task_for_config(cfg), corpus, plan, rounds, **kwargs)
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default=None, choices=available_tasks(),
+                    help="a registered FederatedTask (model + eval metric); "
+                         "overrides --preset/--arch")
     ap.add_argument("--preset", default="tiny", choices=["tiny", "arch"])
     ap.add_argument("--arch", default="rnnt-librispeech")
     ap.add_argument("--rounds", type=int, default=40)
@@ -297,70 +316,9 @@ def main():
     ap.add_argument("--client-lr", type=float, default=0.05)
     ap.add_argument("--client-sampling", default="uniform",
                     choices=available_strategies())
-    # population-scale rounds: virtual clients + client-axis sharding
-    pop = ap.add_argument_group("population scale")
-    pop.add_argument("--population", type=int, default=0,
-                     help="simulate this many VIRTUAL clients over the "
-                          "corpus (sampling sees N clients; host memory "
-                          "stays O(corpus + K); 0 = plain corpus)")
-    pop.add_argument("--mesh-clients", type=int, default=0,
-                     help="shard the round's client axis over this many "
-                          "devices (clients mesh axis; CPU smoke via "
-                          "XLA_FLAGS=--xla_force_host_platform_device_"
-                          "count=N; 0 = unsharded vmap)")
-    # round engine: sync barrier vs buffered-async streaming server
-    eng = ap.add_argument_group("round engine")
-    eng.add_argument("--engine", default="fedavg",
-                     choices=["fedavg", "fedsgd", "async"],
-                     help="barrier FedAvg/FedSGD or the buffered-async "
-                          "(FedBuff-style) streaming server")
-    eng.add_argument("--buffer-size", type=int, default=0,
-                     help="async: server steps when this many updates are "
-                          "buffered (0 = clients-per-round)")
-    eng.add_argument("--staleness-beta", type=float, default=0.5,
-                     help="async: discount buffered deltas by 1/(1+s)^beta, "
-                          "s in server versions since download")
-    eng.add_argument("--latency", action="store_true",
-                     help="price sync rounds in simulated seconds too "
-                          "(async always draws arrival times)")
-    eng.add_argument("--latency-base-s", type=float, default=60.0,
-                     help="device-tier latency model: base upload seconds")
-    eng.add_argument("--latency-spread", type=float, default=0.25,
-                     help="device-tier latency model: lognormal jitter std")
-    # server aggregation rule + its knobs (AggregatorConfig)
-    agg = ap.add_argument_group("aggregation")
-    agg.add_argument("--aggregator", default="weighted_mean",
-                     choices=available_aggregators())
-    agg.add_argument("--trim-frac", type=float, default=0.1,
-                     help="trimmed_mean: fraction trimmed per side")
-    agg.add_argument("--dp-clip", type=float, default=1.0,
-                     help="clipped_mean: per-client L2 clip norm")
-    agg.add_argument("--dp-sigma", type=float, default=0.0,
-                     help="clipped_mean: DP Gaussian noise multiplier")
-    # server-plane: compression / cohort dynamics
-    ap.add_argument("--compression", default="none", choices=list(KINDS),
-                    help="uplink delta compression (exact wire bytes in CFMQ)")
-    ap.add_argument("--topk-frac", type=float, default=0.05)
-    ap.add_argument("--packed-wire", action="store_true",
-                    help="materialize + round-trip the packed uplink payload "
-                         "(wire_pack kernels; bit-identical numerics)")
-    ap.add_argument("--error-feedback", action="store_true",
-                    help="EF21 per-client residual accumulation (compensates "
-                         "top-k/int4 error across rounds; same wire bytes)")
-    ap.add_argument("--participation", type=float, default=1.0,
-                    help="P(sampled client reports back)")
-    ap.add_argument("--straggler-frac", type=float, default=0.0)
-    ap.add_argument("--straggler-keep", type=float, default=0.5,
-                    help="fraction of local steps a straggler completes")
-    # adversarial client corruption (see repro.core.corruption)
-    ap.add_argument("--corrupt-kind", default="none",
-                    choices=["none", "label_shuffle"] + available_corruptions(),
-                    help="adversary: delta corruption (sign_flip/gaussian/"
-                         "zero/stale) or the data-plane label_shuffle")
-    ap.add_argument("--corrupt-rate", type=float, default=0.0,
-                    help="P(participating client is corrupted) per round")
-    ap.add_argument("--corrupt-scale", type=float, default=1.0,
-                    help="adversary magnitude (sign_flip/gaussian/stale)")
+    add_scale_args(ap)
+    add_plan_args(ap)
+    add_client_eval_args(ap)
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the async host->device prefetch")
     ap.add_argument("--eval-every", type=int, default=10)
@@ -371,11 +329,13 @@ def main():
                          "structural key + device fingerprint)")
     args = ap.parse_args()
 
-    if args.preset == "tiny":
-        cfg, corpus = tiny_asr_setup()
+    if args.task is not None:
+        task = get_task(args.task)
+    elif args.preset == "tiny":
+        task = get_task("asr-rnnt")
     else:
-        cfg = get_arch(args.arch).make_smoke_config()
-        _, corpus = tiny_asr_setup()
+        task = arch_task(args.arch)
+    corpus = default_corpus(0)
     if args.population:
         from repro.data import VirtualPopulation
 
@@ -386,35 +346,19 @@ def main():
         data_limit=args.data_limit, client_lr=args.client_lr,
         client_sampling=args.client_sampling,
         server_lr=args.server_lr, server_warmup_rounds=max(2, args.rounds // 8),
-        engine=args.engine,
-        asynchrony=AsyncConfig(buffer_size=args.buffer_size,
-                               staleness_beta=args.staleness_beta),
-        latency=LatencyConfig(enabled=args.latency,
-                              base_s=args.latency_base_s,
-                              spread=args.latency_spread),
         fvn=FVNConfig(enabled=args.fvn_std > 0, std=args.fvn_std,
                       ramp_rounds=args.fvn_ramp),
-        cohort=CohortConfig(participation=args.participation,
-                            straggler_frac=args.straggler_frac,
-                            straggler_keep=args.straggler_keep),
-        compression=CompressionConfig(kind=args.compression,
-                                      topk_frac=args.topk_frac,
-                                      packed=args.packed_wire,
-                                      error_feedback=args.error_feedback),
-        aggregation=AggregatorConfig(name=args.aggregator,
-                                     trim_frac=args.trim_frac,
-                                     dp_clip=args.dp_clip,
-                                     dp_sigma=args.dp_sigma),
-        corruption=CorruptionConfig(kind=args.corrupt_kind,
-                                    rate=args.corrupt_rate,
-                                    scale=args.corrupt_scale),
+        **plan_kwargs(args),
     )
-    _, hist = run_federated_asr(cfg, corpus, plan, args.rounds, iid=args.iid,
-                                eval_every=args.eval_every,
-                                prefetch=not args.no_prefetch,
-                                trace_path=args.trace,
-                                mesh_clients=args.mesh_clients)
-    print(json.dumps({k: v for k, v in hist.items() if k != "loss"}, indent=1))
+    _, hist = run_federated(task, corpus, plan, args.rounds, iid=args.iid,
+                            eval_every=args.eval_every,
+                            prefetch=not args.no_prefetch,
+                            trace_path=args.trace,
+                            mesh_clients=args.mesh_clients,
+                            client_eval=args.client_eval,
+                            client_eval_examples=args.client_eval_examples)
+    print(json.dumps({k: v for k, v in hist.items()
+                      if k not in ("loss", "client_eval")}, indent=1))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(hist, f)

@@ -15,7 +15,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models import encdec, hybrid, rnnt, transformer, vlm
+from repro.models import encdec, hybrid, keyword, rnnt, transformer, vlm
 from repro.models.layers import dense_init, embed_init, lm_loss, stacked
 from repro.models.rwkv import (
     RWKVConfig,
@@ -47,7 +47,7 @@ class RWKVModelConfig:
 @dataclasses.dataclass
 class ModelBundle:
     name: str
-    kind: str                    # dense | moe | hybrid | ssm | audio | vlm | rnnt
+    kind: str                    # dense | moe | hybrid | ssm | audio | vlm | rnnt | keyword
     config: Any
     init: Callable               # (key) -> params
     loss_fn: Callable            # (params, batch, rng) -> (loss, aux)
@@ -177,5 +177,11 @@ def build_model(cfg, kind: Optional[str] = None) -> ModelBundle:
             name=cfg.name, kind="rnnt", config=cfg,
             init=partial(rnnt.init_params, cfg),
             loss_fn=partial(rnnt.loss_fn, cfg),
+        )
+    if isinstance(cfg, keyword.KeywordConfig):
+        return ModelBundle(
+            name=cfg.name, kind="keyword", config=cfg,
+            init=partial(keyword.init_params, cfg),
+            loss_fn=partial(keyword.loss_fn, cfg),
         )
     raise TypeError(f"unknown config type {type(cfg)}")

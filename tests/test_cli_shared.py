@@ -1,0 +1,131 @@
+"""The shared CLI surface and the AggregatorConfig migration gate.
+
+``repro.launch.cli`` is the single source of the plan-shaping flags;
+both drivers (``launch.train``, ``launch.sweeps``) must expose exactly
+the builder inventories (snapshot-style, so a flag added to one parser
+but not the builder fails here). The deprecation gate asserts no
+in-repo code path still constructs plans through the flat aggregator
+kwargs the 0.2 removal will break.
+"""
+import argparse
+import warnings
+
+import pytest
+
+from repro.launch.cli import (
+    CLIENT_EVAL_FLAGS,
+    PLAN_FLAGS,
+    SCALE_FLAGS,
+    add_client_eval_args,
+    add_plan_args,
+    add_scale_args,
+    plan_kwargs,
+    plan_overrides,
+)
+
+
+def _flags(parser: argparse.ArgumentParser) -> set:
+    return {opt for a in parser._actions for opt in a.option_strings
+            if opt.startswith("--")}
+
+
+# ------------------------------------------------- builder inventories
+
+def test_builders_match_their_inventories():
+    for build, inventory in ((add_plan_args, PLAN_FLAGS),
+                             (add_scale_args, SCALE_FLAGS),
+                             (add_client_eval_args, CLIENT_EVAL_FLAGS)):
+        ap = build(argparse.ArgumentParser(add_help=False))
+        assert _flags(ap) == set(inventory), build.__name__
+
+
+@pytest.mark.parametrize("main_module", ["repro.launch.train",
+                                         "repro.launch.sweeps"])
+def test_both_drivers_expose_the_shared_surface(main_module, monkeypatch, capsys):
+    """--help snapshot: every shared flag appears in each driver's
+    parser (the drivers add their own schedule/budget flags on top)."""
+    import importlib
+
+    mod = importlib.import_module(main_module)
+    monkeypatch.setattr("sys.argv", [main_module, "--help"])
+    with pytest.raises(SystemExit) as e:
+        mod.main()
+    assert e.value.code == 0
+    helptext = capsys.readouterr().out
+    for flag in PLAN_FLAGS + SCALE_FLAGS + CLIENT_EVAL_FLAGS:
+        assert flag in helptext, (main_module, flag)
+
+
+def test_plan_kwargs_roundtrip():
+    """Defaults parse to a default plan; every knob lands in its
+    config dataclass (never the deprecated flat kwargs)."""
+    from repro.core import FederatedPlan
+
+    ap = argparse.ArgumentParser()
+    add_plan_args(ap)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        plan = FederatedPlan(**plan_kwargs(ap.parse_args([])))
+        assert plan == FederatedPlan()
+        args = ap.parse_args([
+            "--engine", "async", "--buffer-size", "3",
+            "--staleness-beta", "0.9", "--aggregator", "trimmed_mean",
+            "--trim-frac", "0.2", "--dp-clip", "0.5", "--dp-sigma", "0.1",
+            "--compression", "topk", "--topk-frac", "0.1",
+            "--error-feedback", "--participation", "0.8",
+            "--straggler-frac", "0.1", "--corrupt-kind", "sign_flip",
+            "--corrupt-rate", "0.25", "--corrupt-scale", "2.0",
+            "--latency", "--latency-base-s", "30.0",
+        ])
+        plan = FederatedPlan(**plan_kwargs(args))
+    assert plan.engine == "async"
+    assert plan.asynchrony.buffer_size == 3
+    assert plan.asynchrony.staleness_beta == 0.9
+    assert plan.aggregation.name == "trimmed_mean"
+    assert plan.aggregation.trim_frac == 0.2
+    assert plan.aggregation.dp_clip == 0.5
+    assert plan.aggregation.dp_sigma == 0.1
+    assert plan.compression.kind == "topk"
+    assert plan.compression.error_feedback
+    assert plan.cohort.participation == 0.8
+    assert plan.corruption.kind == "sign_flip"
+    assert plan.corruption.rate == 0.25
+    assert plan.latency.enabled and plan.latency.base_s == 30.0
+
+
+def test_plan_overrides_is_sparse():
+    """Only the groups the command line touched override grid plans."""
+    ap = add_plan_args(argparse.ArgumentParser(add_help=False))
+    assert plan_overrides(ap.parse_args([])) == {}
+    over = plan_overrides(ap.parse_args(["--aggregator", "trimmed_mean",
+                                         "--participation", "0.9"]))
+    assert set(over) == {"aggregation", "cohort"}
+    assert over["aggregation"].name == "trimmed_mean"
+    assert over["cohort"].participation == 0.9
+
+
+# ------------------------------------- AggregatorConfig migration gate
+
+def test_flat_agg_kwargs_warn_with_removal_version():
+    from repro.core import FederatedPlan
+
+    with pytest.warns(DeprecationWarning, match=r"removed in repro 0\.2"):
+        plan = FederatedPlan(aggregator="coordinate_median", dp_sigma=0.5)
+    assert plan.aggregation.name == "coordinate_median"
+    assert plan.aggregation.dp_sigma == 0.5
+
+
+def test_no_in_repo_path_emits_the_deprecation():
+    """Every plan-constructing surface in the repo — the experiment
+    ladder, the sweep grids, the CLI builders — must construct plans
+    through AggregatorConfig. Warnings-as-errors over all of them."""
+    from repro.launch import sweeps
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        sweeps.ladder_specs(rounds=4)
+        for grid in sweeps.GRIDS.values():
+            grid(smoke=True)
+        ap = argparse.ArgumentParser()
+        add_plan_args(ap)
+        plan_kwargs(ap.parse_args([]))

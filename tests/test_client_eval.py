@@ -1,0 +1,127 @@
+"""Per-client evaluation plane: panel batches, fairness spread, curves.
+
+``repro.data.per_client_eval_batch`` must hand the plane the SAME
+utterances every round (first-n per client, weight-0 padded), and
+``repro.core.clienteval`` must reduce the panel to the summary
+schema's fairness fields for every task metric family.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SUMMARY_KEYS, get_task
+from repro.core.clienteval import (
+    SPREAD_KEYS,
+    ClientEvalPlane,
+    default_panel,
+    empty_spread,
+    fairness_spread,
+)
+from repro.data import VirtualPopulation, make_speaker_corpus, per_client_eval_batch
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_speaker_corpus(num_speakers=8, vocab_size=64, feat_dim=16,
+                               mean_utterances=6.0, seed=0)
+
+
+# ------------------------------------------------ per_client_eval_batch
+
+def test_eval_batch_layout_and_determinism(corpus):
+    ids = np.array([0, 3, 7])
+    b = per_client_eval_batch(corpus, ids, n=2)
+    assert b["features"].shape[:2] == (3, 2)
+    assert b["labels"].shape[:2] == (3, 2)
+    assert b["weight"].shape == (3, 2)
+    assert b["frame_len"].shape == (3, 2)
+    # fixed panel: the same utterances on every call
+    b2 = per_client_eval_batch(corpus, ids, n=2)
+    np.testing.assert_array_equal(b["features"], b2["features"])
+    # first-n: client 0's row 0 is its arena example 0
+    np.testing.assert_array_equal(b["features"][0, 0],
+                                  corpus.arena_features[0, 0])
+
+
+def test_eval_batch_pads_short_clients(corpus):
+    n = int(corpus.counts.max()) + 3
+    b = per_client_eval_batch(corpus, np.arange(corpus.num_speakers), n=n)
+    counts = np.asarray(corpus.counts)
+    expect = (np.arange(n)[None, :] < counts[:, None]).astype(np.float32)
+    np.testing.assert_array_equal(b["weight"], expect)
+    pad = b["weight"] == 0.0
+    assert pad.any()
+    assert (b["frame_len"][pad] == 0).all()
+    assert (b["features"][pad] == 0.0).all()
+
+
+def test_eval_batch_virtual_clients_use_base_speaker(corpus):
+    pop = VirtualPopulation(corpus, 1_000_000)
+    P = corpus.num_speakers
+    v = np.array([5, 5 + P, 5 + 7 * P])   # three clones of speaker 5
+    b = per_client_eval_batch(pop, v, n=2)
+    base = per_client_eval_batch(corpus, np.array([5]), n=2)
+    for k in b:
+        for c in range(3):
+            np.testing.assert_array_equal(b[k][c], base[k][0])
+
+
+def test_default_panel_is_deterministic_and_spans(corpus):
+    panel = default_panel(corpus, 4)
+    np.testing.assert_array_equal(panel, default_panel(corpus, 4))
+    assert panel[0] == 0 and panel[-1] == corpus.num_speakers - 1
+    # clipped to the population, deduped
+    assert len(default_panel(corpus, 100)) == corpus.num_speakers
+    pop = VirtualPopulation(corpus, 10_000)
+    big = default_panel(pop, 5)
+    assert big[-1] == 9_999 and len(big) == 5
+
+
+# ------------------------------------------------------ fairness spread
+
+def test_fairness_spread_fields():
+    spread = fairness_spread(np.linspace(1.0, 2.0, 10), np.full(10, 0.25))
+    assert set(spread) == set(SPREAD_KEYS) <= set(SUMMARY_KEYS)
+    assert spread["clients_tracked"] == 10
+    assert spread["client_loss_p10"] < spread["client_loss_p90"]
+    assert spread["client_loss_gap"] == pytest.approx(
+        spread["client_loss_p90"] - spread["client_loss_p10"])
+    assert spread["client_quality_gap"] == 0.0
+
+
+def test_empty_spread_matches_schema():
+    spread = empty_spread()
+    assert set(spread) == set(SPREAD_KEYS)
+    assert spread["clients_tracked"] == 0
+
+
+# -------------------------------------------------------- the plane
+
+@pytest.mark.parametrize("name", ["lm-transformer", "keyword"])
+def test_plane_measures_per_round(corpus, name):
+    task = get_task(name)
+    params = task.bundle.init(jax.random.PRNGKey(0))
+    plane = ClientEvalPlane(task, corpus, clients=4, n=2)
+    assert plane.spread() == empty_spread()
+    for _ in range(3):
+        rec = plane.measure(params)
+        assert rec["client_loss"].shape == rec["client_quality"].shape
+        assert np.isfinite(rec["client_loss"]).all()
+        assert np.isfinite(rec["client_quality"]).all()
+    spread = plane.spread()
+    assert spread["clients_tracked"] == len(plane.client_ids)
+    assert all(np.isfinite(spread[k]) for k in SPREAD_KEYS)
+    curves = plane.curves()
+    assert curves["quality_metric"] == task.quality_metric
+    assert np.asarray(curves["client_loss"]).shape == (3, len(plane.client_ids))
+    assert np.asarray(curves["client_quality"]).shape == (3, len(plane.client_ids))
+
+
+def test_plane_wer_quality_is_per_client(corpus):
+    """The ASR hook decodes the flattened panel and scores per client."""
+    task = get_task("asr-rnnt")
+    params = task.bundle.init(jax.random.PRNGKey(0))
+    plane = ClientEvalPlane(task, corpus, clients=3, n=2)
+    rec = plane.measure(params)
+    assert rec["client_quality"].shape == (3,)
+    assert (rec["client_quality"] >= 0.0).all()

@@ -21,7 +21,7 @@ from repro.core.compression import (
     sum_packed_codes,
     _BITS,
 )
-from repro.core.fedavg import _code_fast_path, plan_server_plane
+from repro.core.fedavg import _code_fast_path, _plan_server_plane
 
 try:
     from hypothesis import given, settings
@@ -203,7 +203,7 @@ else:  # deterministic fallback sweep
 # ----------------------------------------------------- engine selection
 
 def _plane(plan):
-    return plan_server_plane(plan)
+    return _plan_server_plane(plan)
 
 
 def test_fast_path_static_selection():

@@ -316,10 +316,10 @@ def test_mark_pareto():
     from repro.launch.sweeps import mark_pareto
 
     rows = [
-        {"id": "a", "cfmq_tb": 1.0, "wer": 0.5},
-        {"id": "b", "cfmq_tb": 2.0, "wer": 0.4},
-        {"id": "c", "cfmq_tb": 2.0, "wer": 0.6},   # dominated by a and b
-        {"id": "d", "cfmq_tb": 0.5, "wer": 0.9},
+        {"id": "a", "cfmq_tb": 1.0, "quality": 0.5},
+        {"id": "b", "cfmq_tb": 2.0, "quality": 0.4},
+        {"id": "c", "cfmq_tb": 2.0, "quality": 0.6},   # dominated by a and b
+        {"id": "d", "cfmq_tb": 0.5, "quality": 0.9},
     ]
     out = {r["id"]: r["pareto"] for r in mark_pareto(rows)}
     assert out == {"a": True, "b": True, "c": False, "d": True}
@@ -379,8 +379,8 @@ def test_sweep_runner_end_to_end(tmp_path):
     rows = mark_pareto(runner.run(points, log=lambda *a, **k: None))
     assert [r["id"] for r in rows] == ["a", "b"]
     for r in rows:
-        for k in ("final_loss", "wer", "wer_hard", "cfmq_tb", "rounds",
-                  "loss_curve", "pareto", "limit"):
+        for k in ("final_loss", "quality", "quality_hard", "quality_metric",
+                  "cfmq_tb", "rounds", "loss_curve", "pareto", "limit"):
             assert k in r
         assert np.isfinite(r["final_loss"])
     # the two points differ in every traced hyper but share one compile

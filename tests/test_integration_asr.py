@@ -34,7 +34,8 @@ def test_federated_training_learns(setup):
     first = np.mean(hist["loss"][:3])
     last = np.mean(hist["loss"][-3:])
     assert last < 0.9 * first, (first, last)
-    assert np.isfinite(hist["wer"]) and 0 <= hist["wer"] <= 1.5
+    assert hist["quality_metric"] == "wer"
+    assert np.isfinite(hist["quality"]) and 0 <= hist["quality"] <= 1.5
 
 
 def test_cfmq_recorded(setup):

@@ -57,13 +57,13 @@ def test_summary_row_orders_schema_first():
 def test_summary_row_rejects_missing_unknown_and_shadowing():
     fields = _dummy_fields()
     missing = dict(fields)
-    del missing["wer"]
-    with pytest.raises(ValueError, match="wer"):
+    del missing["quality"]
+    with pytest.raises(ValueError, match="quality"):
         summary_row(**missing)
     with pytest.raises(ValueError, match="not_a_field"):
         summary_row(not_a_field=1.0, **fields)
-    with pytest.raises(ValueError, match="wer"):
-        summary_row(extras={"wer": 0.1}, **fields)
+    with pytest.raises(ValueError, match="quality"):
+        summary_row(extras={"quality": 0.1}, **fields)
 
 
 # ------------------------------------------- per-round metric schema
