@@ -64,6 +64,86 @@ def bench_rnnt_joint():
     return t["chunked"], t["naive"]
 
 
+def bench_rnnt_joint_bwd():
+    """The joint's *backward* at the same bench shapes: the U-chunked
+    jnp rematerializing VJP (CPU production path, gated) vs the fused
+    Pallas backward that recomputes the joint tile in VMEM
+    (interpret mode here — relative number in the derived column)."""
+    from repro.kernels.ops import _joint_ref_chunked
+    from repro.kernels.rnnt_joint import rnnt_joint_bwd_fused, rnnt_joint_fused
+
+    rng = np.random.default_rng(3)
+    B, T, U1, J, V = 4, 128, 24, 64, 512
+    e = jnp.asarray(rng.normal(size=(B, T, J)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(B, U1, J)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(J, V)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(V,)) * 0.1, jnp.float32)
+    lbl = jnp.asarray(rng.integers(0, V, (B, U1)), jnp.int32)
+    dbl = jnp.asarray(rng.normal(size=(B, T, U1)), jnp.float32)
+    dlb = jnp.asarray(rng.normal(size=(B, T, U1)), jnp.float32)
+    _, _, lse = rnnt_joint_fused(e, g, w, b, lbl, interpret=True,
+                                 return_lse=True)
+    jax.block_until_ready(lse)
+
+    def chunked_bwd(e, g, w, b, dbl, dlb):
+        _, vjp = jax.vjp(
+            lambda e_, g_, w_, b_: _joint_ref_chunked(e_, g_, w_, b_, lbl),
+            e, g, w, b)
+        return vjp((dbl, dlb))
+
+    chunked = jax.jit(chunked_bwd)
+    pallas = jax.jit(lambda *a: rnnt_joint_bwd_fused(*a, interpret=True))
+    t = interleaved_min_us(
+        {"chunked": lambda: chunked(e, g, w, b, dbl, dlb),
+         "pallas": lambda: pallas(e, g, w, b, lbl, lse, dbl, dlb)},
+        reps=bench_reps("REPRO_BENCH_MICRO_REPS", "bench.micro_reps"))
+    print(csv_row("rnnt_joint_bwd_chunked", t["chunked"],
+                  f"pallas_us={t['pallas']:.1f};"
+                  f"interp_ratio={t['pallas'] / max(t['chunked'], 1e-9):.2f}"))
+    return t["chunked"], t["pallas"]
+
+
+def bench_lstm_scan():
+    """The per-client recurrent hot-spot: one grad step through an LSTM
+    scan (S=32, B=8, H=128 — a kernel-eligible shape). The gated
+    us_per_call is the lax.scan-over-fused-gates CPU production path;
+    the full-scan Pallas kernel's custom-VJP grad runs in interpret
+    mode and lands in the derived column as a relative number only."""
+    from repro.kernels.lstm_gates import lstm_scan_fused_vjp
+    from repro.models.lstm import lstm_gates
+
+    rng = np.random.default_rng(2)
+    S, B, H = 32, 8, 128
+    xg = jnp.asarray(rng.normal(size=(S, B, 4 * H)) * 0.4, jnp.float32)
+    w_hh = jnp.asarray(rng.normal(size=(H, 4 * H)) * 0.1, jnp.float32)
+    h0 = jnp.zeros((B, H), jnp.float32)
+    c0 = jnp.zeros((B, H), jnp.float32)
+
+    def scan_loss(xg, w_hh):
+        def step(carry, xg_t):
+            h, c = carry
+            h, c = lstm_gates(xg_t + h @ w_hh, c)
+            return (h, c), h
+
+        (h, c), ys = jax.lax.scan(step, (h0, c0), xg)
+        return ys.sum() + h.sum() + c.sum()
+
+    def kernel_loss(xg, w_hh):
+        ys, hT, cT = lstm_scan_fused_vjp(xg, w_hh, h0, c0, interpret=True)
+        return ys.sum() + hT.sum() + cT.sum()
+
+    scan_grad = jax.jit(jax.grad(scan_loss, argnums=(0, 1)))
+    kernel_grad = jax.jit(jax.grad(kernel_loss, argnums=(0, 1)))
+    t = interleaved_min_us({"scan": lambda: scan_grad(xg, w_hh),
+                            "kernel": lambda: kernel_grad(xg, w_hh)},
+                           reps=bench_reps("REPRO_BENCH_MICRO_REPS",
+                                           "bench.micro_reps"))
+    print(csv_row("lstm_scan_grad", t["scan"],
+                  f"kernel_us={t['kernel']:.1f};"
+                  f"interp_ratio={t['kernel'] / max(t['scan'], 1e-9):.2f}"))
+    return t["scan"], t["kernel"]
+
+
 def _fed_round_setup():
     from repro.launch.train import tiny_asr_setup
     from repro.data import FederatedSampler
@@ -98,7 +178,16 @@ def _round_variants(base):
         # code-sum reduction, one server dequant).
         ("fed_round_tiny_rnnt_int8",
          FederatedPlan(**base, compression=CompressionConfig(kind="int8"))),
+        # top5 is PINNED to the generic per-client dense plane (the
+        # pre-code-path graph, via _FORCE_GENERIC_PLANE below) so the
+        # metric keeps measuring what it always measured; _top5_code is
+        # the same plan on the code-domain fast path (segment-bucketed
+        # scatter-add of packed {values, idx} wires). Their adjacent
+        # pairing is the topk_code_le_topk never-flip flag.
         ("fed_round_tiny_rnnt_top5",
+         FederatedPlan(**base, compression=CompressionConfig(kind="topk",
+                                                             topk_frac=0.05))),
+        ("fed_round_tiny_rnnt_top5_code",
          FederatedPlan(**base, compression=CompressionConfig(kind="topk",
                                                              topk_frac=0.05))),
         # packed-wire variants: materialize + round-trip the real
@@ -127,6 +216,13 @@ def _round_variants(base):
         ("fed_round_tiny_rnnt_sharded_int8",
          FederatedPlan(**base, compression=CompressionConfig(kind="int8")), sh),
     ]
+
+
+# Variants whose round step is traced with the code-domain fast path
+# DISABLED (repro.core.fedavg._code_fast_path pinned False during the
+# compile call): the pre-fast-path generic graph, kept as the slow side
+# of the topk_code_le_topk pairing.
+_FORCE_GENERIC_PLANE = frozenset({"fed_round_tiny_rnnt_top5"})
 
 
 def bench_fed_round():
@@ -160,14 +256,25 @@ def bench_fed_round():
     bundle, params, batch = _fed_round_setup()
     base = dict(clients_per_round=8, local_batch_size=4, client_lr=0.3)
     variants = _round_variants(base)
+    import repro.core.fedavg as _fedavg_mod
+
     steps, states = {}, {}
     for name, plan, sharding in variants:
         states[name] = init_server_state(plan, params)
         steps[name] = jax.jit(make_round_step(bundle.loss_fn, plan,
                                               jax.random.PRNGKey(1),
                                               client_sharding=sharding))
-        states[name], m = steps[name](states[name], batch)       # compile
-        jax.block_until_ready(m["loss"])
+        # the code-fast-path branch is taken at TRACE time, so pinning
+        # a variant to the generic plane only needs the patch while the
+        # first (compiling) call traces; later calls replay the graph
+        orig_fast = _fedavg_mod._code_fast_path
+        if name in _FORCE_GENERIC_PLANE:
+            _fedavg_mod._code_fast_path = lambda plane: False
+        try:
+            states[name], m = steps[name](states[name], batch)   # compile
+            jax.block_until_ready(m["loss"])
+        finally:
+            _fedavg_mod._code_fast_path = orig_fast
     reps = bench_reps("REPRO_BENCH_FED_REPS", "bench.fed_reps")
     cycle_times = {name: [] for name, _, _ in variants}
 
@@ -207,6 +314,21 @@ def bench_fed_round():
             "pass": r <= 1.0 + _NOISE_MARGIN,
             "vs_fp32_ratio": round(r, 4),
         }
+    # topk_code_le_topk: the code-domain top-k round (packed
+    # {values, idx} wires + segment-bucketed scatter-add) must stay
+    # at-or-under the generic dense top-k plane it replaced — adjacent
+    # slow<->code pairs, same protocol as the fp32 flags but with the
+    # pinned-generic top5 graph as the denominator.
+    ratios = []
+    for _ in range(pair_reps):
+        s = step_once("fed_round_tiny_rnnt_top5")
+        c = step_once("fed_round_tiny_rnnt_top5_code")
+        ratios.append(c / s)
+    r = statistics.median(ratios)
+    flags["topk_code_le_topk"] = {
+        "pass": r <= 1.0 + _NOISE_MARGIN,
+        "vs_topk_ratio": round(r, 4),
+    }
     times = {name: min(ts) for name, ts in cycle_times.items()}
     ratio = {name: flags[f"{tag}_le_fp32"]["vs_fp32_ratio"]
              for tag, name in [("int8", "fed_round_tiny_rnnt_int8"),
@@ -215,7 +337,11 @@ def bench_fed_round():
                                ("sharded_int8", "fed_round_tiny_rnnt_sharded_int8")]}
     for name, plan, sharding in variants:
         up = 8 * client_wire_bytes(plan.compression, params)
-        if name in ratio:
+        if name == "fed_round_tiny_rnnt_top5_code":
+            derived = (f"vs_topk_ratio="
+                       f"{flags['topk_code_le_topk']['vs_topk_ratio']};"
+                       f"uplink_B_round={up}")
+        elif name in ratio:
             derived = f"vs_fp32_ratio={ratio[name]};uplink_B_round={up}"
         elif plan.compression.kind == "none":
             derived = "clients=8"
@@ -295,6 +421,8 @@ def main(trace_path: str = "results/trace_kernels.json") -> tuple[dict, dict]:
     times = {}
     times["attention_blockwise_1k"], _ = bench_attention()
     times["rnnt_joint_chunked"], _ = bench_rnnt_joint()
+    times["rnnt_joint_bwd_chunked"], _ = bench_rnnt_joint_bwd()
+    times["lstm_scan_grad"], _ = bench_lstm_scan()
     plane_times, plane_speedups = bench_wire_plane()
     times.update(plane_times)
     round_times, flags = bench_fed_round()

@@ -162,10 +162,21 @@ def leaf_scale(x, bits: int):
 
 def _rounding_field(key, shape, stochastic: bool):
     """The stochastic-rounding uniforms (None = nearest). ``u < frac``
-    is jax.random.bernoulli's own draw, so threading the explicit field
-    through the fused kernel is bit-identical to the historical
-    in-line bernoulli for the same key."""
+    is jax.random.bernoulli's own draw. Since PR 10 the production
+    kernels generate this field *in-kernel* (threefry hashed from the
+    key words + each element's flat position — never materialized in
+    HBM); this streamed form remains the oracle the bit-parity tests
+    check the in-kernel draw against."""
     return jax.random.uniform(key, shape) if stochastic else None
+
+
+def _key_words(key):
+    """The raw (2,) uint32 threefry words of ``key`` (typed or raw
+    PRNG key) — what the in-kernel PRNG hashes."""
+    key = jnp.asarray(key)
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(key)
+    return key
 
 
 def quantize_codes_with_scale(x, key, scale, bits: int, stochastic: bool = True):
@@ -183,8 +194,10 @@ def quantize_codes_with_scale(x, key, scale, bits: int, stochastic: bool = True)
     """
     from repro.kernels import wire_pack
 
-    u = _rounding_field(key, jnp.shape(x), stochastic)
-    return wire_pack.quantize_with_scale(x.astype(jnp.float32), scale, u, bits)
+    xf = x.astype(jnp.float32)
+    if stochastic:
+        return wire_pack.quantize_with_scale_keyed(xf, scale, _key_words(key), bits)
+    return wire_pack.quantize_with_scale(xf, scale, None, bits)
 
 
 def quantize_codes(x, key, bits: int, stochastic: bool = True):
@@ -241,11 +254,14 @@ def pack_leaf(cfg: CompressionConfig, x, key):
         return topk_select(x, cfg.topk_frac)
     bits = _BITS[cfg.kind]
     scale = leaf_scale(x, bits)
-    # the rounding field keeps x's shape (bit-parity with the historical
-    # per-shape bernoulli draw); the fused kernel consumes it flat
-    u = _rounding_field(key, jnp.shape(x), cfg.stochastic)
-    uf = None if u is None else u.reshape(-1)
-    payload = wire_pack.quantize_pack(x.astype(jnp.float32).reshape(-1), scale, uf, bits)
+    flat = x.astype(jnp.float32).reshape(-1)
+    # stochastic rounding draws in-kernel (threefry of the key words +
+    # flat position — bit-identical to the historical streamed
+    # jax.random.uniform field, which never touches HBM anymore)
+    if cfg.stochastic:
+        payload = wire_pack.quantize_pack_keyed(flat, scale, _key_words(key), bits)
+    else:
+        payload = wire_pack.quantize_pack(flat, scale, None, bits)
     return payload, scale
 
 
@@ -374,24 +390,45 @@ def code_domain_aggregate(
     ``pack_leaf`` (codes against a shared scale instead of its own —
     same buffer shapes, same ``leaf_wire_bytes``).
 
+    ``topk`` planes aggregate in the payload domain instead: each
+    client's (value, index) pairs — exactly the wire payload — go
+    through one weighted segment-bucketed scatter-add
+    (``wire_pack.topk_scatter_add``) into the dense mean, so the slow
+    path's K rematerialized dense fp32 trees (and their K-deep
+    tensordot) never exist. Dropped clients carry weight n_k = 0, so
+    their payloads cancel exactly as in the slow path.
+
     With ``axis`` (called inside ``shard_map`` where ``deltas``/``n_k``/
     ``pmask``/``ckeys`` hold only this shard's slice of the cohort) the
     scale negotiation pmax-es, the code sum psum-s, and ``n`` psum-s
     over that axis — each reduction is exact (f32 max; int32 add; f32
     add of integer-valued example counts, exact below 2**24), so the
     sharded aggregate is bit-identical to the single-device one and
-    every shard returns the same replicated ``wbar``.
+    every shard returns the same replicated ``wbar``. The topk dense
+    sums psum in f32 (bit-identical on a 1-device mesh, tolerance-level
+    elsewhere — same contract as the fp32 slow path's reduction order).
     """
     from repro.kernels import wire_pack
 
-    bits = _BITS[cfg.kind]
     leaves, treedef = jax.tree_util.tree_flatten(deltas)
     n_total = n_k.sum()
     if axis is not None:
         n_total = jax.lax.psum(n_total, axis)
     n = jnp.maximum(n_total, 1.0)
-    w_int = jnp.round(n_k).astype(jnp.int32)
     out = []
+    if cfg.kind == "topk":
+        for d in leaves:
+            K = d.shape[0]
+            flat = d.astype(jnp.float32).reshape(K, -1)
+            size = flat.shape[1]
+            vals, idx = jax.vmap(lambda x: topk_select(x, cfg.topk_frac))(flat)
+            dsum = wire_pack.topk_scatter_add(vals, idx, n_k.astype(jnp.float32), size)
+            if axis is not None:
+                dsum = jax.lax.psum(dsum, axis)
+            out.append((dsum / n).reshape(d.shape[1:]))
+        return jax.tree_util.tree_unflatten(treedef, out)
+    bits = _BITS[cfg.kind]
+    w_int = jnp.round(n_k).astype(jnp.int32)
     for li, d in enumerate(leaves):
         K = d.shape[0]
         flat = d.astype(jnp.float32).reshape(K, -1)
@@ -400,15 +437,98 @@ def code_domain_aggregate(
         lkeys = fastpath_leaf_keys(ckeys, li)
 
         def client(x, k, scale=scale):
-            u = _rounding_field(k, x.shape, cfg.stochastic)
+            if cfg.stochastic:
+                kw = _key_words(k)
+                if cfg.packed:
+                    return wire_pack.quantize_pack_keyed(x, scale, kw, bits)
+                return wire_pack.quantize_with_scale_keyed(x, scale, kw, bits)
             if cfg.packed:
-                return wire_pack.quantize_pack(x, scale, u, bits)
-            return wire_pack.quantize_with_scale(x, scale, u, bits)
+                return wire_pack.quantize_pack(x, scale, None, bits)
+            return wire_pack.quantize_with_scale(x, scale, None, bits)
 
         payload = jax.vmap(client)(flat, lkeys)
         csum = sum_packed_codes(cfg, payload, size, weights=w_int, axis=axis)
         out.append((csum.astype(jnp.float32) * (scale / n)).reshape(d.shape[1:]))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def code_domain_aggregate_ef(
+    cfg: CompressionConfig, deltas: PyTree, n_k, pmask, ckeys, ef: PyTree, axis=None
+) -> tuple[PyTree, PyTree]:
+    """Error-feedback twin of ``code_domain_aggregate``: compresses each
+    client's ``delta + residual``, aggregates in the code/payload
+    domain, and returns ``(wbar, new_ef)`` with the EF21 residual
+    update computed from the *transmitted codes' dequant* — never from
+    a separately compressed fp32 tree, so what feeds the residual is
+    bit-identical to what went on the wire.
+
+    - intN: new_ef = target - codes * shared_scale for participants
+      (codes from the same fused keyed kernel whose int32 sum builds
+      wbar); dropped clients keep their old residual untouched.
+    - topk: the transmitted coordinates are sent *exactly*, so the
+      residual is just the target with its selected coordinates zeroed
+      (one in-place scatter per client — no dense subtraction).
+
+    Aggregation and scale negotiation shard over ``axis`` exactly as in
+    ``code_domain_aggregate``; the residual update is purely local to
+    each shard's clients (ef is sharded along the client axis), so no
+    extra collectives appear.
+    """
+    from repro.kernels import wire_pack
+
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    ef_leaves = jax.tree_util.tree_flatten(ef)[0]
+    n_total = n_k.sum()
+    if axis is not None:
+        n_total = jax.lax.psum(n_total, axis)
+    n = jnp.maximum(n_total, 1.0)
+    out, ef_out = [], []
+    if cfg.kind == "topk":
+        for d, e in zip(leaves, ef_leaves):
+            K = d.shape[0]
+            target = d.astype(jnp.float32) + e.astype(jnp.float32)
+            flat = target.reshape(K, -1)
+            size = flat.shape[1]
+            vals, idx = jax.vmap(lambda x: topk_select(x, cfg.topk_frac))(flat)
+            dsum = wire_pack.topk_scatter_add(vals, idx, n_k.astype(jnp.float32), size)
+            if axis is not None:
+                dsum = jax.lax.psum(dsum, axis)
+            out.append((dsum / n).reshape(d.shape[1:]))
+            resid = jax.vmap(lambda t, i: t.at[i].set(0.0))(flat, idx).reshape(d.shape)
+            sel = pmask.reshape((K,) + (1,) * (d.ndim - 1)) > 0
+            ef_out.append(jnp.where(sel, resid, e).astype(e.dtype))
+        return (jax.tree_util.tree_unflatten(treedef, out),
+                jax.tree_util.tree_unflatten(treedef, ef_out))
+    bits = _BITS[cfg.kind]
+    w_int = jnp.round(n_k).astype(jnp.int32)
+    for li, (d, e) in enumerate(zip(leaves, ef_leaves)):
+        K = d.shape[0]
+        target = d.astype(jnp.float32) + e.astype(jnp.float32)
+        flat = target.reshape(K, -1)
+        size = flat.shape[1]
+        scale = shared_leaf_scale(target, pmask, bits, axis=axis)
+        lkeys = fastpath_leaf_keys(ckeys, li)
+
+        def client(x, k, scale=scale):
+            if cfg.stochastic:
+                return wire_pack.quantize_with_scale_keyed(x, scale, _key_words(k), bits)
+            return wire_pack.quantize_with_scale(x, scale, None, bits)
+
+        codes = jax.vmap(client)(flat, lkeys)
+        if cfg.packed and bits == 4:
+            # materialize the nibble-packed wire buffer (byte accounting's
+            # payload) and reduce through it — pack->unpack is the
+            # identity on codes, so csum is unchanged
+            payload = jax.vmap(wire_pack.nibble_pack)(codes)
+            csum = sum_packed_codes(cfg, payload, size, weights=w_int, axis=axis)
+        else:
+            csum = sum_packed_codes(cfg, codes, size, weights=w_int, axis=axis)
+        out.append((csum.astype(jnp.float32) * (scale / n)).reshape(d.shape[1:]))
+        resid = (flat - codes.astype(jnp.float32) * scale).reshape(d.shape)
+        sel = pmask.reshape((K,) + (1,) * (d.ndim - 1)) > 0
+        ef_out.append(jnp.where(sel, resid, e).astype(e.dtype))
+    return (jax.tree_util.tree_unflatten(treedef, out),
+            jax.tree_util.tree_unflatten(treedef, ef_out))
 
 
 # ----------------------------------------------------------------------

@@ -99,6 +99,7 @@ from repro.core.compression import (
     CompressionConfig,
     client_wire_bytes,
     code_domain_aggregate,
+    code_domain_aggregate_ef,
     make_compressor,
     tree_param_bytes,
 )
@@ -187,17 +188,19 @@ class ServerPlane(NamedTuple):
 
 def _code_fast_path(plane: ServerPlane) -> bool:
     """Static selector for the code-domain aggregation fast path: the
-    plane quantizes (int8/int4), aggregates with the paper's weighted
-    mean, and nothing needs the per-client fp32 deltas the fast path
-    never materializes — no EF residuals (they are defined as
-    ``target - dequantized(sent)``) and no delta-domain adversary
-    (corruption transforms what the server receives; in the fast path
-    the server receives code sums). Everything here is compile-time
-    structure, so the fp32 parity graph is byte-for-byte untouched and
-    each configuration keeps one compilation."""
+    plane compresses (int8/int4/topk), aggregates with the paper's
+    weighted mean, and no delta-domain adversary needs the per-client
+    fp32 deltas the fast path never materializes (corruption transforms
+    what the server receives; in the fast path the server receives code
+    sums / payload scatters). EF planes are eligible since PR 10:
+    ``code_domain_aggregate_ef`` computes the residual straight from
+    the transmitted codes' dequant (intN) or the selected-coordinate
+    zeroing (topk), so no separately compressed fp32 tree is needed.
+    Everything here is compile-time structure, so the fp32 parity graph
+    is byte-for-byte untouched and each configuration keeps one
+    compilation."""
     return (
-        plane.compression.kind in ("int8", "int4")
-        and not plane.compression.error_feedback
+        plane.compression.kind in ("int8", "int4", "topk")
         and plane.aggregator_name == "weighted_mean"
         and plane.corruption_kind not in DELTA_KINDS
     )
@@ -465,13 +468,17 @@ def _sharded_code_fastpath(
     pmask,
     ckeys,
     sharding: ClientSharding,
+    ef=None,
 ):
     """Client compute AND the code-domain aggregate in ONE shard_map:
     local deltas never leave their shard — the scale negotiation is a
     ``lax.pmax`` over 4-byte scalars and the code reduction a literal
     ``lax.psum`` of int32 partial sums (exact, order-independent), so
     ``wbar`` replicates bit-for-bit what the unsharded fast path
-    computes. Returns (wbar replicated, losses (K,), n_k (K,))."""
+    computes. With ``ef`` (EF planes) the per-client residual tree
+    rides the same client-axis sharding in and out — its update is
+    purely local to each shard's clients, so no extra collectives
+    appear. Returns (wbar replicated, losses (K,), n_k (K,), ef')."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -479,20 +486,41 @@ def _sharded_code_fastpath(
     sharding.check_clients(K)
     ax = sharding.axis
 
-    def stage(p, batch, cidx, pm, cks, bkey, ridx):
-        deltas, losses, n_k = jax.vmap(
+    def client_stage(p, batch, cidx, bkey, ridx):
+        return jax.vmap(
             lambda cb, ci: _client_update(loss_fn, client_opt, sigma_fn, bkey, p, cb, ci, ridx)
         )(batch, cidx)
-        wbar = code_domain_aggregate(plane.compression, deltas, n_k, pm, cks, axis=ax)
-        return wbar, losses, n_k
+
+    if ef is None:
+
+        def stage(p, batch, cidx, pm, cks, bkey, ridx):
+            deltas, losses, n_k = client_stage(p, batch, cidx, bkey, ridx)
+            wbar = code_domain_aggregate(plane.compression, deltas, n_k, pm, cks, axis=ax)
+            return wbar, losses, n_k
+
+        wbar, losses, n_k = shard_map(
+            stage,
+            mesh=sharding.mesh,
+            in_specs=(P(), P(ax), P(ax), P(ax), P(ax), P(), P()),
+            out_specs=(P(), P(ax), P(ax)),
+            check_rep=False,
+        )(params, round_batch, jnp.arange(K), pmask, ckeys, base_key, round_idx)
+        return wbar, losses, n_k, None
+
+    def stage_ef(p, batch, cidx, pm, cks, bkey, ridx, e):
+        deltas, losses, n_k = client_stage(p, batch, cidx, bkey, ridx)
+        wbar, e2 = code_domain_aggregate_ef(
+            plane.compression, deltas, n_k, pm, cks, e, axis=ax
+        )
+        return wbar, losses, n_k, e2
 
     return shard_map(
-        stage,
+        stage_ef,
         mesh=sharding.mesh,
-        in_specs=(P(), P(ax), P(ax), P(ax), P(ax), P(), P()),
-        out_specs=(P(), P(ax), P(ax)),
+        in_specs=(P(), P(ax), P(ax), P(ax), P(ax), P(), P(), P(ax)),
+        out_specs=(P(), P(ax), P(ax), P(ax)),
         check_rep=False,
-    )(params, round_batch, jnp.arange(K), pmask, ckeys, base_key, round_idx)
+    )(params, round_batch, jnp.arange(K), pmask, ckeys, base_key, round_idx, ef)
 
 
 def _delta_payload_stage(plane: ServerPlane, deltas, ef, pmask, ckeys, xkey, stale):
@@ -550,25 +578,36 @@ def _fedavg_round_body(
     if _code_fast_path(plane) and sharding is not None:
         # Sharded code-domain fast path: client compute and the int32
         # code-sum psum live in one shard_map — per-client deltas never
-        # leave their shard (see _sharded_code_fastpath).
-        wbar, losses, n_k = _sharded_code_fastpath(
+        # leave their shard (see _sharded_code_fastpath). EF residuals
+        # ride the same client-axis sharding in and out.
+        wbar, losses, n_k, ef2 = _sharded_code_fastpath(
             plane, loss_fn, client_opt, sigma_fn, base_key, state.params,
             round_batch, state.round_idx, pmask, ckeys, sharding,
+            ef=ef if plane.compression.error_feedback else None,
         )
+        if plane.compression.error_feedback:
+            ef = ef2
         cmask = jnp.zeros((K,), jnp.float32)
         stale = state.stale
     elif _code_fast_path(plane):
         # Code-domain fast path: shared-scale negotiation + in-graph
-        # int32 code-sum reduction, ONE server dequant — per-client
-        # fp32 deltas are never rematerialized. Statically selected, so
-        # every other configuration keeps its existing graph. The
-        # corruption stage here is the honest identity (delta
-        # adversaries force the slow path), matching its cmask = 0.
+        # int32 code-sum (or payload scatter-add) reduction, ONE server
+        # dequant — per-client fp32 deltas are never rematerialized.
+        # Statically selected, so every other configuration keeps its
+        # existing graph. The corruption stage here is the honest
+        # identity (delta adversaries force the slow path), matching
+        # its cmask = 0. EF planes route through the _ef twin, whose
+        # residual update reads the transmitted codes directly.
         deltas, losses, n_k = _client_update_stage(
             loss_fn, client_opt, sigma_fn, base_key, state.params, round_batch,
             state.round_idx,
         )
-        wbar = code_domain_aggregate(plane.compression, deltas, n_k, pmask, ckeys)
+        if plane.compression.error_feedback:
+            wbar, ef = code_domain_aggregate_ef(
+                plane.compression, deltas, n_k, pmask, ckeys, ef
+            )
+        else:
+            wbar = code_domain_aggregate(plane.compression, deltas, n_k, pmask, ckeys)
         cmask = jnp.zeros((K,), jnp.float32)
         stale = state.stale
     else:

@@ -24,6 +24,11 @@ class PrefetchIterator:
     buffer; optionally ``jax.device_put`` each item on the worker thread
     so device transfer also overlaps compute.
 
+    ``sharding`` (a ``jax.sharding.Sharding``) routes the worker-thread
+    transfer straight to the target placement — for mesh-sharded rounds
+    each item lands pre-split over the ``clients`` axis, so the round
+    step starts without a host-side gather/reshard stall.
+
     Use as a context manager (or call ``close()``) to guarantee the
     worker is torn down when the consumer stops early.
     """
@@ -34,6 +39,7 @@ class PrefetchIterator:
         depth: int = 2,
         device_put: bool = True,
         transform: Optional[Callable[[Any], Any]] = None,
+        sharding: Optional[Any] = None,
     ):
         if depth < 1:
             raise ValueError(f"prefetch depth must be >= 1, got {depth}")
@@ -42,7 +48,8 @@ class PrefetchIterator:
         self._error: Optional[BaseException] = None
         self._done = False
         self._transform = transform
-        self._device_put = device_put
+        self._device_put = device_put or sharding is not None
+        self._sharding = sharding
         self._thread = threading.Thread(
             target=self._worker, args=(iter(source),), daemon=True,
             name="repro-prefetch")
@@ -68,7 +75,10 @@ class PrefetchIterator:
                 if self._device_put:
                     import jax
 
-                    item = jax.device_put(item)
+                    if self._sharding is not None:
+                        item = jax.device_put(item, self._sharding)
+                    else:
+                        item = jax.device_put(item)
                 if not self._put(item):
                     return
         except BaseException as e:  # surfaced on the consumer thread

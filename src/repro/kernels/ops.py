@@ -2,8 +2,10 @@
 
 On CPU (this container) the kernels execute in interpret mode; on TPU
 they compile to Mosaic. ``rnnt_joint`` carries a custom_vjp whose
-backward re-materializes through the U-chunked jnp path, preserving
-the forward's O(B·T·U) memory during training.
+backward dispatches via the ``rnnt.joint_bwd_dispatch`` tuning knob:
+the fused Pallas backward (recomputing the joint tile in VMEM with the
+forward's shape bucketing) off-CPU, the U-chunked jnp rematerializer
+on CPU — both preserve the forward's O(B·T·U) memory during training.
 """
 from __future__ import annotations
 
@@ -15,7 +17,7 @@ import jax.numpy as jnp
 from repro.kernels.decode_attention import flash_decode
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.lstm_gates import lstm_gates_fused
-from repro.kernels.rnnt_joint import rnnt_joint_fused
+from repro.kernels.rnnt_joint import rnnt_joint_bwd_fused, rnnt_joint_fused
 
 
 def _on_cpu() -> bool:
@@ -24,8 +26,9 @@ def _on_cpu() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "logit_softcap"))
 def attention(q, k, v, causal: bool = True, window: int = 0, logit_softcap: float = 0.0):
-    return flash_attention(q, k, v, causal=causal, window=window,
-                           logit_softcap=logit_softcap, interpret=_on_cpu())
+    return flash_attention(
+        q, k, v, causal=causal, window=window, logit_softcap=logit_softcap, interpret=_on_cpu()
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("window",))
@@ -54,39 +57,67 @@ def _joint_ref_chunked(enc_proj, pred_proj, w_out, bias, labels, u_chunk: int = 
 
     def body(_, inp):
         g_i, l_i = inp
-        h = jnp.tanh(enc_proj[:, :, None, :].astype(jnp.float32)
-                     + g_i[:, None, :, :].astype(jnp.float32))
+        h = jnp.tanh(
+            enc_proj[:, :, None, :].astype(jnp.float32) + g_i[:, None, :, :].astype(jnp.float32)
+        )
         logits = h @ w_out.astype(jnp.float32) + bias.astype(jnp.float32)
         lse = jax.nn.logsumexp(logits, axis=-1)
         blank = logits[..., 0] - lse
-        lab = jnp.take_along_axis(
-            logits, l_i[:, None, :, None].astype(jnp.int32), axis=-1)[..., 0] - lse
+        idx = l_i[:, None, :, None].astype(jnp.int32)
+        lab = jnp.take_along_axis(logits, idx, axis=-1)[..., 0] - lse
         return None, (blank, lab)
 
     _, (blanks, labs) = jax.lax.scan(body, None, (gc, lc))
-    blank_lp = blanks.swapaxes(0, 1).reshape(B, T, -1)[:, :, :U1]
-    label_lp = labs.swapaxes(0, 1).reshape(B, T, -1)[:, :, :U1]
+    # (n_chunks, B, T, c) -> (B, T, n_chunks*c): chunk axis must land
+    # OUTSIDE the within-chunk axis, adjacent to it, before flattening
+    blank_lp = jnp.moveaxis(blanks, 0, 2).reshape(B, T, -1)[:, :, :U1]
+    label_lp = jnp.moveaxis(labs, 0, 2).reshape(B, T, -1)[:, :, :U1]
     return blank_lp, label_lp
 
 
 @jax.custom_vjp
 def rnnt_joint(enc_proj, pred_proj, w_out, bias, labels):
-    return rnnt_joint_fused(enc_proj, pred_proj, w_out, bias, labels,
-                            interpret=_on_cpu())
+    return rnnt_joint_fused(enc_proj, pred_proj, w_out, bias, labels, interpret=_on_cpu())
 
 
 def _rnnt_joint_fwd(enc_proj, pred_proj, w_out, bias, labels):
-    out = rnnt_joint(enc_proj, pred_proj, w_out, bias, labels)
-    return out, (enc_proj, pred_proj, w_out, bias, labels)
+    blank, label, lse = rnnt_joint_fused(
+        enc_proj, pred_proj, w_out, bias, labels, interpret=_on_cpu(), return_lse=True
+    )
+    return (blank, label), (enc_proj, pred_proj, w_out, bias, labels, lse)
+
+
+def _use_joint_bwd_pallas() -> bool:
+    from repro.profile.tuner import get_knob
+
+    mode = get_knob("rnnt.joint_bwd_dispatch")
+    if mode == "pallas":
+        return True
+    return mode == "auto" and not _on_cpu()
 
 
 def _rnnt_joint_bwd(res, cts):
-    enc_proj, pred_proj, w_out, bias, labels = res
-    _, vjp = jax.vjp(
-        lambda e, g, w, b: _joint_ref_chunked(e, g, w, b, labels),
-        enc_proj, pred_proj, w_out, bias)
-    de, dg, dw, db = vjp(cts)
-    return de, dg, dw, db, None
+    enc_proj, pred_proj, w_out, bias, labels, lse = res
+    if _use_joint_bwd_pallas():
+        de, dg, dw, db = rnnt_joint_bwd_fused(
+            enc_proj, pred_proj, w_out, bias, labels, lse, cts[0], cts[1], interpret=_on_cpu()
+        )
+    else:
+        _, vjp = jax.vjp(
+            lambda e, g, w, b: _joint_ref_chunked(e, g, w, b, labels),
+            enc_proj,
+            pred_proj,
+            w_out,
+            bias,
+        )
+        de, dg, dw, db = vjp(cts)
+    return (
+        de.astype(enc_proj.dtype),
+        dg.astype(pred_proj.dtype),
+        dw.astype(w_out.dtype),
+        db.astype(bias.dtype),
+        None,
+    )
 
 
 rnnt_joint.defvjp(_rnnt_joint_fwd, _rnnt_joint_bwd)

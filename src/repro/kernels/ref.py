@@ -131,6 +131,86 @@ def topk_unpack_ref(values, idx, n: int):
     return jnp.zeros((n,), jnp.float32).at[idx].set(values.astype(jnp.float32))
 
 
+# ------------------------------------------------- in-kernel PRNG oracle
+# jax's threefry2x32 PRNG, restated elementwise so the quantize kernels
+# can draw each element's uniform from its flat position alone — no
+# (n,)-shaped uniform field ever streams through HBM. With the repo's
+# pinned threefry (non-partitionable) impl, jax.random.uniform(key, (n,))
+# hashes counters iota(n) split into halves (x0 = counts[:half],
+# x1 = counts[half:], half = (n+1)//2; odd n pads one zero counter) and
+# concatenates the two output lanes. Position j therefore owns lane 0 of
+# pair (j, j+half) when j < half (the pad turns the missing counter into
+# 0), else lane 1 of pair (j-half, j). ``threefry_uniform_at`` computes
+# exactly that, so it equals the streamed draw bit for bit by
+# construction — the tolerance-free parity contract of the keyed
+# quantize kernels (tests/test_wire_pack.py sweeps even/odd n).
+
+_THREEFRY_C = 0x1BD11BDA
+_THREEFRY_ROT = ((13, 15, 26, 6), (17, 29, 16, 24))
+
+
+def _rotl32(x, r: int):
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def threefry2x32_pair(k0, k1, c0, c1):
+    """One threefry2x32 block hash: uint32 key words x uint32 counter
+    words -> both uint32 output lanes (jax's 20-round schedule)."""
+    ks2 = k0 ^ k1 ^ jnp.uint32(_THREEFRY_C)
+    x0 = c0 + k0
+    x1 = c1 + k1
+    inject = ((k1, ks2), (ks2, k0), (k0, k1), (k1, ks2), (ks2, k0))
+    for i, (i0, i1) in enumerate(inject):
+        for r in _THREEFRY_ROT[i % 2]:
+            x0 = x0 + x1
+            x1 = _rotl32(x1, r)
+            x1 = x1 ^ x0
+        x0 = x0 + i0
+        x1 = x1 + i1 + jnp.uint32(i + 1)
+    return x0, x1
+
+
+def threefry_random_bits_at(k0, k1, pos, n: int):
+    """Random uint32 at flat position(s) ``pos`` of a size-``n`` draw —
+    elementwise jax.random.bits(key, (n,))."""
+    half = (n + 1) // 2
+    pos = pos.astype(jnp.uint32)
+    lo = pos < jnp.uint32(half)
+    pair = jnp.where(lo, pos, pos - jnp.uint32(half))
+    c1 = pair + jnp.uint32(half)
+    c1 = jnp.where(c1 < jnp.uint32(n), c1, jnp.uint32(0))
+    o0, o1 = threefry2x32_pair(k0, k1, pair, c1)
+    return jnp.where(lo, o0, o1)
+
+
+def bits_to_uniform(bits):
+    """uint32 -> [0, 1) f32, jax.random.uniform's exact mantissa fill."""
+    f = jax.lax.bitcast_convert_type(
+        (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000), jnp.float32
+    )
+    return f - 1.0
+
+
+def threefry_uniform_ref(key_data, n: int):
+    """(2,) uint32 key words -> (n,) f32 == jax.random.uniform(key, (n,))
+    bit for bit (the streamed-field oracle the in-kernel PRNG must
+    reproduce exactly)."""
+    k0 = key_data[0].astype(jnp.uint32)
+    k1 = key_data[1].astype(jnp.uint32)
+    pos = jnp.arange(n, dtype=jnp.uint32)
+    return bits_to_uniform(threefry_random_bits_at(k0, k1, pos, n))
+
+
+def topk_scatter_add_ref(values, idx, weights, n: int):
+    """Weighted scatter-ADD of a stacked top-k payload: values (K, k)
+    f32, idx (K, k) int32 flat indices, weights (K,) f32 -> dense (n,)
+    f32 sum over clients (duplicate indices accumulate). The code-domain
+    aggregation oracle for the top-k plane."""
+    flat_vals = (weights[:, None] * values.astype(jnp.float32)).reshape(-1)
+    flat_idx = idx.reshape(-1)
+    return jnp.zeros((n,), jnp.float32).at[flat_idx].add(flat_vals)
+
+
 def lstm_gates_ref(gates, c):
     """gates: (B, 4H) preactivation [i|f|g|o]; c: (B, H)."""
     h4 = gates.shape[-1]

@@ -32,7 +32,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(e_ref, g_ref, wo_ref, b_ref, lbl_ref,
-            blank_ref, label_ref,
+            blank_ref, label_ref, lse_ref,
             h_ref, m_ref, l_ref, blk_ref, lab_ref, *,
             tv: int, n_v: int):
     vi = pl.program_id(3)
@@ -47,8 +47,8 @@ def _kernel(e_ref, g_ref, wo_ref, b_ref, lbl_ref,
         blk_ref[...] = jnp.zeros_like(blk_ref)
         lab_ref[...] = jnp.zeros_like(lab_ref)
 
-    h = h_ref[...]                                             # (tq, tu, J)
-    wo = wo_ref[...].astype(jnp.float32)                       # (J, tv)
+    h = h_ref[...]  # (tq, tu, J)
+    wo = wo_ref[...].astype(jnp.float32)  # (J, tv)
     logits = jax.lax.dot_general(
         h.reshape(-1, h.shape[-1]), wo,
         (((1,), (0,)), ((), ())),
@@ -69,10 +69,10 @@ def _kernel(e_ref, g_ref, wo_ref, b_ref, lbl_ref,
         blk_ref[...] = logits[..., 0]
 
     # label logit: labels[u] may fall in this slab
-    lbl = lbl_ref[0]                                           # (tu,) int32
-    col = lbl - vi * tv                                        # position within slab
+    lbl = lbl_ref[0]  # (tu,) int32
+    col = lbl - vi * tv  # position within slab
     onehot = (jax.lax.broadcasted_iota(jnp.int32, (logits.shape[1], tv), 1)
-              == col[:, None]).astype(jnp.float32)             # (tu, tv)
+              == col[:, None]).astype(jnp.float32)  # (tu, tv)
     lab_ref[...] += jnp.einsum("quv,uv->qu", logits, onehot)
 
     @pl.when(vi == n_v - 1)
@@ -80,21 +80,28 @@ def _kernel(e_ref, g_ref, wo_ref, b_ref, lbl_ref,
         lse = m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
         blank_ref[0] = (blk_ref[...] - lse).astype(blank_ref.dtype)
         label_ref[0] = (lab_ref[...] - lse).astype(label_ref.dtype)
+        lse_ref[0] = lse.astype(lse_ref.dtype)
 
 
 def rnnt_joint_fused(
-    enc_proj: jnp.ndarray,      # (B, T, J)  enc @ W_enc
-    pred_proj: jnp.ndarray,     # (B, U1, J) pred @ W_pred
-    w_out: jnp.ndarray,         # (J, V)
-    bias: jnp.ndarray,          # (V,)
-    labels: jnp.ndarray,        # (B, U1) int32 (labels[:, -1] unused)
+    enc_proj: jnp.ndarray,  # (B, T, J)  enc @ W_enc
+    pred_proj: jnp.ndarray,  # (B, U1, J) pred @ W_pred
+    w_out: jnp.ndarray,  # (J, V)
+    bias: jnp.ndarray,  # (V,)
+    labels: jnp.ndarray,  # (B, U1) int32 (labels[:, -1] unused)
     *,
     tq: int = 16,
     tu: int = 8,
     tv: int = 512,
     interpret: bool = False,
+    return_lse: bool = False,
 ):
-    """Returns (blank_lp, label_lp): (B, T, U1) log-probs."""
+    """Returns (blank_lp, label_lp): (B, T, U1) log-probs.
+
+    With ``return_lse`` also returns the per-lattice-point log-sum-exp
+    (B, T, U1) — the backward kernels' recompute anchor (they rebuild
+    softmax probabilities from the saved lse without a second max
+    pass over the vocab axis)."""
     B, T, J = enc_proj.shape
     U1 = pred_proj.shape[1]
     V = w_out.shape[1]
@@ -104,7 +111,7 @@ def rnnt_joint_fused(
 
     bias2d = bias.reshape(1, V)
     grid = (B, T // tq, U1 // tu, n_v)
-    blank, label = pl.pallas_call(
+    blank, label, lse = pl.pallas_call(
         functools.partial(_kernel, tv=tv, n_v=n_v),
         grid=grid,
         in_specs=[
@@ -117,8 +124,10 @@ def rnnt_joint_fused(
         out_specs=[
             pl.BlockSpec((1, tq, tu), lambda b, ti, ui, vi: (b, ti, ui)),
             pl.BlockSpec((1, tq, tu), lambda b, ti, ui, vi: (b, ti, ui)),
+            pl.BlockSpec((1, tq, tu), lambda b, ti, ui, vi: (b, ti, ui)),
         ],
         out_shape=[
+            jax.ShapeDtypeStruct((B, T, U1), jnp.float32),
             jax.ShapeDtypeStruct((B, T, U1), jnp.float32),
             jax.ShapeDtypeStruct((B, T, U1), jnp.float32),
         ],
@@ -131,4 +140,195 @@ def rnnt_joint_fused(
         ],
         interpret=interpret,
     )(enc_proj, pred_proj, w_out, bias2d, labels.astype(jnp.int32))
+    if return_lse:
+        return blank, label, lse
     return blank, label
+
+
+def _dlogits(h, wo_ref, b_ref, lse, dbl, dlb, lbl, vi, tv):
+    """Softmax-cotangent slab shared by both backward kernels.
+
+    dlogits_v = dblank * [v == 0] + dlabel * [v == labels[u]]
+              - (dblank + dlabel) * p_v,     p_v = exp(logits_v - lse)
+
+    The deltas are built as iota one-hots against the slab-local column
+    index, so slabs not containing the blank (col 0) or the label column
+    contribute only the -p_v term."""
+    tq, tu = h.shape[0], h.shape[1]
+    wo = wo_ref[...].astype(jnp.float32)  # (J, tv)
+    logits = jax.lax.dot_general(
+        h.reshape(-1, h.shape[-1]), wo,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(tq, tu, tv) + b_ref[...].astype(jnp.float32)
+    p = jnp.exp(logits - lse[..., None])  # (tq, tu, tv)
+
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tu, tv), 1)
+    blank_oh = (iota == -vi * tv).astype(jnp.float32)  # col 0, slab 0
+    label_oh = (iota == (lbl - vi * tv)[:, None]).astype(jnp.float32)
+    d = (-(dbl + dlb)[..., None] * p
+         + dbl[..., None] * blank_oh[None]
+         + dlb[..., None] * label_oh[None])  # (tq, tu, tv)
+    return d
+
+
+def _bwd_eg_kernel(e_ref, g_ref, wo_ref, b_ref, lbl_ref, lse_ref,
+                   dbl_ref, dlb_ref,
+                   de_ref, dgp_ref,
+                   h_ref, dh_ref, *, tv: int, n_v: int):
+    """Backward wrt the encoder/prediction projections.
+
+    Grid (B, T/tq, U1/tu, V/tv), vocab innermost: dh accumulates over
+    vocab slabs in VMEM scratch; at the last slab the tanh backward
+    turns it into dpre, which folds into the (b, ti)-resident de block
+    (accumulated across the whole U axis while the block stays in VMEM)
+    and the per-(ti, ui) dg partial (summed over T outside — the dg
+    output block leaves residency between ti revisits, so in-kernel
+    accumulation over T would be unsound)."""
+    ui = pl.program_id(2)
+    vi = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(ui == 0, vi == 0))
+    def _zero_de():
+        de_ref[...] = jnp.zeros_like(de_ref)
+
+    @pl.when(vi == 0)
+    def _init():
+        h_ref[...] = jnp.tanh(
+            e_ref[0].astype(jnp.float32)[:, None, :]
+            + g_ref[0].astype(jnp.float32)[None, :, :])
+        dh_ref[...] = jnp.zeros_like(dh_ref)
+
+    h = h_ref[...]  # (tq, tu, J)
+    d = _dlogits(h, wo_ref, b_ref, lse_ref[0],
+                 dbl_ref[0], dlb_ref[0], lbl_ref[0], vi, tv)
+    dh_ref[...] += jax.lax.dot_general(
+        d.reshape(-1, tv), wo_ref[...].astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(h.shape)
+
+    @pl.when(vi == n_v - 1)
+    def _finalize():
+        dpre = dh_ref[...] * (1.0 - h * h)  # (tq, tu, J)
+        de_ref[0] += jnp.sum(dpre, axis=1)  # (tq, J)
+        dgp_ref[0, 0] = jnp.sum(dpre, axis=0)  # (tu, J)
+
+
+def _bwd_w_kernel(e_ref, g_ref, wo_ref, b_ref, lbl_ref, lse_ref,
+                  dbl_ref, dlb_ref,
+                  dw_ref, db_ref, *, tv: int):
+    """Backward wrt the output projection / bias.
+
+    Grid (V/tv, B, T/tq, U1/tu), vocab OUTERMOST: the (J, tv) dW slab
+    and (1, tv) db slab stay VMEM-resident while the whole (b, t, u)
+    lattice streams past, so each vocab slab is accumulated exactly once
+    with no HBM-revisit hazard (the mirror of the eg-kernel's ordering,
+    which must keep vocab innermost for the lse recompute)."""
+    bi = pl.program_id(1)
+    ti = pl.program_id(2)
+    ui = pl.program_id(3)
+    vi = pl.program_id(0)
+
+    @pl.when(jnp.logical_and(bi == 0, jnp.logical_and(ti == 0, ui == 0)))
+    def _zero():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    h = jnp.tanh(
+        e_ref[0].astype(jnp.float32)[:, None, :]
+        + g_ref[0].astype(jnp.float32)[None, :, :])  # (tq, tu, J)
+    d = _dlogits(h, wo_ref, b_ref, lse_ref[0],
+                 dbl_ref[0], dlb_ref[0], lbl_ref[0], vi, tv)
+    dw_ref[...] += jax.lax.dot_general(
+        h.reshape(-1, h.shape[-1]), d.reshape(-1, tv),
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (J, tv)
+    db_ref[0] += jnp.sum(d, axis=(0, 1))  # (tv,)
+
+
+def rnnt_joint_bwd_fused(
+    enc_proj: jnp.ndarray,  # (B, T, J)
+    pred_proj: jnp.ndarray,  # (B, U1, J)
+    w_out: jnp.ndarray,  # (J, V)
+    bias: jnp.ndarray,  # (V,)
+    labels: jnp.ndarray,  # (B, U1) int32
+    lse: jnp.ndarray,  # (B, T, U1) saved by the forward
+    dblank: jnp.ndarray,  # (B, T, U1) cotangent of blank_lp
+    dlabel: jnp.ndarray,  # (B, T, U1) cotangent of label_lp
+    *,
+    tq: int = 16,
+    tu: int = 8,
+    tv: int = 512,
+    interpret: bool = False,
+):
+    """Fused-backward of :func:`rnnt_joint_fused`.
+
+    Recomputes the joint tile (h = tanh(e + g), slab logits) in VMEM
+    with the same (tq, tu, tv) bucketing as the forward — the (B, T,
+    U1, V) logits tensor never exists in HBM in either direction.
+    Returns (d_enc_proj, d_pred_proj, d_w_out, d_bias) in float32."""
+    B, T, J = enc_proj.shape
+    U1 = pred_proj.shape[1]
+    V = w_out.shape[1]
+    tq, tu, tv = min(tq, T), min(tu, U1), min(tv, V)
+    assert T % tq == 0 and U1 % tu == 0 and V % tv == 0, (T, tq, U1, tu, V, tv)
+    n_v = V // tv
+
+    bias2d = bias.reshape(1, V)
+    labels = labels.astype(jnp.int32)
+
+    de, dg_part = pl.pallas_call(
+        functools.partial(_bwd_eg_kernel, tv=tv, n_v=n_v),
+        grid=(B, T // tq, U1 // tu, n_v),
+        in_specs=[
+            pl.BlockSpec((1, tq, J), lambda b, ti, ui, vi: (b, ti, 0)),
+            pl.BlockSpec((1, tu, J), lambda b, ti, ui, vi: (b, ui, 0)),
+            pl.BlockSpec((J, tv), lambda b, ti, ui, vi: (0, vi)),
+            pl.BlockSpec((1, tv), lambda b, ti, ui, vi: (0, vi)),
+            pl.BlockSpec((1, tu), lambda b, ti, ui, vi: (b, ui)),
+            pl.BlockSpec((1, tq, tu), lambda b, ti, ui, vi: (b, ti, ui)),
+            pl.BlockSpec((1, tq, tu), lambda b, ti, ui, vi: (b, ti, ui)),
+            pl.BlockSpec((1, tq, tu), lambda b, ti, ui, vi: (b, ti, ui)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tq, J), lambda b, ti, ui, vi: (b, ti, 0)),
+            pl.BlockSpec((1, 1, tu, J), lambda b, ti, ui, vi: (b, ti, ui, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, J), jnp.float32),
+            jax.ShapeDtypeStruct((B, T // tq, U1, J), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, tu, J), jnp.float32),
+            pltpu.VMEM((tq, tu, J), jnp.float32),
+        ],
+        interpret=interpret,
+    )(enc_proj, pred_proj, w_out, bias2d, labels, lse, dblank, dlabel)
+    dg = jnp.sum(dg_part, axis=1)  # (B, U1, J)
+
+    dw, db2d = pl.pallas_call(
+        functools.partial(_bwd_w_kernel, tv=tv),
+        grid=(n_v, B, T // tq, U1 // tu),
+        in_specs=[
+            pl.BlockSpec((1, tq, J), lambda vi, b, ti, ui: (b, ti, 0)),
+            pl.BlockSpec((1, tu, J), lambda vi, b, ti, ui: (b, ui, 0)),
+            pl.BlockSpec((J, tv), lambda vi, b, ti, ui: (0, vi)),
+            pl.BlockSpec((1, tv), lambda vi, b, ti, ui: (0, vi)),
+            pl.BlockSpec((1, tu), lambda vi, b, ti, ui: (b, ui)),
+            pl.BlockSpec((1, tq, tu), lambda vi, b, ti, ui: (b, ti, ui)),
+            pl.BlockSpec((1, tq, tu), lambda vi, b, ti, ui: (b, ti, ui)),
+            pl.BlockSpec((1, tq, tu), lambda vi, b, ti, ui: (b, ti, ui)),
+        ],
+        out_specs=[
+            pl.BlockSpec((J, tv), lambda vi, b, ti, ui: (0, vi)),
+            pl.BlockSpec((1, tv), lambda vi, b, ti, ui: (0, vi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((J, V), jnp.float32),
+            jax.ShapeDtypeStruct((1, V), jnp.float32),
+        ],
+        interpret=interpret,
+    )(enc_proj, pred_proj, w_out, bias2d, labels, lse, dblank, dlabel)
+    return de, dg, dw, db2d.reshape(V)

@@ -239,6 +239,101 @@ def quantize_pack4_pallas(x, scale, u, *, tile: int = _TILE, interpret: bool = F
     return out[0, :nb]
 
 
+# ------------------------------------------- keyed (in-kernel PRNG) variants
+# Same fused quantize->pack math, but the stochastic-rounding uniforms
+# are *generated inside the kernel* from the leaf's threefry key words +
+# each element's flat position (repro.kernels.ref.threefry_random_bits_at
+# — plain uint32 jnp ops, so the identical 20-round hash runs on every
+# backend). The (n,)-sized uniform field never exists in HBM, and the
+# draw equals jax.random.uniform(key, (n,)) bit for bit, which keeps the
+# packed plane's tolerance-free parity with the historical streamed-field
+# path (the PR 5 contract).
+
+
+def _iota_pos(tile: int):
+    pid = pl.program_id(0)
+    base = (pid * tile).astype(jnp.uint32)
+    return base + jax.lax.broadcasted_iota(jnp.uint32, (1, tile), 1)
+
+
+def _keyed_uniform(k_ref, pos, n: int):
+    k0 = k_ref[0, 0]
+    k1 = k_ref[0, 1]
+    return ref.bits_to_uniform(ref.threefry_random_bits_at(k0, k1, pos, n))
+
+
+def _quantize_keyed_kernel(levels: float, n: int, tile: int, x_ref, s_ref, k_ref, out_ref):
+    u = _keyed_uniform(k_ref, _iota_pos(tile), n)
+    y = jnp.clip(x_ref[...] / s_ref[0, 0], -levels, levels)
+    lo = jnp.floor(y)
+    out_ref[...] = (lo + (u < (y - lo)).astype(jnp.float32)).astype(jnp.int8)
+
+
+def _quantize_pack4_keyed_kernel(n: int, tile: int, xe_ref, xo_ref, s_ref, k_ref, out_ref):
+    pair = _iota_pos(tile)
+    ue = _keyed_uniform(k_ref, pair * jnp.uint32(2), n)
+    uo = _keyed_uniform(k_ref, pair * jnp.uint32(2) + jnp.uint32(1), n)
+    s = s_ref[0, 0]
+
+    def q(x_ref, u):
+        y = jnp.clip(x_ref[...] / s, -7.0, 7.0)
+        lo = jnp.floor(y)
+        return (lo + (u < (y - lo)).astype(jnp.float32)).astype(jnp.int8)
+
+    out_ref[...] = _pack_byte(q(xe_ref, ue), q(xo_ref, uo))
+
+
+def quantize_with_scale_keyed_pallas(
+    x, scale, key_data, bits: int, *, tile: int = _TILE, interpret: bool = False
+):
+    """x: (n,) f32 + scale () + key_data (2,) uint32 -> (n,) int8 codes,
+    stochastic-rounded against in-kernel threefry draws (positionally
+    identical to streaming jax.random.uniform(key, (n,)) in)."""
+    levels = 2.0 ** (bits - 1) - 1.0
+    n = x.shape[0]
+    xp = _pad_to(x, tile)[None, :]
+    npad = xp.shape[1]
+    spec = pl.BlockSpec((1, tile), lambda i: (0, i))
+    sspec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    kspec = pl.BlockSpec((1, 2), lambda i: (0, 0))
+    out = pl.pallas_call(
+        functools.partial(_quantize_keyed_kernel, levels, n, tile),
+        grid=(npad // tile,),
+        in_specs=[spec, sspec, kspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((1, npad), jnp.int8),
+        interpret=interpret,
+    )(xp, scale.reshape(1, 1), key_data.astype(jnp.uint32).reshape(1, 2))
+    return out[0, :n]
+
+
+def quantize_pack4_keyed_pallas(x, scale, key_data, *, tile: int = _TILE, interpret: bool = False):
+    """Fully fused keyed int4 client kernel: quantize, stochastic-round
+    from in-kernel PRNG, and nibble-pack in one VMEM pass — neither the
+    codes nor the uniform field ever land in HBM."""
+    n = x.shape[0]
+    nb = (n + 1) // 2
+
+    def pairs(a):
+        p = _pad_to(a, 2 * tile).reshape(-1, 2)
+        return p[:, 0][None, :], p[:, 1][None, :]
+
+    xe, xo = pairs(x)
+    nbp = xe.shape[1]
+    spec = pl.BlockSpec((1, tile), lambda i: (0, i))
+    sspec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    kspec = pl.BlockSpec((1, 2), lambda i: (0, 0))
+    out = pl.pallas_call(
+        functools.partial(_quantize_pack4_keyed_kernel, n, tile),
+        grid=(nbp // tile,),
+        in_specs=[spec, spec, sspec, kspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((1, nbp), jnp.int8),
+        interpret=interpret,
+    )(xe, xo, scale.reshape(1, 1), key_data.astype(jnp.uint32).reshape(1, 2))
+    return out[0, :nb]
+
+
 # ------------------------------------------------------------- topk unpack
 
 
@@ -309,6 +404,57 @@ def topk_unpack_segmented_pallas(values, idx, n: int, *, seg: int = 2048, interp
             pl.BlockSpec((1, nseg + 1), lambda i: (0, 0)),
             pl.BlockSpec((1, k), lambda i: (0, 0)),
             pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, seg), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, npad), jnp.float32),
+        interpret=interpret,
+    )(bounds[None, :], sv[None, :], si[None, :])
+    return out[0, :n]
+
+
+# -------------------------------------------------------- topk scatter-add
+
+
+def _topk_scatter_add_seg_kernel(seg: int, b_ref, v_ref, i_ref, out_ref):
+    """Segmented weighted scatter-ADD: like the segmented unpack, each
+    grid cell owns one seg-wide output window and walks only its own
+    contiguous (sorted-by-index) payload slice — but read-add-store, so
+    duplicate indices (the same coordinate picked by several clients)
+    accumulate instead of overwriting. The serial walk within a segment
+    is what makes the accumulation race-free."""
+    pid = pl.program_id(0)
+    base = pid * seg
+    start = pl.load(b_ref, (slice(0, 1), pl.ds(pid, 1)))[0, 0]
+    end = pl.load(b_ref, (slice(0, 1), pl.ds(pid + 1, 1)))[0, 0]
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+    def body(j, carry):
+        idx = pl.load(i_ref, (slice(0, 1), pl.ds(j, 1)))[0, 0]
+        val = pl.load(v_ref, (slice(0, 1), pl.ds(j, 1)))
+        cur = pl.load(out_ref, (slice(0, 1), pl.ds(idx - base, 1)))
+        pl.store(out_ref, (slice(0, 1), pl.ds(idx - base, 1)), cur + val)
+        return carry
+
+    jax.lax.fori_loop(start, end, body, 0)
+
+
+def topk_scatter_add_pallas(values, idx, n: int, *, seg: int = 2048, interpret: bool = False):
+    """(m,) f32 pre-weighted values + (m,) int32 flat indices (possibly
+    duplicated across clients) -> dense (n,) f32 accumulated sum."""
+    m = values.shape[0]
+    seg = min(seg, max(n, 1))
+    npad = n + (-n) % seg
+    nseg = npad // seg
+    order = jnp.argsort(idx)
+    sv, si = values[order], idx[order]
+    bounds = jnp.searchsorted(si, jnp.arange(nseg + 1, dtype=jnp.int32) * seg).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_topk_scatter_add_seg_kernel, seg),
+        grid=(nseg,),
+        in_specs=[
+            pl.BlockSpec((1, nseg + 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, seg), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, npad), jnp.float32),
@@ -407,4 +553,59 @@ def quantize_pack(x, scale, u, bits: int):
         return quantize_pack4_pallas(x, jnp.asarray(scale, jnp.float32), u, interpret=interpret)
     return quantize_with_scale_pallas(
         x, jnp.asarray(scale, jnp.float32), u, bits, interpret=interpret
+    )
+
+
+def quantize_with_scale_keyed(x, scale, key_data, bits: int):
+    """Keyed twin of ``quantize_with_scale``: the rounding uniforms come
+    from the in-kernel threefry hash of ``key_data`` ((2,) uint32 words,
+    i.e. the per-leaf fold_in key) instead of a streamed field. Codes
+    are bit-identical to quantize_with_scale(x, scale,
+    jax.random.uniform(key, x.shape), bits) on every backend."""
+    use_ref, interpret = _dispatch()
+    n = int(jnp.size(x))
+    if use_ref:
+        levels = 2.0 ** (bits - 1) - 1.0
+        u = ref.threefry_uniform_ref(key_data, n).reshape(jnp.shape(x))
+        return ref.quantize_codes_with_scale_ref(x, scale, u, levels)
+    out = quantize_with_scale_keyed_pallas(
+        x.reshape(-1), jnp.asarray(scale, jnp.float32), key_data, bits, interpret=interpret
+    )
+    return out.reshape(jnp.shape(x))
+
+
+def quantize_pack_keyed(x, scale, key_data, bits: int):
+    """Keyed twin of ``quantize_pack``: fused quantize -> stochastic
+    round (in-kernel PRNG) -> pack. Neither the uniform field nor (for
+    int4) the codes touch HBM; the wire bytes equal quantize_pack with
+    the streamed jax.random.uniform(key, (n,)) field bit for bit."""
+    use_ref, interpret = _dispatch()
+    n = x.shape[0]
+    if use_ref:
+        u = ref.threefry_uniform_ref(key_data, n)
+        return ref.quantize_pack_ref(x, scale, u, bits)
+    if bits == 4:
+        return quantize_pack4_keyed_pallas(
+            x, jnp.asarray(scale, jnp.float32), key_data, interpret=interpret
+        )
+    return quantize_with_scale_keyed_pallas(
+        x, jnp.asarray(scale, jnp.float32), key_data, bits, interpret=interpret
+    )
+
+
+def topk_scatter_add(values, idx, weights, n: int):
+    """Aggregate stacked top-k payloads in the code domain: values
+    (K, k) f32, idx (K, k) int32, weights (K,) -> dense (n,) f32
+    weighted sum. Duplicate coordinates accumulate. Dispatch follows the
+    same registry knobs as ``topk_unpack`` (the segmented kernel shares
+    its segment-size crossover)."""
+    from repro.profile.tuner import get_knob
+
+    use_ref, interpret = _dispatch()
+    if use_ref:
+        return ref.topk_scatter_add_ref(values, idx, weights, n)
+    flat_vals = (weights[:, None] * values.astype(jnp.float32)).reshape(-1)
+    flat_idx = idx.reshape(-1)
+    return topk_scatter_add_pallas(
+        flat_vals, flat_idx, n, seg=int(get_knob("wire_pack.topk_seg_size")), interpret=interpret
     )

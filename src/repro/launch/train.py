@@ -192,8 +192,24 @@ def run_federated(
     sim_times = []
     server_steps = []
     staleness = []
-    batches = (PrefetchIterator(host_batches(), depth=2) if prefetch
-               else map(lambda b: jax.tree.map(jnp.asarray, b), host_batches()))
+    # per-shard prefetch: with a client mesh the worker thread puts each
+    # round batch pre-split over the ``clients`` axis, so the sharded
+    # round step never stalls on a consumer-thread reshard; depth comes
+    # from the tuning registry (``prefetch.depth``)
+    batch_sharding = None
+    if client_sharding is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        batch_sharding = NamedSharding(client_sharding.mesh,
+                                       PartitionSpec(client_sharding.axis))
+    if prefetch:
+        from repro.profile.tuner import get_knob
+
+        batches = PrefetchIterator(host_batches(),
+                                   depth=int(get_knob("prefetch.depth")),
+                                   sharding=batch_sharding)
+    else:
+        batches = map(lambda b: jax.tree.map(jnp.asarray, b), host_batches())
     try:
         for r, batch in enumerate(batches):
             # float() blocks, so the section covers dispatch + device

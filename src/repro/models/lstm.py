@@ -74,19 +74,54 @@ def lstm_cell_step(p, x, h, c):
     return lstm_gates(gates, c)
 
 
+def _scan_kernel_eligible(S: int, d_h: int, chunk: int) -> bool:
+    """Static shape gate for the full-scan Pallas kernel, resolved
+    against the tuning registry: lane-tileable hidden size, sequence
+    long enough that the per-step w_hh refetch dominates, and the
+    resident (H x 4H) weight within the VMEM budget. ``chunk`` requests
+    gradient-checkpointed scanning the kernel does not implement, so it
+    always keeps lax.scan."""
+    from repro.profile.tuner import get_knob
+
+    mode = get_knob("lstm.scan_dispatch")
+    if mode == "ref" or chunk:
+        return False
+    if d_h % 128 != 0:
+        return False
+    whh_mb = d_h * 4 * d_h * 4 / 2**20
+    if S < int(get_knob("lstm.scan_min_seq")) or whh_mb > float(get_knob("lstm.scan_max_vmem_mb")):
+        return False
+    return mode == "pallas" or jax.default_backend() != "cpu"
+
+
 def lstm_layer(p, xs, h0=None, c0=None, unroll: int = 1, chunk: int = 0):
     """xs: (B, S, d_in) -> (B, S, d_hidden), (h, c) final.
 
     ``unroll`` replicates the step body inside each while iteration so
     the recurrent weight matrix is fetched once per ``unroll`` steps
-    (the §Perf weight-amortization lever; on TPU the Pallas kernel
-    keeps it VMEM-resident outright)."""
+    (the §Perf weight-amortization lever). On TPU, eligible shapes
+    dispatch the full-scan Pallas kernel instead (``lstm_scan_fused``):
+    the whole sequence runs in ONE pallas_call whose w_hh block is
+    fetched once and stays VMEM-resident for all S steps, with a fused
+    reversed-scan custom-VJP backward that recomputes the gate
+    preactivations in VMEM (thresholds in the tuning registry;
+    `--autotune lstm` re-measures them)."""
     B, S, _ = xs.shape
     d_h = p["w_hh"].shape[0]
     h = jnp.zeros((B, d_h), xs.dtype) if h0 is None else h0
     c = jnp.zeros((B, d_h), jnp.float32) if c0 is None else c0
     # hoist the input matmul out of the scan (one big MXU matmul)
-    xg = xs @ p["w_ih"].astype(xs.dtype) + p["b"].astype(xs.dtype)    # (B, S, 4h)
+    xg = xs @ p["w_ih"].astype(xs.dtype) + p["b"].astype(xs.dtype)  # (B, S, 4h)
+
+    if _scan_kernel_eligible(S, d_h, chunk):
+        from repro.kernels.lstm_gates import lstm_scan_fused_vjp
+        from repro.profile.tuner import get_knob
+
+        interpret = get_knob("lstm.scan_dispatch") == "pallas" and jax.default_backend() == "cpu"
+        ys, hT, cT = lstm_scan_fused_vjp(
+            xg.swapaxes(0, 1), p["w_hh"], h, c.astype(jnp.float32), interpret=interpret
+        )
+        return ys.swapaxes(0, 1), (hT.astype(xs.dtype), cT)
 
     def step(carry, xg_t):
         h, c = carry
@@ -97,11 +132,9 @@ def lstm_layer(p, xs, h0=None, c0=None, unroll: int = 1, chunk: int = 0):
     if chunk:
         from repro.models.layers import chunked_scan
 
-        (h, c), ys = chunked_scan(step, (h, c), xg.swapaxes(0, 1),
-                                  chunk=chunk, unroll=unroll)
+        (h, c), ys = chunked_scan(step, (h, c), xg.swapaxes(0, 1), chunk=chunk, unroll=unroll)
     else:
-        (h, c), ys = jax.lax.scan(step, (h, c), xg.swapaxes(0, 1),
-                                  unroll=unroll)
+        (h, c), ys = jax.lax.scan(step, (h, c), xg.swapaxes(0, 1), unroll=unroll)
     return ys.swapaxes(0, 1), (h, c)
 
 

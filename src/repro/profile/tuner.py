@@ -72,6 +72,42 @@ KNOBS: dict[str, Knob] = {
         "(interpret mode on CPU — test/debug only).",
         choices=("auto", "pallas", "ref"),
     ),
+    "lstm.scan_dispatch": Knob(
+        "auto",
+        "Backend choice for the full-sequence Pallas LSTM scan kernel "
+        "(w_hh VMEM-resident across steps): 'auto' picks the kernel "
+        "off-CPU when the shape is eligible, the jnp lax.scan otherwise; "
+        "'ref' forces the jnp scan; 'pallas' forces the kernel "
+        "(interpret mode on CPU — test/debug only).",
+        choices=("auto", "pallas", "ref"),
+    ),
+    "lstm.scan_min_seq": Knob(
+        16,
+        "Sequence length at or above which the LSTM layer dispatches "
+        "the full-scan Pallas kernel; below it the per-step w_hh "
+        "refetch is too small to matter and lax.scan wins "
+        "(re-measure with --autotune lstm).",
+    ),
+    "lstm.scan_max_vmem_mb": Knob(
+        8,
+        "VMEM budget (MB) for the scan kernel's resident w_hh block; "
+        "hidden sizes whose (H x 4H) fp32 weight exceeds it fall back "
+        "to lax.scan.",
+    ),
+    "rnnt.joint_bwd_dispatch": Knob(
+        "auto",
+        "Backend choice for the fused RNN-T joint backward: 'auto' "
+        "picks the Pallas recompute-in-VMEM backward off-CPU and the "
+        "U-chunked jnp rematerialization on CPU; 'ref' forces the "
+        "chunked jnp backward; 'pallas' forces the kernel (interpret "
+        "mode on CPU — test/debug only).",
+        choices=("auto", "pallas", "ref"),
+    ),
+    "prefetch.depth": Knob(
+        2,
+        "Queue depth of the host->device prefetch pipeline "
+        "(data/prefetch.PrefetchIterator) used by launch/train.",
+    ),
     "bench.fed_reps": Knob(
         5,
         "Interleaved order-rotating cycles for the fed_round bench "
@@ -296,8 +332,75 @@ def autotune_topk_dispatch(
     return chosen
 
 
+def autotune_lstm_scan(
+    reg: Optional[TuningRegistry] = None,
+    seq_lens=(4, 8, 16, 32, 64, 128),
+    batch: int = 8,
+    hidden: int = 128,
+    reps: int = 5,
+    persist: bool = True,
+    log=print,
+) -> int:
+    """Measure the full-scan Pallas LSTM kernel against the jnp
+    ``lax.scan`` over ``seq_lens`` (forward + backward, the training
+    shape) and persist the first length where the kernel wins as
+    ``lstm.scan_min_seq``.
+
+    On CPU the kernel runs in interpret mode, so the crossover
+    validates the machinery rather than the production dispatch (CPU
+    dispatch always takes lax.scan); on TPU this is the real
+    w_hh-residency threshold for the local chip."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.lstm_gates import lstm_scan_fused_vjp
+    from repro.models.lstm import lstm_gates
+    from repro.profile.trace import measure_interleaved_min
+
+    reg = reg or registry()
+    interpret = jax.default_backend() == "cpu"
+    key = jax.random.PRNGKey(0)
+    w_hh = jax.random.normal(key, (hidden, 4 * hidden), jnp.float32) * 0.1
+    crossover = None
+    for S in seq_lens:
+        xg = jax.random.normal(key, (S, batch, 4 * hidden), jnp.float32)
+        h0 = jnp.zeros((batch, hidden), jnp.float32)
+        c0 = jnp.zeros((batch, hidden), jnp.float32)
+
+        def scan_loss(xg, w):
+            def step(carry, xg_t):
+                h, c = carry
+                h, c = lstm_gates(xg_t + h @ w, c)
+                return (h, c), h
+
+            _, ys = jax.lax.scan(step, (h0, c0), xg)
+            return jnp.sum(ys * ys)
+
+        def kernel_loss(xg, w):
+            ys, _, _ = lstm_scan_fused_vjp(xg, w, h0, c0, interpret=interpret)
+            return jnp.sum(ys * ys)
+
+        scan_g = jax.jit(jax.grad(scan_loss, argnums=(0, 1)))
+        kern_g = jax.jit(jax.grad(kernel_loss, argnums=(0, 1)))
+        t = measure_interleaved_min(
+            {"scan": lambda: scan_g(xg, w_hh), "kernel": lambda: kern_g(xg, w_hh)},
+            reps=reps,
+        )
+        log(
+            f"[tuner] lstm_scan S={S}: lax.scan {t['scan'] * 1e6:.1f}us "
+            f"kernel {t['kernel'] * 1e6:.1f}us"
+        )
+        if crossover is None and t["kernel"] < t["scan"]:
+            crossover = S
+    chosen = crossover if crossover is not None else max(seq_lens) * 2
+    reg.set_override("lstm.scan_min_seq", chosen, persist=persist)
+    log(f"[tuner] lstm.scan_min_seq <- {chosen} (device {reg.device_key})")
+    return chosen
+
+
 AUTOTUNERS: dict[str, Callable] = {
     "topk": autotune_topk_dispatch,
+    "lstm": autotune_lstm_scan,
 }
 
 

@@ -207,14 +207,20 @@ def _plane(plan):
 
 
 def test_fast_path_static_selection():
-    """The fast path is compile-time structure: quantizing planes under
-    the paper's weighted mean take it; anything needing per-client fp32
-    deltas (robust aggregators, EF residuals, delta adversaries) and
-    the fp32/topk planes keep the existing graph."""
+    """The fast path is compile-time structure: every compressing plane
+    under the paper's weighted mean takes it — int8/int4/topk, with or
+    without EF (PR 10: the residual update reads the transmitted codes
+    directly). Only robust aggregators, delta adversaries, and the fp32
+    plane keep the existing graph."""
     from repro.core.plan import CorruptionConfig
 
     on = [FederatedPlan(compression=CompressionConfig(kind="int8")),
           FederatedPlan(compression=CompressionConfig(kind="int4", packed=True)),
+          FederatedPlan(compression=CompressionConfig(kind="topk")),
+          FederatedPlan(compression=CompressionConfig(kind="int8",
+                                                      error_feedback=True)),
+          FederatedPlan(compression=CompressionConfig(kind="topk",
+                                                      error_feedback=True)),
           FederatedPlan(compression=CompressionConfig(kind="int8"),
                         corruption=CorruptionConfig(kind="label_shuffle",
                                                     rate=0.3))]
@@ -222,11 +228,8 @@ def test_fast_path_static_selection():
         assert _code_fast_path(_plane(plan)), plan
 
     off = [FederatedPlan(),
-           FederatedPlan(compression=CompressionConfig(kind="topk")),
            FederatedPlan(compression=CompressionConfig(kind="int8"),
                          aggregation=AggregatorConfig(name="trimmed_mean")),
-           FederatedPlan(compression=CompressionConfig(kind="int8",
-                                                       error_feedback=True)),
            FederatedPlan(compression=CompressionConfig(kind="int8"),
                          corruption=CorruptionConfig(kind="sign_flip",
                                                      rate=0.3))]
@@ -337,3 +340,212 @@ def test_sum_packed_codes_packed_int4_unpacks_first():
     packed = jnp.stack([ref.nibble_pack_ref(codes[i]) for i in range(3)])
     out = np.asarray(sum_packed_codes(cfg, packed, 9))
     np.testing.assert_array_equal(out, np.asarray(codes, np.int32).sum(0))
+
+
+# --------------------------------------------------- topk payload domain
+
+
+def test_topk_fast_path_matches_dense_weighted_mean():
+    """The payload scatter-add equals the slow path's weighted mean of
+    dense top-k trees (top-k transmits exact values, so only f32
+    summation order separates them)."""
+    from repro.core.compression import _topk_leaf
+
+    rng = np.random.default_rng(21)
+    K = 5
+    deltas = _tree(rng, K, [(57,), (9, 7), (1,)])
+    n_k = jnp.asarray([8.0, 2.0, 16.0, 1.0, 5.0])
+    pmask = jnp.ones((K,))
+    _, ckeys = _client_keys(4, K)
+    cfg = CompressionConfig(kind="topk", topk_frac=0.25)
+    fast = code_domain_aggregate(cfg, deltas, n_k, pmask, ckeys)
+    w = np.asarray(n_k, np.float64) / float(n_k.sum())
+    for name, a in fast.items():
+        dense = np.stack([np.asarray(_topk_leaf(deltas[name][k],
+                                                cfg.topk_frac), np.float64)
+                          for k in range(K)])
+        slow = np.tensordot(w, dense, axes=(0, 0))
+        np.testing.assert_allclose(np.asarray(a), slow.astype(np.float32),
+                                   rtol=1e-6, atol=1e-6, err_msg=name)
+
+
+def test_topk_fast_path_zero_weight_client_cancels():
+    """A dropped client (n_k = 0) contributes nothing to the payload
+    scatter even though its (huge) payload is present — mirrors the
+    slow path's weighted mean."""
+    K = 3
+    d = {"w": jnp.asarray(np.ones((K, 16), np.float32))}
+    d["w"] = d["w"].at[2].mul(1e6)
+    n_k = jnp.asarray([4.0, 4.0, 0.0])
+    pmask = jnp.asarray([1.0, 1.0, 0.0])
+    _, ckeys = _client_keys(2, K)
+    cfg = CompressionConfig(kind="topk", topk_frac=0.5)
+    out = np.asarray(code_domain_aggregate(cfg, d, n_k, pmask, ckeys)["w"])
+    assert np.abs(out).max() <= 1.0 + 1e-6
+
+
+# ------------------------------------------------- error feedback (PR 10)
+
+
+def _ef_case(seed, K, shapes, drop=None):
+    rng = np.random.default_rng(seed)
+    deltas = _tree(rng, K, shapes)
+    ef0 = jax.tree.map(lambda d: jnp.asarray(
+        rng.normal(size=d.shape) * 0.1, jnp.float32), deltas)
+    n_k = jnp.asarray(rng.integers(1, 9, (K,)), jnp.float32)
+    pmask = np.ones((K,), np.float32)
+    if drop is not None:
+        pmask[drop] = 0.0
+        n_k = n_k.at[drop].set(0.0)
+    _, ckeys = _client_keys(seed, K)
+    return deltas, ef0, n_k, jnp.asarray(pmask), ckeys
+
+
+@pytest.mark.parametrize("kind,packed", [("int8", False), ("int4", False),
+                                         ("int4", True)])
+def test_ef_intn_residual_is_transmitted_error(kind, packed):
+    """new_ef = (delta + old_ef) - codes * shared_scale, with the codes
+    recomputed from the same keys/scale — bitwise; a dropped client
+    keeps its old residual bitwise."""
+    from repro.core.compression import code_domain_aggregate_ef
+
+    deltas, ef0, n_k, pmask, ckeys = _ef_case(6, 4, [(40,), (6, 5)], drop=1)
+    cfg = CompressionConfig(kind=kind, packed=packed, error_feedback=True)
+    bits = _BITS[kind]
+    wbar, ef1 = code_domain_aggregate_ef(cfg, deltas, n_k, pmask, ckeys, ef0)
+    for li, name in enumerate(deltas):
+        target = deltas[name] + ef0[name]
+        scale = shared_leaf_scale(target, pmask, bits)
+        lkeys = fastpath_leaf_keys(ckeys, li)
+        K = target.shape[0]
+        flat = target.reshape(K, -1)
+        codes = jnp.stack([
+            quantize_codes_with_scale(flat[k], lkeys[k], scale, bits,
+                                      cfg.stochastic) for k in range(K)])
+        resid = (flat - codes.astype(jnp.float32) * scale).reshape(target.shape)
+        expect = np.where(np.asarray(pmask).reshape((K,) + (1,) * (target.ndim - 1)) > 0,
+                          np.asarray(resid), np.asarray(ef0[name]))
+        np.testing.assert_array_equal(np.asarray(ef1[name]), expect,
+                                      err_msg=name)
+        # dropped client: old residual untouched, bitwise
+        np.testing.assert_array_equal(np.asarray(ef1[name][1]),
+                                      np.asarray(ef0[name][1]))
+
+
+def test_ef_topk_residual_zeroes_selected_coordinates():
+    """top-k sends selected coordinates exactly, so the residual is the
+    target with exactly those coordinates zeroed — nothing else moves."""
+    from repro.core.compression import code_domain_aggregate_ef, topk_select
+
+    deltas, ef0, n_k, pmask, ckeys = _ef_case(7, 3, [(60,)])
+    cfg = CompressionConfig(kind="topk", topk_frac=0.2, error_feedback=True)
+    _, ef1 = code_domain_aggregate_ef(cfg, deltas, n_k, pmask, ckeys, ef0)
+    target = np.asarray(deltas["l0"] + ef0["l0"])
+    got = np.asarray(ef1["l0"])
+    for k in range(3):
+        _, idx = topk_select(jnp.asarray(target[k]), cfg.topk_frac)
+        sel = np.zeros(target.shape[1], bool)
+        sel[np.asarray(idx)] = True
+        np.testing.assert_array_equal(got[k][sel], 0.0)
+        np.testing.assert_array_equal(got[k][~sel], target[k][~sel])
+
+
+def test_ef_with_zero_residual_matches_plain_aggregate():
+    """Round 0 (ef = 0): the EF twin must reproduce the plain fast path
+    bitwise — same target, same negotiated scale, same keys."""
+    from repro.core.compression import code_domain_aggregate_ef
+
+    for kind in ("int8", "int4", "topk"):
+        deltas, _, n_k, pmask, ckeys = _ef_case(8, 4, [(33,), (8, 4)])
+        ef0 = jax.tree.map(lambda d: jnp.zeros_like(d), deltas)
+        cfg = CompressionConfig(kind=kind, error_feedback=True)
+        wbar_ef, _ = code_domain_aggregate_ef(cfg, deltas, n_k, pmask,
+                                              ckeys, ef0)
+        wbar = code_domain_aggregate(cfg, deltas, n_k, pmask, ckeys)
+        for a, b in zip(jax.tree.leaves(wbar_ef), jax.tree.leaves(wbar)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("kind,frac", [("int8", None), ("topk", 0.25),
+                                       ("int4", None)])
+def test_ef_engine_trains_and_caps_residual(kind, frac):
+    """Engine-level EF: the fast path trains through the residual state
+    and the residual stays bounded by one grid step (intN) / the dropped
+    mass (topk) — EF21's contraction, not a drifting accumulator."""
+    loss_fn, make_batch = _round_pieces()
+    kw = {"kind": kind, "error_feedback": True}
+    if frac is not None:
+        kw["topk_frac"] = frac
+    plan = FederatedPlan(clients_per_round=4, client_lr=0.1,
+                         server_optimizer="sgd", server_lr=1.0,
+                         compression=CompressionConfig(**kw))
+    assert _code_fast_path(_plane(plan))
+    step = jax.jit(make_round_step(loss_fn, plan, jax.random.PRNGKey(0)))
+    state = init_server_state(plan, {"w": jnp.zeros((4, 2))})
+    assert state.ef is not None
+    losses = []
+    for r in range(25):
+        state, m = step(state, make_batch(4, 2, 8, seed=r))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < 0.1 * losses[0], losses
+    assert np.isfinite(np.asarray(state.ef["w"])).all()
+
+
+def test_topk_ef_beats_plain_topk_at_aggressive_sparsity():
+    """The reason EF exists (paper §compression): at harsh sparsity the
+    residual recovers the dropped mass over rounds."""
+    loss_fn, make_batch = _round_pieces()
+
+    def run(ef):
+        plan = FederatedPlan(clients_per_round=4, client_lr=0.1,
+                             server_optimizer="sgd", server_lr=1.0,
+                             compression=CompressionConfig(
+                                 kind="topk", topk_frac=0.13,
+                                 error_feedback=ef))
+        step = jax.jit(make_round_step(loss_fn, plan, jax.random.PRNGKey(0)))
+        state = init_server_state(plan, {"w": jnp.zeros((4, 2))})
+        for r in range(30):
+            state, m = step(state, make_batch(4, 2, 8, seed=r))
+        return float(m["loss"])
+
+    assert run(True) < run(False)
+
+
+# ---------------------------------------- fast vs slow path, engine level
+
+
+def test_topk_fast_vs_slow_engine_wire_bytes_and_state(monkeypatch):
+    """Force the generic (slow) graph and compare: wire metrics must be
+    BYTE-identical (accounting is static), per-round losses identical
+    (client compute untouched), and the trained state equal to f32
+    reduction order."""
+    import repro.core.fedavg as fedavg_mod
+
+    loss_fn, make_batch = _round_pieces()
+    plan = FederatedPlan(clients_per_round=4, client_lr=0.1,
+                         server_optimizer="sgd", server_lr=1.0,
+                         compression=CompressionConfig(kind="topk",
+                                                       topk_frac=0.25))
+
+    def run(force_slow):
+        if force_slow:
+            monkeypatch.setattr(fedavg_mod, "_code_fast_path",
+                                lambda plane: False)
+        else:
+            monkeypatch.undo()
+        step = jax.jit(make_round_step(loss_fn, plan, jax.random.PRNGKey(0)))
+        state = init_server_state(plan, {"w": jnp.zeros((4, 2))})
+        losses, wire = [], []
+        for r in range(5):
+            state, m = step(state, make_batch(4, 2, 8, seed=r))
+            losses.append(float(m["loss"]))
+            wire.append((int(m["uplink_bytes"]), int(m["downlink_bytes"])))
+        return state, losses, wire
+
+    s_fast, l_fast, w_fast = run(False)
+    s_slow, l_slow, w_slow = run(True)
+    assert w_fast == w_slow              # byte-identical wire accounting
+    assert l_fast[0] == l_slow[0]        # same client compute, round 0
+    np.testing.assert_allclose(np.asarray(s_fast.params["w"]),
+                               np.asarray(s_slow.params["w"]),
+                               rtol=1e-5, atol=1e-6)

@@ -103,3 +103,25 @@ def test_close_unblocks_worker_stuck_on_full_queue():
 def test_depth_validation():
     with pytest.raises(ValueError, match="depth"):
         PrefetchIterator(iter([]), depth=0)
+
+
+def test_sharded_device_put_lands_on_target_sharding():
+    """PR 10: a ``sharding`` routes the worker-thread transfer straight
+    to the mesh placement, so the sharded round step never re-shards its
+    input (and ``device_put=False`` is overridden — a sharding IS a
+    placement request)."""
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.launch.mesh import make_federated_mesh
+
+    sh = NamedSharding(make_federated_mesh(1), PartitionSpec("clients"))
+    src = [{"x": np.arange(8, dtype=np.float32).reshape(4, 2),
+            "w": np.ones((4,), np.float32)}]
+    with PrefetchIterator(iter(src), device_put=False, sharding=sh) as it:
+        item = next(it)
+    for k, v in item.items():
+        assert isinstance(v, jax.Array), k
+        assert v.sharding.is_equivalent_to(sh, v.ndim), (k, v.sharding)
+        np.testing.assert_array_equal(np.asarray(v), src[0][k])

@@ -59,6 +59,12 @@ def _plan(name, K):
                                compression=CompressionConfig(kind="int4", packed=True)),
         "topk": FederatedPlan(clients_per_round=K,
                               compression=CompressionConfig(kind="topk")),
+        "int8ef": FederatedPlan(clients_per_round=K,
+                                compression=CompressionConfig(
+                                    kind="int8", error_feedback=True)),
+        "topkef": FederatedPlan(clients_per_round=K,
+                                compression=CompressionConfig(
+                                    kind="topk", error_feedback=True)),
         "async": FederatedPlan(clients_per_round=K, engine="async"),
     }[name]
 
@@ -88,7 +94,7 @@ def _assert_tree_close(a, b):
 
 # ------------------------------------------------- 1-device bit-for-bit
 
-VARIANTS = ["fp32", "int8", "int4p", "topk", "async"]
+VARIANTS = ["fp32", "int8", "int4p", "topk", "int8ef", "topkef", "async"]
 
 
 @pytest.mark.parametrize("name", VARIANTS)
@@ -121,7 +127,7 @@ needs_8 = pytest.mark.skipif(
 
 
 @needs_8
-@pytest.mark.parametrize("name", ["int8", "int4p", "async"])
+@pytest.mark.parametrize("name", ["int8", "int4p", "int8ef", "async"])
 def test_eight_device_code_paths_bitwise(name):
     """Across real shards the code-domain variants keep the SERVER
     STATE bitwise: pmax, int32 psum and the integer-valued n_k psum are

@@ -310,3 +310,107 @@ def test_sum_packed_codes_rejects_topk():
     cfg = CompressionConfig(kind="topk", topk_frac=0.05, packed=True)
     with pytest.raises(ValueError, match="code-domain"):
         sum_packed_codes(cfg, jnp.zeros((2, 3), jnp.float32), 3)
+
+
+# --------------------------------------------- in-kernel keyed PRNG (PR 10)
+# The fast-path client kernels draw their stochastic-rounding uniforms
+# from an in-kernel threefry hash of (key words, flat position) — the
+# field never exists in HBM. The contract is BIT-parity with streaming
+# jax.random.uniform(key, (n,)) in, which these tests pin on the jnp
+# oracle, the Pallas kernels (interpret), and the public dispatchers.
+
+
+@pytest.mark.parametrize("seed", [0, 42, 123456])
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 8, 512, 513, 4097])
+def test_threefry_uniform_oracle_bit_parity(seed, n):
+    key = jax.random.PRNGKey(seed)
+    mine = ref.threefry_uniform_ref(key, n)
+    theirs = jax.random.uniform(key, (n,))
+    np.testing.assert_array_equal(np.asarray(mine), np.asarray(theirs))
+
+
+def test_threefry_uniform_oracle_bit_parity_after_fold_in():
+    """The production keys are per-client/per-leaf fold_in derivations —
+    the oracle must track the full key-derivation chain."""
+    key = jax.random.PRNGKey(3)
+    for tag in (0, 1, 0x636D70, 917):
+        key = jax.random.fold_in(key, tag)
+        np.testing.assert_array_equal(
+            np.asarray(ref.threefry_uniform_ref(key, 257)),
+            np.asarray(jax.random.uniform(key, (257,))))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("n", [1, 64, 513, 1025, 2048])
+def test_keyed_quantize_bits_match_streamed_field(bits, n):
+    """quantize_with_scale_keyed == quantize_with_scale fed the streamed
+    uniform field, code for code — oracle path and Pallas kernel."""
+    rng = np.random.default_rng(n + bits)
+    x = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    key = jax.random.PRNGKey(100 + n)
+    levels = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / levels, 1e-8)
+    u = jax.random.uniform(key, (n,))
+    want = wire_pack.quantize_with_scale(x, scale, u, bits)
+    got = wire_pack.quantize_with_scale_keyed(x, scale, key, bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    got_k = wire_pack.quantize_with_scale_keyed_pallas(x, scale, key, bits,
+                                                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("n", [1, 65, 513, 2048])
+def test_keyed_pack_matches_streamed_pack(bits, n):
+    """The fused keyed pack kernels produce the byte-identical wire
+    buffer to the historical streamed-field quantize_pack."""
+    rng = np.random.default_rng(7 * n + bits)
+    x = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    key = jax.random.PRNGKey(n)
+    levels = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / levels, 1e-8)
+    u = jax.random.uniform(key, (n,))
+    want = wire_pack.quantize_pack(x, scale, u, bits)
+    got = wire_pack.quantize_pack_keyed(x, scale, key, bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if bits == 4:
+        got_k = wire_pack.quantize_pack4_keyed_pallas(x, scale, key,
+                                                      interpret=True)
+        np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want))
+
+
+# ------------------------------------------------- topk scatter-add (PR 10)
+
+
+@pytest.mark.parametrize("K,k,n", [(1, 1, 8), (3, 5, 64), (4, 16, 1000),
+                                   (2, 7, 4096)])
+def test_topk_scatter_add_matches_manual(K, k, n):
+    """Weighted payload scatter-add: duplicates accumulate, weights
+    scale per client — checked against a host-side loop, on the jnp
+    oracle and the segmented Pallas kernel."""
+    rng = np.random.default_rng(K * n + k)
+    vals = jnp.asarray(rng.normal(size=(K, k)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, (K, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, 5, (K,)), jnp.float32)
+    manual = np.zeros((n,), np.float64)
+    for ci in range(K):
+        for j in range(k):
+            manual[int(idx[ci, j])] += float(w[ci]) * float(vals[ci, j])
+    got = ref.topk_scatter_add_ref(vals, idx, w, n)
+    np.testing.assert_allclose(np.asarray(got), manual.astype(np.float32),
+                               rtol=1e-6, atol=1e-6)
+    flat = (w[:, None] * vals).reshape(-1)
+    got_k = wire_pack.topk_scatter_add_pallas(flat, idx.reshape(-1), n,
+                                              seg=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_k), manual.astype(np.float32),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_topk_scatter_add_dispatcher_zero_weight_cancels():
+    """A dropped client (weight 0) contributes nothing even though its
+    payload is present — the fast path's cohort-drop contract."""
+    vals = jnp.asarray([[5.0, 5.0], [1.0, 2.0]], jnp.float32)
+    idx = jnp.asarray([[0, 1], [1, 2]], jnp.int32)
+    w = jnp.asarray([0.0, 3.0], jnp.float32)
+    out = np.asarray(wire_pack.topk_scatter_add(vals, idx, w, 4))
+    np.testing.assert_allclose(out, [0.0, 3.0, 6.0, 0.0])
